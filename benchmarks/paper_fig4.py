@@ -1,0 +1,87 @@
+"""Paper Fig. 4 — generation latency/energy vs cache configuration.
+
+(a) latency & energy generating 8 tokens: {no cache, KV, GO, KVGO};
+(b) latency vs generated length 8..64 (KVGO grows linearly).
+Paper claims reproduced: 4.2x lat / 10.1x energy @8 (6.7x / 14.1x @64),
+KVGO vs KV-only 2.7x.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.pim.hermes import LLAMA_MOE_4_16
+from repro.pim.simulator import BASELINE, SimConfig, simulate
+from repro.pim.simulator import _phase_lin
+
+
+def _phase_cost(b, spec, kind):
+    pim_ns, pim_nj = _phase_lin(b, LLAMA_MOE_4_16, spec)
+    if kind == "lat":
+        return (pim_ns + b.dig_calls * spec.t_dig_call_ns
+                + b.dig_ops / spec.dig_ops_per_s * 1e9
+                + b.dram_bytes_crit / (spec.dram_gbps * 1e9) * 1e9)
+    return (pim_nj + b.dig_ops * spec.dig_j_per_op * 1e9
+            + b.dram_bytes * spec.dram_j_per_byte * 1e9)
+
+
+def run(spec=None) -> dict:
+    from repro.pim.hermes import HERMES
+    spec = spec or HERMES
+    variants = {
+        "none": {},
+        "KV": {"kv_cache": True},
+        "GO": {"go_cache": True},
+        "KVGO": {"kv_cache": True, "go_cache": True},
+    }
+    out = {"fig4a": {}, "fig4b": {}}
+    for name, kw in variants.items():
+        r = simulate(dataclasses.replace(BASELINE, gen=8, **kw), spec=spec)
+        g = r.buckets.phase["generate"]
+        out["fig4a"][name] = {
+            "gen_latency_ns": _phase_cost(g, spec, "lat"),
+            "gen_energy_nj": _phase_cost(g, spec, "en"),
+            "total_latency_ns": r.latency_ns,
+            "total_energy_nj": r.energy_nj,
+        }
+    base8 = out["fig4a"]["none"]
+    kvgo8 = out["fig4a"]["KVGO"]
+    kv8 = out["fig4a"]["KV"]
+    out["claims"] = {
+        "lat_x_vs_none@8": base8["gen_latency_ns"] / kvgo8["gen_latency_ns"],
+        "en_x_vs_none@8": base8["gen_energy_nj"] / kvgo8["gen_energy_nj"],
+        "lat_x_vs_kv@8": kv8["gen_latency_ns"] / kvgo8["gen_latency_ns"],
+        "paper": {"lat@8": 4.2, "en@8": 10.1, "vs_kv@8": 2.7,
+                  "lat@64": 6.7, "en@64": 14.1},
+    }
+    for gen in (8, 16, 32, 64):
+        b = simulate(dataclasses.replace(BASELINE, gen=gen), spec=spec)
+        k = simulate(dataclasses.replace(BASELINE, kv_cache=True,
+                                         go_cache=True, gen=gen), spec=spec)
+        bg, kg = b.buckets.phase["generate"], k.buckets.phase["generate"]
+        out["fig4b"][gen] = {
+            "none_ns": _phase_cost(bg, spec, "lat"),
+            "kvgo_ns": _phase_cost(kg, spec, "lat"),
+            "lat_x": _phase_cost(bg, spec, "lat") / _phase_cost(kg, spec, "lat"),
+            "en_x": _phase_cost(bg, spec, "en") / _phase_cost(kg, spec, "en"),
+        }
+    return out
+
+
+def main():
+    out = run()
+    print("== Fig4(a): generation phase, 8 tokens ==")
+    for k, v in out["fig4a"].items():
+        print(f"  {k:5s} lat={v['gen_latency_ns']:12,.0f} ns  "
+              f"en={v['gen_energy_nj']:12,.0f} nJ")
+    c = out["claims"]
+    print(f"  KVGO vs none: x{c['lat_x_vs_none@8']:.1f} lat (paper 4.2), "
+          f"x{c['en_x_vs_none@8']:.1f} en (paper 10.1); "
+          f"vs KV x{c['lat_x_vs_kv@8']:.1f} (paper 2.7)")
+    print("== Fig4(b): latency vs length ==")
+    for g, v in out["fig4b"].items():
+        print(f"  gen={g:3d} none={v['none_ns']:12,.0f}  "
+              f"kvgo={v['kvgo_ns']:11,.0f}  x{v['lat_x']:.1f} lat  x{v['en_x']:.1f} en")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table I — total latency / energy / performance density.
+
+Columns: baseline (no cache, no schedule), S2O+KVGO, S4O+KVGO. Two anchors
+(baseline & S2O totals) calibrate the non-PIM constants; S4O is a genuine
+prediction of the simulator.
+"""
+from __future__ import annotations
+
+from repro.pim.hermes import HERMES
+from repro.pim.simulator import BASELINE, S2O_KVGO, S4O_KVGO, simulate
+
+PAPER = {
+    "baseline": (2_297_724, 5_393_776, 10.2),
+    "S2O+KVGO": (717_752, 1_096_691, 12.3),
+    "S4O+KVGO": (743_078, 1_100_548, 15.6),
+}
+
+
+def run(spec=None) -> dict:
+    spec = spec or HERMES
+    out = {}
+    for name, cfg in [("baseline", BASELINE), ("S2O+KVGO", S2O_KVGO),
+                      ("S4O+KVGO", S4O_KVGO)]:
+        r = simulate(cfg, spec=spec)
+        p = PAPER[name]
+        out[name] = {
+            "latency_ns": r.latency_ns, "energy_nj": r.energy_nj,
+            "density": r.density,
+            "paper_latency_ns": p[0], "paper_energy_nj": p[1],
+            "paper_density": p[2],
+            "latency_ratio": r.latency_ns / p[0],
+            "energy_ratio": r.energy_nj / p[1],
+        }
+    return out
+
+
+def main():
+    out = run()
+    print("== Table I: total latency / energy / density ==")
+    print(f"{'config':10s} {'lat_ns':>12s} {'paper':>12s} {'en_nJ':>12s} "
+          f"{'paper':>12s} {'dens':>6s} {'paper':>6s}")
+    for name, v in out.items():
+        print(f"{name:10s} {v['latency_ns']:12,.0f} {v['paper_latency_ns']:12,} "
+              f"{v['energy_nj']:12,.0f} {v['paper_energy_nj']:12,} "
+              f"{v['density']:6.1f} {v['paper_density']:6.1f}")
+    print("note: baseline & S2O totals are calibration anchors; S4O and all "
+          "Fig4/Fig5 numbers are simulator predictions.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+artifacts produced by repro.launch.dryrun."""
+from __future__ import annotations
+
+from benchmarks.roofline import load_all
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = load_all(mesh)
+    out = [f"| arch | shape | flops/dev | bytes/dev | coll MiB/dev | "
+           f"temp GiB (tpu-corr) | args GiB | compile s |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['flops_per_device']:.3e} "
+            f"| {r['bytes_per_device']:.3e} "
+            f"| {r['collective_bytes_per_device']['total']/2**20:,.0f} "
+            f"| {m['temp_bytes']/2**30:.2f} ({m['temp_bytes_tpu_corrected']/2**30:.2f}) "
+            f"| {m['argument_bytes']/2**30:.2f} "
+            f"| {r['compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh: str = "1pod") -> str:
+    rows = load_all(mesh)
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL/HLO flops | MFU bound |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} "
+            f"| {rf['memory_s']:.4f} | {rf['collective_s']:.4f} "
+            f"| **{rf['dominant'][:-2]}** | {rf['useful_ratio']:.3f} "
+            f"| {rf['mfu_upper_bound']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    for mesh in ("1pod", "2pod"):
+        print(f"### Dry-run — {mesh}\n")
+        print(dryrun_table(mesh))
+        print()
+    print("### Roofline (single-pod)\n")
+    print(roofline_table("1pod"))
+
+
+if __name__ == "__main__":
+    main()

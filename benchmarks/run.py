@@ -1,0 +1,83 @@
+"""Benchmark harness — one entry per paper artifact + the roofline table.
+
+``PYTHONPATH=src python -m benchmarks.run`` prints, per benchmark, a
+``name,us_per_call,derived`` CSV row (wall time of the benchmark itself plus
+its headline derived metric), then the detailed tables.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _timed(name, fn):
+    t0 = time.perf_counter()
+    out = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    return name, us, out
+
+
+def main() -> None:
+    from benchmarks import paper_fig4, paper_fig5, paper_table1, roofline
+
+    rows = []
+
+    name, us, fig4 = _timed("paper_fig4_cache", paper_fig4.run)
+    rows.append((name, us,
+                 f"kvgo_lat_x8={fig4['claims']['lat_x_vs_none@8']:.2f}"))
+
+    name, us, fig5 = _timed("paper_fig5_sched", paper_fig5.run)
+    best = max(v["eff_x"] for k, v in fig5.items() if k != "baseline")
+    rows.append((name, us, f"best_area_eff_x={best:.2f}"))
+
+    name, us, t1 = _timed("paper_table1_total", paper_table1.run)
+    rows.append((name, us,
+                 f"s4o_density={t1['S4O+KVGO']['density']:.1f}GOPS/W/mm2"))
+
+    def _roof():
+        return roofline.load_all()
+    name, us, roof = _timed("roofline_table", _roof)
+    if roof:
+        worst = min(r["roofline"]["mfu_upper_bound"] for r in roof)
+        rows.append((name, us, f"cells={len(roof)},min_mfu_bound={worst:.3f}"))
+    else:
+        rows.append((name, us, "cells=0 (run repro.launch.dryrun first)"))
+
+    # kernel micro-benchmarks (interpret mode on CPU: correctness-path timing)
+    def _kern():
+        import jax, jax.numpy as jnp
+        from repro.kernels.ops import moe_ffn_pallas
+        from repro.core.routing import token_choice
+        key = jax.random.PRNGKey(0)
+        T, d, f, E, k = 256, 256, 512, 8, 2
+        x = jax.random.normal(key, (T, d), jnp.float32) * 0.1
+        bank = {"wg": jax.random.normal(key, (E, d, f)) * 0.05,
+                "wi": jax.random.normal(key, (E, d, f)) * 0.05,
+                "wo": jax.random.normal(key, (E, f, d)) * 0.05}
+        gate = jax.random.normal(key, (d, E)) * 0.1
+        r = token_choice(x, gate, k)
+        y = moe_ffn_pallas(x, r.expert_idx, r.weights, bank, E, bn=64)
+        y.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            moe_ffn_pallas(x, r.expert_idx, r.weights, bank, E,
+                           bn=64).block_until_ready()
+        return (time.perf_counter() - t0) / 3 * 1e6
+    name, us, per_call = _timed("kernel_moe_gmm_interpret", _kern)
+    rows.append((name, us, f"us_per_call={per_call:.0f}"))
+
+    print("name,us_per_call,derived")
+    for n, u, d in rows:
+        print(f"{n},{u:.0f},{d}")
+    print()
+
+    paper_fig4.main()
+    print()
+    paper_fig5.main()
+    print()
+    paper_table1.main()
+    print()
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

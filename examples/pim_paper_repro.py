@@ -1,0 +1,18 @@
+"""Reproduce the paper's headline numbers end-to-end with the calibrated
+operator-level PIM simulator (C5): Fig. 4, Fig. 5 and Table I in one run.
+
+  PYTHONPATH=src python examples/pim_paper_repro.py
+"""
+from benchmarks import paper_fig4, paper_fig5, paper_table1
+
+
+def main():
+    paper_table1.main()
+    print()
+    paper_fig4.main()
+    print()
+    paper_fig5.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: the paper's full technique stack on a small expert-choice MoE.
+
+  1. build a Llama-MoE-style model (expert-choice routing, grouped experts);
+  2. trace a workload and derive the C2 load-aware grouping;
+  3. prefill -> GO-cache decode (C4), showing the O(1) state;
+  4. run the PIM simulator (C5) for the same configuration.
+
+Runs on CPU in ~a minute:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.grouping import group_loads, imbalance, sorted_grouping, trace_workload
+from repro.launch.serve import generate
+from repro.models.model import model_init
+from repro.pim.simulator import S2O_KVGO, SimConfig, simulate
+
+# 1. model --------------------------------------------------------------
+cfg = get_config("llama_moe_4_16", smoke=True)
+key = jax.random.PRNGKey(0)
+params = model_init(key, cfg)
+e = cfg.moe
+print(f"model: {cfg.name}  E={e.num_experts} top-{e.top_k} "
+      f"routing={e.routing} group_size={e.group_size}")
+
+# 2. C2 grouping from a traced workload ---------------------------------
+prompts = jax.random.randint(key, (4, 24), 0, cfg.vocab_size, dtype=jnp.int32)
+x = params["embed"][prompts.reshape(-1)]
+# trace through the first layer's gate
+gate0 = jax.tree.map(lambda a: a[0], params["layers"])["moe"]["gate"]
+scores = x.astype(jnp.float32) @ gate0
+choices = np.zeros((x.shape[0], e.num_experts), bool)
+top = np.asarray(jax.lax.top_k(scores, e.top_k)[1])
+for t in range(x.shape[0]):
+    choices[t, top[t]] = True
+loads = trace_workload(choices, e.num_experts)
+groups = sorted_grouping(loads, e.group_size)
+print(f"traced loads: {loads.astype(int)}  "
+      f"imbalance before {imbalance(loads):.2f} -> grouped "
+      f"{imbalance(group_loads(loads, groups)):.2f}")
+
+# 3. GO-cache generation -------------------------------------------------
+res = generate(params, cfg, prompts, gen_tokens=12)
+go = res["state"]["go"]
+print(f"generated {res['tokens'].shape[1]} tokens/seq at "
+      f"{res['tok_per_s']:.1f} tok/s; GO cache is static: "
+      f"scores{tuple(go.scores.shape)} outputs{tuple(go.outputs.shape)}")
+
+# 4. PIM simulation of the same stack ------------------------------------
+base = simulate(SimConfig())
+ours = simulate(S2O_KVGO)
+print(f"PIM sim: baseline {base.latency_ns:,.0f} ns / {base.energy_nj:,.0f} nJ"
+      f"  ->  S2O+KVGO {ours.latency_ns:,.0f} ns / {ours.energy_nj:,.0f} nJ"
+      f"  ({base.latency_ns/ours.latency_ns:.1f}x / "
+      f"{base.energy_nj/ours.energy_nj:.1f}x)")

@@ -1,0 +1,133 @@
+"""Sharded checkpointing with atomic commit, async writer, and step recovery.
+
+Layout:  <dir>/step_<N>/
+            manifest.json         tree structure, shapes, dtypes, shard map
+            arr_<i>.npy           one file per leaf (host-gathered)
+            COMMITTED             empty marker written LAST (atomic commit)
+
+Fault-tolerance contract:
+  * a crash mid-write leaves no COMMITTED marker -> restore() ignores it;
+  * latest_step() returns the newest committed step;
+  * the async writer snapshots leaves to host memory synchronously (cheap)
+    and writes files on a background thread, so the train loop never blocks
+    on disk; `wait()` joins before the next save or process exit.
+  * restore() device_puts each leaf with the target sharding, so a restored
+    run continues under a DIFFERENT mesh shape (elastic restart).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(directory: str, step: int, tree: Any, *, async_: bool = False,
+         keep: int = 3) -> "Writer | None":
+    """Checkpoint `tree` at `step`. Returns a Writer handle if async_."""
+    leaves, treedef = _leaf_paths(tree)
+    host = [np.asarray(jax.device_get(x)) if x is not None else None
+            for x in leaves]
+    w = Writer(directory, step, host, treedef, keep)
+    if async_:
+        w.start()
+        return w
+    w.run()
+    return None
+
+
+class Writer:
+    def __init__(self, directory, step, host_leaves, treedef, keep):
+        self.dir = directory
+        self.step = step
+        self.leaves = host_leaves
+        self.treedef = treedef
+        self.keep = keep
+        self._t = None
+
+    def start(self):
+        self._t = threading.Thread(target=self.run, daemon=True)
+        self._t.start()
+
+    def wait(self):
+        if self._t is not None:
+            self._t.join()
+
+    def run(self):
+        d = os.path.join(self.dir, f"step_{self.step:08d}")
+        tmp = d + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": self.step, "leaves": []}
+        for i, leaf in enumerate(self.leaves):
+            if leaf is None:
+                manifest["leaves"].append(None)
+                continue
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), leaf)
+            manifest["leaves"].append(
+                {"file": f"arr_{i}.npy", "shape": list(leaf.shape),
+                 "dtype": str(leaf.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "COMMITTED"), "w"):
+            pass
+        shutil.rmtree(d, ignore_errors=True)
+        os.replace(tmp, d)
+        self._gc()
+
+    def _gc(self):
+        steps = committed_steps(self.dir)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+
+def committed_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "COMMITTED")):
+                out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = committed_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, like: Any, *, shardings: Any = None) -> Any:
+    """Restore into the structure of `like` (shapes/dtypes validated).
+    `shardings`: optional matching pytree of NamedSharding — leaves are placed
+    directly to their target shards (elastic-safe)."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    assert os.path.exists(os.path.join(d, "COMMITTED")), f"no committed ckpt at {d}"
+    leaves, treedef = _leaf_paths(like)
+    shard_leaves = (treedef.flatten_up_to(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    out = []
+    for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+        meta = manifest["leaves"][i]
+        if meta is None or ref is None:
+            out.append(None)
+            continue
+        arr = np.load(os.path.join(d, meta["file"]))
+        assert tuple(arr.shape) == tuple(ref.shape), \
+            f"leaf {i}: ckpt {arr.shape} != model {ref.shape}"
+        arr = arr.astype(ref.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else
+                   jax.numpy.asarray(arr))
+    return treedef.unflatten(out)

@@ -1,0 +1,169 @@
+"""Config system: every architecture is a ModelConfig; shapes are ShapeConfig.
+
+Configs are plain dataclasses (no framework deps) so the launcher, tests and
+benchmarks can construct them without touching jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts layer configuration (the paper's target module)."""
+
+    num_experts: int
+    top_k: int
+    d_expert: int                     # hidden width of each expert FFN
+    num_shared_experts: int = 0       # deepseek-style always-on experts
+    routing: str = "token_choice"     # "token_choice" | "expert_choice"
+    # --- paper technique knobs (C1-C3) ---
+    group_size: int = 1               # crossbar-multiplexing analogue: experts per shared lane
+    grouping: str = "sorted"          # "uniform" | "sorted" (load-aware, C2)
+    capacity_factor: float = 1.25     # token-choice expert capacity
+    balance_coef: float = 0.01        # aux balance-loss coefficient (training)
+    use_grouped_gemm: bool = True     # group-multiplexed execution path (C1)
+    # --- C4 ---
+    go_cache: bool = True             # gate-output cache for expert-choice decode
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A single architecture. All assigned archs reduce to this one schema."""
+
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    block: str = "attn"               # attn | xlstm | mamba2
+    moe: Optional[MoEConfig] = None
+
+    # attention details
+    qkv_bias: bool = False            # qwen2
+    rope_theta: float = 10000.0
+    sliding_window: int = 0           # >0 enables local attention layers
+    local_global_ratio: int = 0       # gemma3: N local layers per 1 global
+    logit_softcap: float = 0.0
+
+    # ssm / hybrid details
+    ssm_state: int = 0                # mamba2 state size (zamba2: 64)
+    ssm_chunk: int = 128              # SSD chunk length
+    attn_every: int = 0               # zamba2: shared attention block every N layers
+    slstm_every: int = 0              # xlstm: one sLSTM block every N layers
+    conv_width: int = 4               # mamba2 short conv
+
+    # multimodal / enc-dec details
+    cross_attn_every: int = 0         # llama-vision: cross-attn layer cadence
+    num_image_tokens: int = 0         # stub patch-embedding count
+    encoder_layers: int = 0           # whisper: >0 -> encoder-decoder
+    num_audio_frames: int = 0         # stub frame-embedding count
+
+    # numerics
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+
+    # training-time knobs (used by launch/train.py and the dry-run)
+    remat: bool = True
+    scan_layers: bool = True
+    seq_shard_activations: bool = True   # SP on the residual stream
+    sp_attn: bool = False    # sequence-parallel attention fallback (forward-
+                             # only paths; for head counts that don't divide
+                             # the model axis — a §Perf hillclimb knob)
+
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS in the roofline)."""
+        d, hd = self.d_model, self.resolved_head_dim()
+        nq, nkv = self.num_heads, self.num_kv_heads
+        attn = d * hd * nq + 2 * d * hd * nkv + hd * nq * d
+        if self.block == "attn":
+            mix = attn
+        elif self.block == "xlstm":
+            # mLSTM block: up(2x) + q/k/v (on 2d inner) + gates + down
+            di = 2 * d
+            mix = d * di * 2 + 3 * di * di // max(1, nq) * nq // max(1, nq) + di * d
+            mix = d * di * 2 + 3 * di * hd * nq // max(nq, 1) + di * d  # approx
+            mix = 2 * d * di + 3 * di * di + di * d
+        elif self.block == "mamba2":
+            di = 2 * d
+            mix = d * (2 * di + 2 * self.ssm_state) + di * d
+        else:
+            raise ValueError(self.block)
+        if self.moe is not None:
+            e = self.moe
+            ffn = (e.num_experts + e.num_shared_experts) * 3 * d * e.d_expert
+            ffn += d * e.num_experts  # gate
+        elif self.d_ff > 0:
+            ffn = 3 * d * self.d_ff  # gated SwiGLU
+        else:
+            ffn = 0
+        layers = self.num_layers * (mix + ffn)
+        if self.attn_every:
+            layers += attn  # zamba2 shared attention block params
+        if self.cross_attn_every:
+            n_x = self.num_layers // self.cross_attn_every
+            layers += n_x * (attn + 3 * d * self.d_ff)
+        if self.encoder_layers:
+            layers += self.encoder_layers * (attn + 2 * d * self.d_ff)
+            layers += self.num_layers * attn  # decoder cross-attn
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return layers + emb
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE uses top-k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        d = self.d_model
+        full_ffn = self.num_layers * (e.num_experts + e.num_shared_experts) * 3 * d * e.d_expert
+        act_ffn = self.num_layers * (e.top_k + e.num_shared_experts) * 3 * d * e.d_expert
+        return self.param_count() - full_ffn + act_ffn
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell (assigned per architecture)."""
+
+    name: str                         # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                         # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """End-to-end training-run knobs for launch/train.py."""
+
+    steps: int = 100
+    seq_len: int = 512
+    global_batch: int = 8
+    lr: float = 3e-4
+    warmup_steps: int = 20
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    seed: int = 0
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    log_every: int = 10
+    microbatch: int = 0               # >0 enables gradient accumulation

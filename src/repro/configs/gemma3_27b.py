@@ -1,0 +1,36 @@
+"""gemma3-27b — 5:1 local:global attention, 128k context [hf:google/gemma-3].
+
+62 layers in repeating (5 local sliding-window 1024, 1 global) pattern.
+head_dim fixed at 128 (not d_model / num_heads).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    d_ff=21504,
+    vocab_size=262144,
+    head_dim=128,
+    sliding_window=1024,
+    local_global_ratio=5,
+    rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="gemma3-smoke",
+    family="dense",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    head_dim=16,
+    sliding_window=16,
+    local_global_ratio=2,
+    dtype="float32",
+)

@@ -1,0 +1,135 @@
+"""C4 — the gate-output (GO) cache for expert-choice routing during
+autoregressive generation (paper §III.C, eq. 4-5).
+
+Problem: expert-choice routing lets each expert pick its top-k tokens over the
+WHOLE sequence, so a naive decoder must re-run the gate (and potentially the
+experts) over all retained hidden states at every step. The GO cache stores:
+
+  scores    [B, E, k]      cached top-k gate affinities per expert (S_prev)
+  token_ids [B, E, k]      which absolute token each slot holds
+  outputs   [B, E, k, d]   cached weighted expert outputs G[t,e] * E_e(x_t)
+                           (static size — does NOT grow with sequence length)
+
+Each decode step processes ONLY the incoming token: one gate row, a
+TopKUpdate against the cached mins, and expert FFNs only for the experts that
+actually selected the token (at most one slot changes per expert per step).
+The cache lives in HBM next to the KV cache and is sharded the same way.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.routing import topk_update
+
+
+class GOCache(NamedTuple):
+    scores: jax.Array       # [B, E, k] fp32
+    token_ids: jax.Array    # [B, E, k] int32
+    outputs: jax.Array      # [B, E, k, d]  (cfg dtype)
+
+
+def go_cache_init(batch: int, num_experts: int, k: int, d: int, dtype) -> GOCache:
+    return GOCache(
+        scores=jnp.full((batch, num_experts, k), -jnp.inf, jnp.float32),
+        token_ids=jnp.full((batch, num_experts, k), -1, jnp.int32),
+        outputs=jnp.zeros((batch, num_experts, k, d), dtype),
+    )
+
+
+def go_cache_prefill(
+    scores: jax.Array,       # [B, T, E] gate affinities (softmax over E)
+    token_ids: jax.Array,    # [T] absolute positions
+    expert_outputs: jax.Array,  # [B, E, C, d] weighted outputs for chosen tokens
+    chosen_tokens: jax.Array,   # [B, E, C] token ids chosen per expert
+    chosen_scores: jax.Array,   # [B, E, C] their affinities
+    k: int,
+) -> GOCache:
+    """Build the cache from a prefill pass. C (expert-choice capacity) may
+    exceed k; we keep each expert's k best."""
+    top_s, top_slot = jax.lax.top_k(chosen_scores, k)            # [B, E, k]
+    tok = jnp.take_along_axis(chosen_tokens, top_slot, axis=-1)
+    out = jnp.take_along_axis(
+        expert_outputs, top_slot[..., None], axis=2)             # [B, E, k, d]
+    del scores, token_ids
+    return GOCache(top_s.astype(jnp.float32), tok.astype(jnp.int32), out)
+
+
+class GOStepResult(NamedTuple):
+    y: jax.Array            # [B, d] MoE output for the incoming token
+    cache: GOCache
+    selected: jax.Array     # [B, E] bool — which experts took the token
+    flops_active: jax.Array # [B] number of expert FFNs actually needed
+
+
+def go_cache_step(
+    cache: GOCache,
+    x_t: jax.Array,          # [B, d] incoming token hidden state
+    token_id,                # scalar int32 absolute position
+    gate_w: jax.Array,       # [d, E]
+    expert_fn,               # (x [B, d]) -> [B, E, d] all-expert outputs
+    *,
+    retain_outputs: bool = True,
+) -> GOStepResult:
+    """One decode step under expert-choice routing with the GO cache.
+
+    eq. (4): G(x) = softmax(TopKUpdate(S_prev, x W_G, k)) — realized as the
+    per-expert cached-min comparison; the incoming token's combine weight is
+    its softmax affinity, and only selecting experts contribute.
+
+    `expert_fn` computes per-expert FFN outputs for the single token. On the
+    multiplexed grouped-GEMM path only the selected experts' tiles are
+    streamed; the dense fallback computes all E and masks (correct either
+    way — `selected` carries the mask).
+    """
+    B, E, k = cache.scores.shape
+    s_raw = x_t.astype(jnp.float32) @ gate_w.astype(jnp.float32)   # [B, E]
+    g = jax.nn.softmax(s_raw, axis=-1)
+
+    upd = jax.vmap(lambda sp, tp, sn: topk_update(sp, tp, sn, token_id))(
+        cache.scores, cache.token_ids, g)
+    selected = upd.selected                                        # [B, E]
+
+    eo = expert_fn(x_t)                                            # [B, E, d]
+    contrib = g[..., None] * eo.astype(jnp.float32)                # [B, E, d]
+    y = jnp.where(selected[..., None], contrib, 0.0).sum(axis=1)
+
+    if retain_outputs:
+        onehot = jax.nn.one_hot(upd.slot, k, dtype=bool)           # [B, E, k]
+        write = selected[..., None] & onehot
+        new_out = jnp.where(
+            write[..., None], contrib[:, :, None, :].astype(cache.outputs.dtype),
+            cache.outputs)
+    else:
+        new_out = cache.outputs
+
+    new_cache = GOCache(upd.new_scores, upd.new_token_ids, new_out)
+    return GOStepResult(
+        y.astype(x_t.dtype), new_cache, selected,
+        selected.sum(axis=-1).astype(jnp.int32))
+
+
+def go_cache_bytes(batch: int, num_experts: int, k: int, d: int,
+                   out_bytes: int = 2) -> int:
+    """Static cache footprint (paper: 'k x #experts x d ... will not grow
+    with token length'; score adds 32B/token-step in their DRAM layout)."""
+    scores = batch * num_experts * k * 4
+    toks = batch * num_experts * k * 4
+    outs = batch * num_experts * k * d * out_bytes
+    return scores + toks + outs
+
+
+def naive_expert_choice_step_flops(seq_len: int, num_experts: int, capacity_frac: float,
+                                   d: int, d_ff: int) -> int:
+    """Cost of a decode step WITHOUT the GO cache: the gate + experts re-run
+    over all retained hidden states (the inefficiency the paper removes)."""
+    gate = seq_len * d * num_experts
+    experts = int(seq_len * capacity_frac) * num_experts * 3 * d * d_ff
+    return 2 * (gate + experts)
+
+
+def go_step_flops(num_selected: int, d: int, d_ff: int, num_experts: int) -> int:
+    """Cost WITH the GO cache: one gate row + selected experts only."""
+    return 2 * (d * num_experts + num_selected * 3 * d * d_ff)

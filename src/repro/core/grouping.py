@@ -1,0 +1,108 @@
+"""C2 — static load-aware expert grouping (deployment-time, host-side numpy).
+
+Two roles, mirroring the paper:
+  1. multiplexing groups: which experts share one peripheral set (PIM) /
+     one grouped-GEMM lane + VMEM staging buffer (TPU);
+  2. EP-shard placement: which experts co-locate on one expert-parallel
+     shard so each shard's aggregate load is balanced (straggler mitigation).
+
+`sorted_grouping` is the paper's workload-sorted heuristic: experts are sorted
+by traced load and folded so lightest pairs with heaviest (boustrophedon fill
+for group size > 2), making group sums statistically equal. `uniform_grouping`
+is the random baseline. All run before deployment on a small traced sample.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def trace_workload(choices: np.ndarray, num_experts: int) -> np.ndarray:
+    """choices [T, k] (token-choice) or boolean [T, E] -> load per expert."""
+    if choices.ndim == 2 and choices.shape[1] == num_experts and choices.dtype == bool:
+        return choices.sum(axis=0).astype(np.float64)
+    counts = np.zeros(num_experts, np.float64)
+    np.add.at(counts, choices.reshape(-1), 1.0)
+    return counts
+
+
+def uniform_grouping(num_experts: int, group_size: int, seed: int = 0) -> np.ndarray:
+    """Random assignment -> groups [G, g] of expert ids (paper baseline 'U')."""
+    assert num_experts % group_size == 0
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(num_experts)
+    return perm.reshape(-1, group_size)
+
+
+def sorted_grouping(loads: np.ndarray, group_size: int) -> np.ndarray:
+    """Paper's workload-sorted grouping ('S'): sort by load, fold so each group
+    mixes light and heavy experts. For g=2 this is exactly the paper's
+    lightest-with-heaviest pairing."""
+    E = len(loads)
+    assert E % group_size == 0
+    G = E // group_size
+    order = np.argsort(loads)                 # light -> heavy
+    groups = np.empty((G, group_size), np.int64)
+    for col in range(group_size):
+        block = order[col * G:(col + 1) * G]
+        if col % 2 == 1:
+            block = block[::-1]               # boustrophedon fold
+        groups[:, col] = block
+    return groups
+
+
+def group_loads(loads: np.ndarray, groups: np.ndarray) -> np.ndarray:
+    return loads[groups].sum(axis=1)
+
+
+def imbalance(loads: np.ndarray) -> float:
+    """max/mean load ratio — 1.0 is perfectly balanced."""
+    m = loads.mean()
+    return float(loads.max() / m) if m > 0 else 1.0
+
+
+def shard_placement(loads: np.ndarray, num_shards: int) -> np.ndarray:
+    """EP placement: permutation of expert ids such that contiguous blocks of
+    size E/num_shards (what NamedSharding slices) have balanced total load.
+    Uses the same fold heuristic; returns perm [E] (expert id for each slot)."""
+    E = len(loads)
+    assert E % num_shards == 0
+    per = E // num_shards
+    # build shards as 'groups' of size `per`, then flatten shard-major
+    shards = sorted_grouping(loads, per) if per > 1 else \
+        np.argsort(loads)[:, None]
+    # greedy refine: rebalance by LPT over shard sums
+    return shards.reshape(-1)
+
+
+def group_of_expert_from_groups(groups: np.ndarray) -> np.ndarray:
+    """groups [G, g] expert ids -> [E] group id per expert."""
+    E = groups.size
+    out = np.empty(E, np.int32)
+    for gid, members in enumerate(groups):
+        out[members] = gid
+    return out
+
+
+def default_groups(e) -> np.ndarray:
+    """Deployment-time groups for an MoEConfig `e` (pre-trace: uniform seed 0;
+    'sorted' uses a synthetic skewed load trace as stand-in until real traces
+    are supplied via `sorted_grouping`)."""
+    if e.group_size <= 1:
+        return np.arange(e.num_experts)[:, None]
+    if e.grouping == "uniform":
+        return uniform_grouping(e.num_experts, e.group_size, seed=0)
+    rng = np.random.default_rng(0)
+    loads = rng.zipf(1.5, size=e.num_experts).astype(np.float64)
+    return sorted_grouping(loads, e.group_size)
+
+
+def apply_expert_permutation(params_experts: dict, perm: np.ndarray) -> dict:
+    """Reorder stacked expert weights [E, ...] by perm (host-side, before
+    device_put). Routing indices must be mapped with `inverse_permutation`."""
+    return {k: v[perm] for k, v in params_experts.items()}
+
+
+def inverse_permutation(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    return inv

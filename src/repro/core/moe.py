@@ -1,0 +1,368 @@
+"""MoE layer: the paper's techniques as first-class JAX features.
+
+Execution paths (all numerically validated against `dense_forward`):
+
+  dense_forward      reference oracle: every expert over every token, masked.
+  dispatch_forward   production path (train/prefill): sort-based capacity
+                     dispatch (megablocks-style), batched expert GEMM, combine.
+                     Expert dim is EP-sharded; the C2 load-aware permutation is
+                     applied to the expert axis at deployment so each EP shard
+                     carries balanced aggregate load.
+  group_forward      C1 group-multiplexed XLA path: experts share a group lane
+                     with POOLED capacity (the TPU analogue of shared
+                     peripherals: padding amortized at group granularity).
+                     The zero-redundancy version of this path is the Pallas
+                     kernel `kernels/moe_gmm`; the XLA version masks over the
+                     g members (correct, used for validation + CPU).
+  expert-choice      routing where experts pick tokens (Zhou et al.); decode
+                     uses the GO cache (core/go_cache.py) instead of this.
+
+Aux outputs carry load statistics for the balance loss and for the C2
+workload tracer.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core import routing as R
+from repro.models.layers import dense_init, split
+
+
+# ----------------------------------------------------------------------- init
+
+def moe_init(key, d_model: int, e: MoEConfig, dtype) -> dict:
+    ks = split(key, 7)
+    E, de = e.num_experts, e.d_expert
+
+    def bank(k1, k2, k3, n):
+        kk1 = jax.random.split(k1, n)
+        kk2 = jax.random.split(k2, n)
+        kk3 = jax.random.split(k3, n)
+        return {
+            "wi": jax.vmap(lambda k: dense_init(k, d_model, de, dtype))(kk1),
+            "wg": jax.vmap(lambda k: dense_init(k, d_model, de, dtype))(kk2),
+            "wo": jax.vmap(lambda k: dense_init(k, de, d_model, dtype))(kk3),
+        }
+
+    p = {
+        "gate": dense_init(ks[0], d_model, E, jnp.float32),
+        "experts": bank(ks[1], ks[2], ks[3], E),
+    }
+    if e.num_shared_experts:
+        p["shared"] = bank(ks[4], ks[5], ks[6], e.num_shared_experts)
+    return p
+
+
+def _expert_gemm(bank: dict, x: jax.Array) -> jax.Array:
+    """x [E, C, d] -> [E, C, d] through each expert's SwiGLU FFN."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, bank["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", x, bank["wi"])
+    return jnp.einsum("ecf,efd->ecd", h, bank["wo"])
+
+
+def _shared_out(params: dict, x: jax.Array) -> jax.Array:
+    """Always-on shared experts (deepseek-style). x [T, d]."""
+    if "shared" not in params:
+        return jnp.zeros_like(x)
+    sh = params["shared"]
+    h = jax.nn.silu(jnp.einsum("td,sdf->stf", x, sh["wg"])) * jnp.einsum(
+        "td,sdf->stf", x, sh["wi"])
+    return jnp.einsum("stf,sfd->td", h, sh["wo"]).astype(x.dtype)
+
+
+def expert_ffn_all(params: dict, x: jax.Array) -> jax.Array:
+    """All-expert outputs for a token batch. x [B, d] -> [B, E, d].
+    Used by the GO-cache decode step (dense fallback) and the oracle."""
+    b = params["experts"]
+    h = jax.nn.silu(jnp.einsum("td,edf->etf", x, b["wg"])) * jnp.einsum(
+        "td,edf->etf", x, b["wi"])
+    return jnp.einsum("etf,efd->ted", h, b["wo"])
+
+
+# --------------------------------------------------------------------- oracle
+
+def dense_forward(params: dict, x: jax.Array, e: MoEConfig) -> jax.Array:
+    """Reference: [T, d] -> [T, d], token-choice or expert-choice, no capacity
+    limits (expert-choice uses exact top-C over the full batch)."""
+    T = x.shape[0]
+    eo = expert_ffn_all(params, x)                       # [T, E, d]
+    if e.routing == "token_choice":
+        r = R.token_choice(x, params["gate"], e.top_k)
+        mask = jnp.zeros((T, e.num_experts), jnp.float32)
+        mask = jax.vmap(lambda m, i, w: m.at[i].add(w))(mask, r.expert_idx, r.weights)
+    else:
+        cap = ec_capacity(T, e)
+        r = R.expert_choice(x, params["gate"], cap)
+        mask = jnp.zeros((e.num_experts, T), jnp.float32)
+        mask = jax.vmap(lambda m, i, w: m.at[i].add(w))(
+            mask, r.token_idx, r.weights)
+        mask = mask.T
+    y = jnp.einsum("te,ted->td", mask, eo.astype(jnp.float32))
+    return (y + _shared_out(params, x).astype(jnp.float32)).astype(x.dtype)
+
+
+def ec_capacity(num_tokens: int, e: MoEConfig) -> int:
+    """Expert-choice capacity: on average top_k experts per token."""
+    return max(1, (num_tokens * e.top_k) // e.num_experts)
+
+
+# --------------------------------------------- sort-based capacity dispatch
+
+class DispatchPlan(NamedTuple):
+    x_disp: jax.Array        # [E, C, d] dispatched tokens (zeros where empty)
+    inv: jax.Array           # [N] unsort permutation
+    dest: jax.Array          # [N] flat slot (E*C = dropped)
+    weights: jax.Array       # [N] combine weights
+    token: jax.Array         # [N] source token per pair
+    counts: jax.Array        # [E] tokens routed per expert (pre-capacity)
+
+
+def _plan_dispatch(x, expert_flat, weights_flat, token_flat, E, C):
+    N = expert_flat.shape[0]
+    order = jnp.argsort(expert_flat, stable=True)
+    se = expert_flat[order]
+    pos = jnp.arange(N, dtype=jnp.int32) - jnp.searchsorted(
+        se, se, side="left").astype(jnp.int32)
+    dest_sorted = jnp.where(pos < C, se * C + pos, E * C)
+    inv = jnp.argsort(order, stable=True)
+    dest = dest_sorted[inv]                              # back to pair order
+    buf = jnp.zeros((E * C + 1, x.shape[-1]), x.dtype)
+    x_disp = buf.at[dest].set(x[token_flat], mode="drop")[:-1].reshape(E, C, -1)
+    counts = jnp.bincount(expert_flat, length=E)
+    return DispatchPlan(x_disp, inv, dest, weights_flat, token_flat, counts)
+
+
+def _combine(y_disp, plan, T, out_dtype):
+    flat = jnp.concatenate(
+        [y_disp.reshape(-1, y_disp.shape[-1]),
+         jnp.zeros((1, y_disp.shape[-1]), y_disp.dtype)], axis=0)
+    y_pairs = flat[plan.dest].astype(jnp.float32) * plan.weights[:, None]
+    out = jnp.zeros((T, y_disp.shape[-1]), jnp.float32)
+    out = out.at[plan.token].add(y_pairs)
+    return out.astype(out_dtype)
+
+
+def dispatch_forward(params: dict, x: jax.Array, e: MoEConfig,
+                     capacity: int = 0) -> tuple:
+    """Production token-choice path. x [T, d] -> (y [T, d], aux dict)."""
+    T = x.shape[0]
+    E, k = e.num_experts, e.top_k
+    C = capacity or max(1, int(math.ceil(T * k / E * e.capacity_factor)))
+    r = R.token_choice(x, params["gate"], k)
+    expert_flat = r.expert_idx.reshape(-1).astype(jnp.int32)
+    weights_flat = r.weights.reshape(-1)
+    token_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    plan = _plan_dispatch(x, expert_flat, weights_flat, token_flat, E, C)
+    y_disp = _expert_gemm(params["experts"], plan.x_disp)
+    y = _combine(y_disp, plan, T, x.dtype) + _shared_out(params, x)
+    aux = {
+        "counts": plan.counts,
+        "balance_loss": R.load_balance_loss(r.scores, r.expert_idx, E),
+        "dropped": (plan.dest == E * C).sum(),
+    }
+    return y, aux
+
+
+def group_forward(params: dict, x: jax.Array, e: MoEConfig,
+                  group_of_expert: jax.Array, pool_factor: float = 0.7) -> tuple:
+    """C1 — group-multiplexed path with POOLED group capacity.
+
+    Experts of a group share one lane buffer of size C_grp = g * C_exp *
+    pool_factor: pooling lets a hot expert borrow slots from its cold
+    group-mates (the paper pairs them by sorted load precisely so this works),
+    cutting padded slots vs per-expert buckets at equal drop rate.
+    XLA realization masks over the g members (g x redundant FLOPs); the Pallas
+    kernel moe_gmm removes the redundancy by expert-indexed weight staging.
+    """
+    T = x.shape[0]
+    E, k, g = e.num_experts, e.top_k, e.group_size
+    G = E // g
+    C_exp = max(1, int(math.ceil(T * k / E * e.capacity_factor)))
+    C_grp = max(1, int(math.ceil(g * C_exp * pool_factor)))
+    r = R.token_choice(x, params["gate"], k)
+    expert_flat = r.expert_idx.reshape(-1).astype(jnp.int32)
+    grp_flat = group_of_expert[expert_flat]
+    weights_flat = r.weights.reshape(-1)
+    token_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+
+    # dispatch by GROUP, but keep rows sorted by (group, expert) so the kernel
+    # sees expert-contiguous runs (dispatch-locality analogue of Alg. 1)
+    sort_key = grp_flat * E + expert_flat
+    order = jnp.argsort(sort_key, stable=True)
+    sg = grp_flat[order]
+    pos = jnp.arange(sg.shape[0], dtype=jnp.int32) - jnp.searchsorted(
+        sg, sg, side="left").astype(jnp.int32)
+    dest_sorted = jnp.where(pos < C_grp, sg * C_grp + pos, G * C_grp)
+    inv = jnp.argsort(order, stable=True)
+    dest = dest_sorted[inv]
+    buf = jnp.zeros((G * C_grp + 1, x.shape[-1]), x.dtype)
+    x_disp = buf.at[dest].set(x[token_flat], mode="drop")[:-1].reshape(G, C_grp, -1)
+    row_expert = jnp.full((G * C_grp + 1,), -1, jnp.int32).at[dest].set(
+        expert_flat, mode="drop")[:-1].reshape(G, C_grp)
+
+    # XLA fallback: accumulate each member's masked contribution
+    bank = params["experts"]
+    y_disp = jnp.zeros(x_disp.shape, jnp.float32)
+    member_ids = _members_matrix(group_of_expert, G, g)          # [G, g]
+    for j in range(g):
+        eid = member_ids[:, j]                                   # [G]
+        wg = bank["wg"][eid]
+        wi = bank["wi"][eid]
+        wo = bank["wo"][eid]
+        h = jax.nn.silu(jnp.einsum("gcd,gdf->gcf", x_disp, wg)) * jnp.einsum(
+            "gcd,gdf->gcf", x_disp, wi)
+        yj = jnp.einsum("gcf,gfd->gcd", h, wo)
+        m = (row_expert == eid[:, None])[..., None]
+        y_disp = y_disp + jnp.where(m, yj.astype(jnp.float32), 0.0)
+
+    plan = DispatchPlan(x_disp, inv, dest, weights_flat, token_flat,
+                        jnp.bincount(expert_flat, length=E))
+    y = _combine(y_disp.astype(x.dtype), plan, T, x.dtype) + _shared_out(params, x)
+    aux = {
+        "counts": plan.counts,
+        "balance_loss": R.load_balance_loss(r.scores, r.expert_idx, E),
+        "dropped": (dest == G * C_grp).sum(),
+        "slots": G * C_grp,
+    }
+    return y, aux
+
+
+def _members_matrix(group_of_expert: jax.Array, G: int, g: int) -> jax.Array:
+    """[E] group ids -> [G, g] expert ids per group (host-traceable)."""
+    E = group_of_expert.shape[0]
+    order = jnp.argsort(group_of_expert * E + jnp.arange(E), stable=True)
+    return order.reshape(G, g).astype(jnp.int32)
+
+
+# ------------------------------------------------------------- expert choice
+
+def expert_choice_forward(params: dict, x: jax.Array, e: MoEConfig) -> tuple:
+    """Expert-choice prefill/train: each expert gathers its top-C tokens.
+    Returns (y, aux) where aux also carries what the GO cache needs."""
+    T = x.shape[0]
+    cap = ec_capacity(T, e)
+    r = R.expert_choice(x, params["gate"], cap)
+    x_disp = x[r.token_idx]                               # [E, C, d] (gather)
+    y_disp = _expert_gemm(params["experts"], x_disp)      # [E, C, d]
+    w = r.weights                                         # [E, C]
+    contrib = y_disp.astype(jnp.float32) * w[..., None]
+    out = jnp.zeros((T, x.shape[-1]), jnp.float32)
+    out = out.at[r.token_idx.reshape(-1)].add(contrib.reshape(-1, x.shape[-1]))
+    y = out.astype(x.dtype) + _shared_out(params, x)
+    aux = {
+        "counts": jnp.bincount(r.token_idx.reshape(-1), length=T),
+        "chosen_tokens": r.token_idx,
+        "chosen_scores": w,
+        "weighted_outputs": contrib.astype(x.dtype),      # [E, C, d]
+        "scores": r.scores,
+    }
+    return y, aux
+
+
+# -------------------------------------------------------------------- decode
+
+def token_choice_decode(params: dict, x: jax.Array, e: MoEConfig) -> jax.Array:
+    """Decode step for token-choice: x [B, d] one token per sequence.
+    Dropless: capacity bounds the worst case (every row picks the same expert),
+    so serving never silently drops a token's expert contribution."""
+    y, _ = dispatch_forward(
+        params, x, e, capacity=max(1, x.shape[0] * e.top_k))
+    return y
+
+
+def moe_forward(params: dict, x: jax.Array, e: MoEConfig,
+                group_of_expert=None) -> tuple:
+    """Router for the full-sequence paths; x [T, d]."""
+    if e.routing == "expert_choice":
+        return expert_choice_forward(params, x, e)
+    if e.use_grouped_gemm and e.group_size > 1 and group_of_expert is not None:
+        return group_forward(params, x, e, group_of_expert)
+    return dispatch_forward(params, x, e)
+
+
+# --------------------------------------------------- expert-parallel (EP)
+
+def moe_forward_ep(params: dict, h: jax.Array, e: MoEConfig) -> tuple:
+    """True expert parallelism via shard_map over the model axis.
+
+    Each model shard owns E/M experts ([E, ...] banks are EP-sharded by the
+    rule-based sharder); the routing gate is replicated and each shard
+    dispatches ONLY the (token, expert) pairs that hit its local experts, so
+    dispatch buffers shrink by M and never cross the batch sharding. Partial
+    outputs are combined with a psum — the EP analogue of the paper's
+    shared-peripheral combine. The C2 load-aware permutation is applied to
+    the expert index at deployment so each shard's aggregate load balances
+    (straggler mitigation at the MoE layer).
+
+    h [B, S, d] -> (y [B, S, d], aux). Token-choice only; requires
+    E % model_axis == 0 (callers fall back to the vmapped path otherwise).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.layers import current_mesh, dp_spec
+
+    mesh = current_mesh()
+    M = mesh.shape["model"]
+    E, k = e.num_experts, e.top_k
+    E_loc = E // M
+    B, S, d = h.shape
+    dp = dp_spec()
+    C = max(1, int(math.ceil(S * k / E * e.capacity_factor)))
+
+    def body(h_loc, gate, wg, wi, wo):
+        i = jax.lax.axis_index("model")
+        lo = i * E_loc
+
+        def per_seq(xb):
+            r = R.token_choice(xb, gate, k)
+            ef = r.expert_idx.reshape(-1).astype(jnp.int32) - lo
+            wf = r.weights.reshape(-1)
+            tok = jnp.repeat(jnp.arange(S, dtype=jnp.int32), k)
+            local = (ef >= 0) & (ef < E_loc)
+            ef_l = jnp.where(local, ef, E_loc)          # E_loc = drop bucket
+            plan = _plan_dispatch(xb, ef_l, wf, tok, E_loc, C)
+            hdn = jax.nn.silu(jnp.einsum(
+                "ecd,edf->ecf", plan.x_disp, wg)) * jnp.einsum(
+                "ecd,edf->ecf", plan.x_disp, wi)
+            y_disp = jnp.einsum("ecf,efd->ecd", hdn, wo)
+            y = _combine(y_disp, plan, S, jnp.float32)
+            bal = R.load_balance_loss(r.scores, r.expert_idx, E)
+            cnt = jnp.bincount(ef_l, length=E_loc + 1)[:E_loc]
+            dropped = (local & (plan.dest == E_loc * C)).sum()
+            return y, bal, cnt, dropped
+
+        y, bal, cnt, dropped = jax.vmap(per_seq)(h_loc)
+        y = jax.lax.psum(y, "model")
+        cnt = jax.lax.psum(cnt.sum(0), dp) if dp else cnt.sum(0)
+        dropped = jax.lax.psum(dropped.sum(), ("model",) + (dp or ()))
+        bal = jax.lax.pmean(bal.mean(), dp) if dp else bal.mean()
+        return (y, bal, cnt, dropped)
+
+    bank = params["experts"]
+    y, bal, cnt, dropped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp, None, None), P(), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(P(dp, None, None), P(), P("model"), P()),
+        check_rep=False,
+    )(h, params["gate"], bank["wg"], bank["wi"], bank["wo"])
+
+    y = y.astype(h.dtype) + jax.vmap(lambda xb: _shared_out(params, xb))(h)
+    aux = {"counts": cnt, "balance_loss": bal, "dropped": dropped}
+    return y, aux
+
+
+def ep_available(e: MoEConfig) -> bool:
+    """EP path usable: inside a mesh whose model axis divides E."""
+    from repro.models.layers import current_mesh
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    M = mesh.shape["model"]
+    return M > 1 and e.num_experts % M == 0

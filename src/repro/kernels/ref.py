@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def row_experts(tile_expert: jax.Array, bn: int) -> jax.Array:
+    """tile_expert [T] -> per-row expert ids [T*bn]."""
+    return jnp.repeat(tile_expert, bn)
+
+
+def gmm_ref(x: jax.Array, w: jax.Array, tile_expert: jax.Array,
+            bn: int) -> jax.Array:
+    """y[i] = x[i] @ w[expert(i)] — gather-based oracle."""
+    e = row_experts(tile_expert, bn)                     # [N]
+    wr = w[e]                                            # [N, K, F]
+    return jnp.einsum("nk,nkf->nf", x.astype(jnp.float32),
+                      wr.astype(jnp.float32)).astype(x.dtype)
+
+
+def gmm_swiglu_ref(x: jax.Array, wg: jax.Array, wi: jax.Array,
+                   tile_expert: jax.Array, bn: int) -> jax.Array:
+    e = row_experts(tile_expert, bn)
+    g = jnp.einsum("nk,nkf->nf", x.astype(jnp.float32), wg[e].astype(jnp.float32))
+    i = jnp.einsum("nk,nkf->nf", x.astype(jnp.float32), wi[e].astype(jnp.float32))
+    return (jax.nn.silu(g) * i).astype(x.dtype)
+
+
+def go_topk_ref(s_prev: jax.Array, tok_prev: jax.Array, s_new: jax.Array,
+                token_id) -> tuple:
+    """Vectorized eq. (5) oracle (same semantics as core.routing.topk_update,
+    batched)."""
+    from repro.core.routing import topk_update
+    upd = jax.vmap(lambda sp, tp, sn: topk_update(sp, tp, sn, token_id))(
+        s_prev, tok_prev, s_new)
+    return upd.new_scores, upd.new_token_ids, upd.selected, upd.slot

@@ -1,0 +1,80 @@
+"""Fused sLSTM sequence kernel — the consequence of §Perf Cell A.
+
+The sLSTM recurrence is token-sequential; under XLA/GSPMD each of the S scan
+steps round-trips the cell state and re-streams the recurrent weights
+(EXPERIMENTS.md §Perf: two refuted scheduling hypotheses showed the term is
+unreachable above the kernel layer). This kernel runs the WHOLE sequence for
+one batch row inside a single pallas_call: the recurrent weights r and the
+(c, n, m, h) state live in VMEM scratch across all S steps; HBM traffic is
+exactly the xs (gate pre-activations) stream in and the h stream out — the
+~4-orders-of-magnitude term reduction quantified in the perf log.
+
+Grid: (B,). Per-step math matches models/xlstm._slstm_cell exactly
+(stabilized exponential gating). Validated in interpret mode against the
+pure-jnp reference (tests/test_kernels.py); on TPU the same body lowers via
+Mosaic with r resident in VMEM (4*H*hd*hd fp32 — 16 MB at the xlstm-1.3b
+shard size, well under the 128 MB VMEM budget).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _slstm_seq_kernel(u_ref, r_ref, h_out_ref, c_ref, n_ref, m_ref, h_ref,
+                      *, seq_len: int, H: int, hd: int):
+    # state scratch: [H, hd] each, fp32, persistent across the fori_loop
+    c_ref[...] = jnp.zeros_like(c_ref)
+    n_ref[...] = jnp.zeros_like(n_ref)
+    m_ref[...] = jnp.zeros_like(m_ref)
+    h_ref[...] = jnp.zeros_like(h_ref)
+    r = r_ref[...].astype(jnp.float32)            # [4, H, hd, hd] — VMEM-resident
+
+    def step(t, _):
+        u_t = u_ref[0, t].astype(jnp.float32)     # [4*H*hd]
+        gates_in = u_t.reshape(4, H, hd)
+        h_prev = h_ref[...]                       # [H, hd]
+        rec = jnp.einsum("ghij,hj->ghi", r, h_prev)
+        g = gates_in + rec
+        li, lf, z, o = g[0], g[1], g[2], g[3]
+        lf = jax.nn.log_sigmoid(lf)
+        m_new = jnp.maximum(lf + m_ref[...], li)
+        fi = jnp.exp(lf + m_ref[...] - m_new)
+        ii = jnp.exp(li - m_new)
+        c_new = fi * c_ref[...] + ii * jnp.tanh(z)
+        n_new = fi * n_ref[...] + ii
+        h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1e-6)
+        c_ref[...] = c_new
+        n_ref[...] = n_new
+        m_ref[...] = m_new
+        h_ref[...] = h_new
+        h_out_ref[0, t] = h_new.reshape(-1).astype(h_out_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, seq_len, step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def slstm_seq(u: jax.Array, r: jax.Array, *, interpret: bool = True):
+    """u [B, S, 4*H*hd] gate pre-activations; r [4, H, hd, hd] recurrent
+    weights -> h [B, S, H*hd] (fp32 state carried on-chip)."""
+    B, S, four_d = u.shape
+    _, H, hd, _ = r.shape
+    assert four_d == 4 * H * hd
+    kernel = functools.partial(_slstm_seq_kernel, seq_len=S, H=H, hd=hd)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, S, four_d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((4, H, hd, hd), lambda b: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S, H * hd), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H * hd), u.dtype),
+        scratch_shapes=[pltpu.VMEM((H, hd), jnp.float32) for _ in range(4)],
+        interpret=interpret,
+    )(u, r)

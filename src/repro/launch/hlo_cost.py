@@ -1,0 +1,329 @@
+"""Loop-nest-aware HLO cost accounting.
+
+XLA's `compiled.cost_analysis()` counts every while-loop body ONCE, which
+under-reports scanned layer stacks / grad-accumulation / chunked attention by
+orders of magnitude. The optimized HLO, however, annotates every `while` with
+`backend_config={"known_trip_count":{"n":...}}`. This module parses the
+post-GSPMD HLO text, builds the computation call graph (while bodies weighted
+by trip count; fusion/call bodies weighted 1), and accumulates:
+
+  flops        2 * result_elems * contraction_elems for every `dot`
+               (batch/free dims are in the result; exact for GEMM/batched GEMM)
+  bytes        HBM-traffic proxy: result + operand bytes of top-level
+               data-moving ops (fusion, dot, copy, collectives, custom-call,
+               dynamic-(update-)slice, scatter/gather, broadcast from HBM),
+               i.e. the standard "fusion internals stay on-chip" roofline
+               assumption — the same contract as XLA's own bytes-accessed.
+  collectives  result bytes per kind, all-reduce counted twice (ring
+               reduce + broadcast phases).
+
+Validated against cost_analysis on fully-unrolled probes (tests/test_hlo_cost).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_OPCODE = re.compile(r"([\w\-]+)\((.*)")
+
+
+def _parse_instr(line: str):
+    """'%name = SHAPE opcode(args), attrs' -> (name, shape, op, rest).
+    Handles tuple shapes containing commas, layouts and /*index=N*/ comments."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape = rest[:end + 1]
+        rest2 = rest[end + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape = rest[:sp]
+        rest2 = rest[sp + 1:]
+    m = _OPCODE.match(rest2)
+    if not m:
+        return None
+    return name, shape, m.group(1), m.group(2)
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_WHILE_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_WHILE_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count[":{\s]+n["\s:]+\"?(\d+)')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# HBM-traffic proxy: ops that actually move data on a TPU. Layout/shape ops
+# (transpose/reshape/broadcast/iota/convert) fuse into consumers on TPU and
+# are excluded — in particular the CPU backend's hoisted bf16->f32 dot-operand
+# conversions, which don't exist on the target.
+_BYTES_OPS = {"fusion", "dot", "copy", "custom-call", "dynamic-slice",
+              "dynamic-update-slice", "gather", "scatter", "concatenate",
+              "reduce", "select-and-scatter", "sort", "rng", "convolution",
+              "cholesky", "triangular-solve", *COLLECTIVES}
+_SKIP_BYTES = {"get-tuple-element", "tuple", "parameter", "constant",
+               "bitcast", "after-all", "while", "conditional", "call"}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = _DTYPE_BYTES[dt]
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Computation:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_inv: float = 0.0   # loop-invariant operand traffic (VMEM-resident
+                             # on TPU across iterations -> charged once)
+    upcast: float = 0.0
+    coll: dict = field(default_factory=lambda: defaultdict(float))
+    # (callee, multiplier) edges
+    calls: list = field(default_factory=list)
+    # raw instruction records for the two-pass bytes attribution
+    instrs: list = field(default_factory=list)
+    param_gte: dict = field(default_factory=dict)   # sym -> tuple index
+    root_operands: list = field(default_factory=list)
+
+
+def parse_computations(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    # symbol table per computation: %name -> shape string
+    symbols: dict[str, str] = {}
+    upcast_syms: set[str] = set()
+
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY ") or (line.startswith("%") and "->" in line
+                                         and line.rstrip().endswith("{")):
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                symbols = {}
+                upcast_syms = set()
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                # parameters: "name: shape" pairs in the header
+                for pm in re.finditer(r"(\w[\w\.\-]*):\s*(\(?[a-z0-9\[\],\{\} ]+)",
+                                      line):
+                    symbols[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        parsed = _parse_instr(line)
+        if parsed is None:
+            continue
+        name, shape, op, rest = parsed
+        symbols[name] = shape
+        is_root = line.lstrip().startswith("ROOT ")
+        if op == "get-tuple-element":
+            im = re.search(r"index=(\d+)", line)
+            ops0 = _OPERANDS.findall(rest.split(")")[0])
+            if im and ops0 and ops0[0].startswith("arg_tuple"):
+                cur.param_gte[name] = int(im.group(1))
+        if is_root and op == "tuple":
+            cur.root_operands = _OPERANDS.findall(rest.split(")")[0])
+        if op == "convert" and shape.startswith("f32"):
+            ops_part0 = rest.split(")")[0]
+            first = _OPERANDS.findall(ops_part0)
+            if first and symbols.get(first[0], "").startswith("bf16"):
+                upcast_syms.add(name)   # f32 staging of a bf16 tensor
+
+        if op == "parameter":
+            continue
+        if op == "while":
+            body = _WHILE_BODY.search(line)
+            trip = _TRIP.search(line)
+            n = int(trip.group(1)) if trip else 1
+            if body:
+                cur.calls.append((body.group(1), n))
+            cond = _WHILE_COND.search(line)
+            if cond:
+                cur.calls.append((cond.group(1), n))
+            continue
+        if op not in ("while",):
+            for cm in _CALLS.finditer(line):
+                cur.calls.append((cm.group(1), 1))
+            bm = _BRANCHES.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b:
+                        cur.calls.append((b, 1))
+        if op == "dot":
+            cdims = _CONTRACT.search(line)
+            contract = 1
+            ops_part = rest.split(")")[0]
+            operand_names = _OPERANDS.findall(ops_part)
+            if cdims and operand_names:
+                lhs_shape = symbols.get(operand_names[0], "")
+                sm = _SHAPE_RE.search(lhs_shape)
+                if sm:
+                    dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for ci in cdims.group(1).split(","):
+                        if ci:
+                            contract *= dims[int(ci)]
+            cur.flops += 2.0 * _shape_elems(shape) * contract
+        if op == "convolution":
+            # rare here (stub frontends); approximate as result*2*window
+            cur.flops += 2.0 * _shape_elems(shape)
+        if op in COLLECTIVES:
+            b = _shape_bytes(shape)
+            cur.coll[op] += b * (2 if op == "all-reduce" else 1)
+        if op == "convert" and shape.startswith("f32"):
+            # CPU-backend bf16->f32 dot-operand upcasts (absent on TPU:
+            # the MXU consumes bf16 natively). Tracked so the dry-run can
+            # report a target-corrected memory watermark. Only large hoisted
+            # copies matter (weight stacks, caches); counted once per
+            # computation (allocations are reused across loop iterations).
+            ops_part = rest.split(")")[0]
+            operands = _OPERANDS.findall(ops_part)
+            if operands and symbols.get(operands[0], "").startswith("bf16"):
+                b = _shape_bytes(shape)
+                if b >= 16 * 2**20:
+                    cur.upcast += b
+        if op in _BYTES_OPS:
+            ops_part = rest.split(")")[0]
+            onames = _OPERANDS.findall(ops_part)
+            cur.instrs.append((op, shape, [
+                (on, symbols.get(on, ""), on in upcast_syms)
+                for on in onames]))
+
+    # ---- second pass: bytes attribution.
+    # * dynamic-slice/gather read only the sliced region (NOT the full
+    #   stacked-weights buffer they index);
+    # * dynamic-update-slice writes only the updated region (result aliases);
+    # * operands that are loop-invariant tuple elements of a while body are
+    #   VMEM-resident across iterations on TPU -> separated into bytes_inv,
+    #   charged once per while execution instead of per iteration.
+    for c in comps.values():
+        invariant = {sym for sym, idx in c.param_gte.items()
+                     if idx < len(c.root_operands)
+                     and c.root_operands[idx] == sym}
+        for op, shape, operands in c.instrs:
+            rb = _shape_bytes(shape)
+            if op == "dynamic-update-slice":
+                upd = _shape_bytes(operands[1][1]) if len(operands) > 1 else rb
+                c.bytes += 2 * min(upd, rb)
+                continue
+            b_var, b_inv = float(rb), 0.0
+            for i, (on, oshape, upc) in enumerate(operands):
+                ob = _shape_bytes(oshape)
+                if upc:
+                    ob //= 2
+                if op in ("dynamic-slice", "gather") and i == 0:
+                    ob = min(ob, rb)
+                if op == "fusion":
+                    # scan-xs slicing compiles to fusion(dynamic-slice(stack));
+                    # a streaming fusion reads O(result), not the full stack.
+                    # The 16x cap keeps reduction fusions exact while removing
+                    # the full-stack-per-iteration artifact.
+                    ob = min(ob, max(16 * rb, 1 << 20))
+                if on in invariant:
+                    b_inv += ob
+                else:
+                    b_var += ob
+            c.bytes += b_var
+            c.bytes_inv += b_inv
+    return comps, entry
+
+
+def analyze(hlo: str) -> dict:
+    """Loop-aware totals for one HLO module."""
+    comps, entry = parse_computations(hlo)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {"total": 0.0}}
+
+    # accumulate multipliers over the call graph (memoized DFS; HLO call
+    # graphs are DAGs)
+    totals = {"flops": 0.0, "bytes": 0.0}
+    coll = defaultdict(float)
+    from functools import lru_cache
+    import sys
+    sys.setrecursionlimit(100000)
+
+    memo: dict[str, tuple] = {}
+
+    def visit(name: str) -> tuple:
+        """Returns (flops, bytes_var, bytes_inv, coll) incl. callees. A
+        callee's invariant bytes are charged ONCE per call-site execution
+        (mult applies only to the variant part)."""
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return 0.0, 0.0, 0.0, {}
+        f, b = c.flops, c.bytes
+        cc = dict(c.coll)
+        for callee, mult in c.calls:
+            cf, cb, cinv, ccoll = visit(callee)
+            f += mult * cf
+            b += mult * cb + cinv          # invariant: once per execution
+            for k, v in ccoll.items():
+                cc[k] = cc.get(k, 0.0) + mult * v
+        memo[name] = (f, b, c.bytes_inv, cc)
+        return memo[name]
+
+    f, b, binv, cc = visit(entry)
+    b += binv
+    upcast = sum(c.upcast for c in comps.values())   # allocated once each
+    out = {"flops": f, "bytes": b, "cpu_upcast_bytes": upcast,
+           "collectives": {**{k: v for k, v in cc.items()},
+                           "total": sum(cc.values())}}
+    return out

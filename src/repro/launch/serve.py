@@ -1,0 +1,83 @@
+"""Batched serving driver with KV + GO caches (the paper's generation path).
+
+Flow per batch of requests:
+  1. prefill() — full-sequence pass fills the KV caches and, for
+     expert-choice MoE, builds the per-layer GO caches (paper eq. 4-5);
+  2. serve_step() per generated token — O(1) state growth: the gate sees ONE
+     token, TopKUpdate against cached mins replaces at most one slot per
+     expert, and only selecting experts' outputs are recomputed.
+
+CPU-runnable with smoke configs:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama_moe_4_16 --smoke \
+      --batch 4 --prompt 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models.model import model_init, prefill, serve_step
+
+
+def generate(params, cfg, prompts: jax.Array, gen_tokens: int,
+             extras: dict | None = None, *, greedy: bool = True,
+             key=None) -> dict:
+    """prompts [B, T] -> generated [B, gen_tokens] (+ stats)."""
+    B, T = prompts.shape
+    state, logits = jax.jit(
+        prefill, static_argnames=("cfg", "max_len"))(
+            params, prompts, cfg, extras or {}, max_len=T + gen_tokens + 1)
+    step = jax.jit(serve_step, static_argnames="cfg")
+
+    out = []
+    t0 = time.time()
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for i in range(gen_tokens):
+        out.append(tok)
+        logits, state = step(params, state, tok, cfg)
+        if greedy or key is None:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+    dt = time.time() - t0
+    return {
+        "tokens": jnp.stack(out, axis=1),
+        "decode_s": dt,
+        "tok_per_s": B * gen_tokens / dt,
+        "state": state,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    key = jax.random.PRNGKey(0)
+    params = model_init(key, cfg)
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt), 0, cfg.vocab_size, dtype=jnp.int32)
+    extras = {}
+    if cfg.cross_attn_every:
+        extras["image_embeds"] = extras["memory"] = jnp.zeros(
+            (args.batch, cfg.num_image_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+    res = generate(params, cfg, prompts, args.gen, extras)
+    print(f"generated {res['tokens'].shape} in {res['decode_s']:.2f}s "
+          f"({res['tok_per_s']:.1f} tok/s)")
+    print("sample:", np.asarray(res["tokens"][0])[:16])
+
+
+if __name__ == "__main__":
+    main()

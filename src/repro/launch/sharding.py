@@ -1,0 +1,253 @@
+"""Rule-based sharder: assigns every parameter / optimizer / decode-state leaf
+a PartitionSpec, CHECKING divisibility (JAX NamedSharding requires even
+shards). Falls back down a priority list instead of failing:
+
+Parameters (mode="train" adds FSDP over the data axis = ZeRO-3 via GSPMD;
+mode="serve" keeps params TP-only so decode steps pay no per-step gathers):
+
+  1. layer-stack leading dims (scan axes) are never sharded;
+  2. expert banks: EP — expert dim over "model" when E % model == 0, with the
+     C2 load-aware permutation applied to the expert index at deployment;
+     otherwise fall back to feature-dim TP (e.g. granite-moe's E=40);
+  3. otherwise TP on the largest dim divisible by the model-axis size
+     (column-parallel for projections, vocab-parallel for embeddings);
+  4. FSDP (train): the largest REMAINING dim divisible by the data-axis size;
+  5. replicate whatever is left (biases, norms, gates).
+
+Optimizer state (m, v) inherits the param spec (ZeRO-1: it is therefore
+sharded over BOTH axes wherever the param is).
+
+Decode state: batch over (pod, data); KV-cache sequence dim over "model"
+(decode attention is a direct softmax -> GSPMD turns the S-reduction into
+all-reduces = TPU flash-decoding); GO cache expert dim over "model" when
+divisible.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, dp_axes
+
+# path components whose immediate child arrays are layer-stacked (scan axes)
+STACK1 = {"layers", "encoder", "dec_self", "dec_cross", "cross_layers",
+          "slayers"}
+STACK2 = {"mlayers"}          # [n_seg, n_m, ...]
+VLM_NESTED = {"layers"}       # vlm: layers is [n_sup, n_self, ...] (detected by rank)
+
+
+def _path_keys(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def _stack_prefix(keys: list, shape, cfg) -> int:
+    """How many leading dims are layer-stack (scan) axes."""
+    n = 0
+    for k in keys:
+        if k in STACK2:
+            n = 2
+            break
+        if k in STACK1:
+            n = 1
+            break
+    # vlm / whisper nested stacks: layers under cross_attn_every archs are
+    # [n_sup, n_self, ...]
+    if n == 1 and cfg is not None and getattr(cfg, "cross_attn_every", 0) > 0 \
+            and keys and keys[0] == "layers":
+        n = 2
+    return n
+
+
+def param_spec(path, leaf, cfg, mesh, mode: str = "train") -> P:
+    keys = _path_keys(path)
+    shape = leaf.shape
+    rank = len(shape)
+    M = axis_size(mesh, "model")
+    dp = dp_axes(mesh)
+    # FSDP only over the intra-pod data axis (pod axis does pure gradient
+    # all-reduce — hierarchical DP keeps param all-gathers off the pod links)
+    D = axis_size(mesh, "data") if mode == "train" else 1
+
+    if rank == 0 or min(shape) == 0:
+        return P()
+    pre = _stack_prefix(keys, shape, cfg)
+    dims = list(range(pre, rank))
+    if not dims:
+        return P()
+    spec = [None] * rank
+
+    if mode.endswith("_dp"):
+        # pure-DP policy (§Perf knob): the model axis becomes an extra FSDP
+        # axis; no tensor parallelism anywhere (odd-head archs / small models)
+        DM = D * M
+        for i in sorted(dims, key=lambda i: -shape[i]):
+            if DM > 1 and shape[i] % DM == 0 and shape[i] >= DM:
+                spec[i] = ("data", "model")
+                break
+            if D > 1 and shape[i] % D == 0 and shape[i] >= D:
+                spec[i] = "data"
+                break
+        return P(*spec)
+
+    def try_model(order):
+        for i in order:
+            if M > 1 and shape[i] % M == 0 and shape[i] >= 2 * M:
+                spec[i] = "model"
+                return True
+        return False
+
+    leaf_key = keys[-1] if keys else ""
+    is_expert_bank = any(k in ("experts", "shared") for k in keys)
+    # Megatron orientation: column-parallel weights shard the OUTPUT dim
+    # (activations stay batch-sharded; no gather), row-parallel weights shard
+    # the INPUT (contraction) dim (one all-reduce after).
+    COL = {"wq", "wk", "wv", "wi", "wg", "up", "in_proj", "w_in", "ff_up",
+           "w_if", "lm_head"}
+    ROW = {"wo", "down", "out_proj", "ff_down"}
+
+    if is_expert_bank and len(dims) >= 3:
+        e_dim = dims[0]
+        if M > 1 and shape[e_dim] % M == 0 and shape[e_dim] >= M:
+            spec[e_dim] = "model"       # EP: experts across the model axis
+        elif leaf_key in ROW:
+            try_model(dims[1:-1] or dims[1:])
+        else:
+            try_model(dims[1:][::-1])   # prefer output (last) dim
+    elif leaf_key == "embed":
+        try_model([dims[0]]) or try_model(dims[1:])     # vocab-parallel
+    elif leaf_key in COL:
+        try_model(dims[::-1])           # output dim first
+    elif leaf_key in ROW:
+        try_model(dims)                 # input (contraction) dim first
+    else:
+        try_model(sorted(dims, key=lambda i: -shape[i]))
+
+    if D > 1:
+        rem = [i for i in dims if spec[i] is None]
+        for i in sorted(rem, key=lambda i: -shape[i]):
+            if shape[i] % D == 0 and shape[i] >= 2 * D and shape[i] >= 1024:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def param_shardings(shapes: dict, cfg, mesh, mode: str = "train"):
+    """Pytree of ShapeDtypeStructs -> matching pytree of NamedShardings."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, param_spec(p, x, cfg, mesh, mode)),
+        shapes)
+
+
+def opt_shardings(opt_shapes, p_shardings):
+    """AdamW m/v inherit the param spec (ZeRO-1); step counter replicated."""
+    flat_p = jax.tree.leaves(p_shardings)
+    mesh = flat_p[0].mesh
+
+    def inherit(tree):
+        # m / v have the same tree structure as params
+        return jax.tree.map(
+            lambda s: s, p_shardings)
+
+    import repro.optim.adamw as A
+    return A.AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=inherit(opt_shapes.m),
+        v=inherit(opt_shapes.v),
+    )
+
+
+# ----------------------------------------------------------- decode state
+
+def _maybe(mesh, axis, size) -> str | None:
+    if isinstance(axis, tuple):
+        n = int(np.prod([axis_size(mesh, a) for a in axis]))
+        axis_out = axis
+    else:
+        n = axis_size(mesh, axis)
+        axis_out = axis
+    return axis_out if (n > 1 and size % n == 0 and size >= n) else None
+
+
+def state_spec(path, leaf, cfg, mesh, batch: int) -> P:
+    keys = _path_keys(path)
+    shape = leaf.shape
+    dp = dp_axes(mesh)
+    k0 = keys[0] if keys else ""
+
+    if k0 == "t" or len(shape) == 0:
+        return P()
+    if k0 in ("k", "v"):
+        if len(shape) == 5:                       # [L, B, S, h, hd]
+            return P(None, _maybe(mesh, dp, shape[1]),
+                     _maybe(mesh, "model", shape[2]), None, None)
+        if len(shape) == 6:                       # vlm [n_sup, n_self, B, S, h, hd]
+            return P(None, None, _maybe(mesh, dp, shape[2]),
+                     _maybe(mesh, "model", shape[3]), None, None)
+    if k0 == "memory":                            # [B, I, d]
+        return P(_maybe(mesh, dp, shape[0]), None,
+                 _maybe(mesh, "model", shape[2]))
+    if k0 == "go":
+        if len(shape) == 4:                       # scores/tok [L, B, E, k]
+            return P(None, _maybe(mesh, dp, shape[1]),
+                     _maybe(mesh, "model", shape[2]), None)
+        if len(shape) == 5:                       # outputs [L, B, E, k, d]
+            return P(None, _maybe(mesh, dp, shape[1]),
+                     _maybe(mesh, "model", shape[2]), None, None)
+    if k0 == "ssm":
+        if len(shape) == 5:                       # [L, B, h, p, n]
+            return P(None, _maybe(mesh, dp, shape[1]),
+                     _maybe(mesh, "model", shape[2]), None, None)
+        if len(shape) == 4:                       # conv [L, B, K-1, C]
+            return P(None, _maybe(mesh, dp, shape[1]), None,
+                     _maybe(mesh, "model", shape[3]))
+    if k0 in ("mlstm", "slstm"):
+        spec = [None] * len(shape)
+        # find the batch dim (first dim equal to `batch` after stack dims)
+        for i, s in enumerate(shape):
+            if s == batch and i >= 1:
+                spec[i] = _maybe(mesh, dp, s)
+                break
+        # largest trailing dim onto model
+        for i in sorted(range(len(shape)), key=lambda i: -shape[i]):
+            if spec[i] is None and i >= 2 and \
+                    _maybe(mesh, "model", shape[i]) and shape[i] >= 256:
+                spec[i] = "model"
+                break
+        return P(*spec)
+    # fallback: replicate
+    return P()
+
+
+def state_shardings(state_shapes, cfg, mesh, batch: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(
+            mesh, state_spec(p, x, cfg, mesh, batch)), state_shapes)
+
+
+def batch_shardings(batch_shapes, mesh, policy: str = "tp"):
+    """Training batch: leading (microbatch) dim replicated, batch dim over DP
+    (plus the model axis under the pure-DP policy)."""
+    dp = dp_axes(mesh)
+    if policy == "dp_only":
+        dp = dp + ("model",)
+
+    def spec(x):
+        b = x.shape[1] if x.ndim >= 3 else x.shape[0]
+        n = 1
+        axes = []
+        for a in dp:
+            if b % (n * mesh.shape[a]) == 0:
+                axes.append(a)
+                n *= mesh.shape[a]
+        axes = tuple(axes) or None
+        if x.ndim >= 3:                           # [n_micro, B, S(, d)]
+            return P(None, axes, *([None] * (x.ndim - 2)))
+        return P(axes, *([None] * (x.ndim - 1)))
+    return jax.tree.map(lambda x: NamedSharding(mesh, spec(x)), batch_shapes)

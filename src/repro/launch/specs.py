@@ -1,0 +1,132 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell — weak-type
+correct, shardable, never allocating device memory.
+
+Three lowerable entry points, chosen by the shape's kind:
+  train    train_step(params, opt_state, batch) — microbatched grad-accum
+  prefill  prefill_step(params, tokens, extras) — full-sequence forward
+  decode   serve_step(params, state, tokens_t)  — one token + KV/GO caches
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import (init_decode_state, loss_fn, model_forward,
+                                model_init, serve_step)
+from repro.optim.adamw import adamw_init
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def extras_specs(cfg: ModelConfig, batch: int, *, decode: bool) -> dict:
+    """Modality-frontend STUBS: precomputed patch/frame embeddings."""
+    dt = jnp.dtype(cfg.dtype)
+    out = {}
+    if cfg.cross_attn_every > 0:
+        key = "memory" if decode else "image_embeds"
+        out[key] = _sds((batch, cfg.num_image_tokens, cfg.d_model), dt)
+    if cfg.encoder_layers > 0:
+        key = "memory" if decode else "audio_frames"
+        out[key] = _sds((batch, cfg.num_audio_frames, cfg.d_model), dt)
+    return out
+
+
+def param_specs(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(partial(model_init, cfg=cfg), key)
+
+
+def opt_specs(param_shapes):
+    return jax.eval_shape(adamw_init, param_shapes)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      micro_global: int) -> dict:
+    assert shape.global_batch % micro_global == 0
+    n = shape.global_batch // micro_global
+    out = {
+        "tokens": _sds((n, micro_global, shape.seq_len), I32),
+        "labels": _sds((n, micro_global, shape.seq_len), I32),
+    }
+    for k, v in extras_specs(cfg, micro_global, decode=False).items():
+        out[k] = _sds((n, *v.shape), v.dtype)
+    return out
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    extras = extras_specs(cfg, batch, decode=True)
+    return jax.eval_shape(
+        partial(init_decode_state, cfg, batch, max_len), extras=extras)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                micro_global: int = 0) -> dict:
+    """All ShapeDtypeStruct inputs for the cell's entry point."""
+    if shape.kind == "train":
+        micro = micro_global or default_micro(cfg, shape)
+        return {
+            "params": param_specs(cfg),
+            "opt_state": opt_specs(param_specs(cfg)),
+            "batch": train_batch_specs(cfg, shape, micro),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": param_specs(cfg),
+            "tokens": _sds((shape.global_batch, shape.seq_len), I32),
+            "extras": extras_specs(cfg, shape.global_batch, decode=False),
+        }
+    # decode: one new token against caches of length seq_len
+    return {
+        "params": param_specs(cfg),
+        "state": decode_state_specs(cfg, shape.global_batch, shape.seq_len),
+        "tokens": _sds((shape.global_batch,), I32),
+    }
+
+
+def default_micro(cfg: ModelConfig, shape: ShapeConfig,
+                  dp_total: int = 32) -> int:
+    """Default global microbatch: one sequence per data-parallel shard."""
+    return min(shape.global_batch, dp_total)
+
+
+# ----------------------------------------------------------- entry points
+
+def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4,
+                    warmup: int = 100, total: int = 10000,
+                    weight_decay: float = 0.1, grad_clip: float = 1.0):
+    from repro.optim.adamw import accumulate_grads, adamw_update, cosine_lr
+
+    def train_step(params, opt_state, batch):
+        grads, loss = accumulate_grads(loss_fn, params, batch, cfg)
+        step_lr = cosine_lr(opt_state.step, base_lr=lr, warmup=warmup,
+                            total=total)
+        params, opt_state, m = adamw_update(
+            params, grads, opt_state, lr=step_lr,
+            weight_decay=weight_decay, grad_clip=grad_clip)
+        m["loss"] = loss
+        return params, opt_state, m
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, extras):
+        x, _ = model_forward(params, tokens, cfg, extras)
+        from repro.models.model import logits_from_hidden
+        return logits_from_hidden(params, x[:, -1, :], cfg)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def step(params, state, tokens_t):
+        return serve_step(params, state, tokens_t, cfg)
+    return step

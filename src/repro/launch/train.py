@@ -1,0 +1,138 @@
+"""End-to-end training driver (CPU-runnable for smoke configs; the same loop
+lowers to the production mesh via launch/sharding.py).
+
+Fault-tolerance loop:
+  * StepSupervisor retries transient step failures and flags stragglers;
+  * committed checkpoints every --ckpt-every steps (async writer);
+  * on RestartRequired the driver restores the latest committed step and
+    continues — bit-exact, because the data pipeline is seekable;
+  * on device-count change (elastic), runtime/elastic.remesh_plan picks a new
+    mesh and the checkpoint is resharded onto it.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama_moe_4_16 --smoke \
+      --steps 50 --seq-len 256 --global-batch 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.models.model import loss_fn, model_init
+from repro.optim.adamw import (accumulate_grads, adamw_init, adamw_update,
+                               cosine_lr)
+from repro.runtime.fault import RestartRequired, StepSupervisor
+
+
+def make_step(cfg, tc: TrainConfig):
+    def train_step(params, opt_state, batch):
+        if batch["tokens"].ndim == 3:          # [n_micro, B, S]
+            grads, loss = accumulate_grads(loss_fn, params, batch, cfg)
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, cfg)
+        lr = cosine_lr(opt_state.step, base_lr=tc.lr, warmup=tc.warmup_steps,
+                       total=tc.steps)
+        params, opt_state, m = adamw_update(
+            params, grads, opt_state, lr=lr,
+            weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
+        m["loss"] = loss
+        return params, opt_state, m
+
+    return jax.jit(train_step, donate_argnums=(0, 1))
+
+
+def run(cfg, tc: TrainConfig, *, resume: bool = True, log=print) -> dict:
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=tc.seq_len,
+                      global_batch=tc.global_batch, seed=tc.seed)
+    corpus = SyntheticCorpus(dcfg)
+
+    key = jax.random.PRNGKey(tc.seed)
+    params = model_init(key, cfg)
+    opt_state = adamw_init(params)
+    start = 0
+    if resume:
+        latest = ckpt.latest_step(tc.ckpt_dir)
+        if latest is not None:
+            params = ckpt.restore(tc.ckpt_dir, latest, params)
+            opt_state = ckpt.restore(
+                tc.ckpt_dir + "/opt", latest, opt_state)
+            start = latest
+            log(f"resumed from step {start}")
+
+    step_fn = make_step(cfg, tc)
+    sup = StepSupervisor()
+    writer = None
+    losses = []
+    t0 = time.time()
+    step = start
+    while step < tc.steps:
+        try:
+            micro = tc.microbatch
+            batch = corpus.batch(step)
+            if micro and tc.global_batch % micro == 0 and micro < tc.global_batch:
+                n = tc.global_batch // micro
+                batch = {k: v.reshape(n, micro, *v.shape[1:])
+                         for k, v in batch.items()}
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, m = sup.run(
+                step_fn, params, opt_state, batch, step=step)
+            losses.append(float(m["loss"]))
+            if step % tc.log_every == 0:
+                log(f"step {step:5d} loss {losses[-1]:.4f} "
+                    f"gnorm {float(m['grad_norm']):.3f} "
+                    f"({time.time()-t0:.1f}s)")
+            if tc.ckpt_every and (step + 1) % tc.ckpt_every == 0:
+                if writer is not None:
+                    writer.wait()
+                ckpt.save(tc.ckpt_dir, step + 1, params, async_=False)
+                writer = ckpt.save(tc.ckpt_dir + "/opt", step + 1,
+                                   opt_state, async_=True)
+            step += 1
+        except RestartRequired as e:
+            log(f"RESTART at step {step}: {e}")
+            latest = ckpt.latest_step(tc.ckpt_dir)
+            if latest is None:
+                raise
+            params = ckpt.restore(tc.ckpt_dir, latest, params)
+            opt_state = ckpt.restore(tc.ckpt_dir + "/opt", latest, opt_state)
+            step = latest
+    if writer is not None:
+        writer.wait()
+    return {"losses": losses, "steps": step - start,
+            "stragglers": sup.stats.stragglers, "retries": sup.stats.retries}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fresh", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tc = TrainConfig(steps=args.steps, seq_len=args.seq_len,
+                     global_batch=args.global_batch, lr=args.lr,
+                     microbatch=args.microbatch, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=args.ckpt_every)
+    out = run(cfg, tc, resume=not args.fresh)
+    print(f"final loss {out['losses'][-1]:.4f} over {out['steps']} steps")
+
+
+if __name__ == "__main__":
+    main()

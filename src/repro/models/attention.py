@@ -1,0 +1,443 @@
+"""Grouped-query attention with a memory-efficient (flash-style) chunked core.
+
+Pure-JAX XLA path used by training / prefill / the multi-pod dry-run. The
+double-chunked online-softmax scan bounds the materialized score block to
+[B, H, cq, ck] regardless of GSPMD propagation, which is what lets the 32k
+prefill cells fit HBM. (On real TPU the Pallas flash kernel would replace the
+inner loop; Pallas cannot be *lowered* for TPU from this CPU-only container,
+so the XLA path is the dry-run/compile path.)
+
+Supports: GQA (num_kv_heads < num_heads), RoPE, causal / sliding-window /
+bidirectional / cross masks, QKV bias (qwen2), logit softcap, single-token
+decode against a KV cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_rope, dense_init, dp_spec, mesh_axis,
+                                 shard_hint, split)
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------- init
+
+def attn_init(key, cfg, *, d_model: int = 0, cross: bool = False) -> dict:
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim()
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = split(key, 4)
+    p = {
+        "wq": dense_init(k1, d, nq * hd, dt),
+        "wk": dense_init(k2, d, nkv * hd, dt),
+        "wv": dense_init(k3, d, nkv * hd, dt),
+        "wo": dense_init(k4, nq * hd, d, dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((nq * hd,), dt)
+        p["bk"] = jnp.zeros((nkv * hd,), dt)
+        p["bv"] = jnp.zeros((nkv * hd,), dt)
+    return p
+
+
+# ----------------------------------------------------------- chunked SDPA core
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "softcap", "ck", "sp_attn"),
+)
+def sdpa_chunked(
+    q: jax.Array,            # [B, Sq, Hq, D]
+    k: jax.Array,            # [B, Sk, Hkv, D]
+    v: jax.Array,            # [B, Sk, Hkv, D]
+    q_pos: jax.Array,        # [Sq] int32 absolute positions of queries
+    k_pos: jax.Array,        # [Sk] int32 absolute positions of keys
+    window,                  # traced int32 scalar: 0 => global, >0 => local span
+    kv_len,                  # traced int32 scalar: keys with k_pos >= kv_len masked
+    *,
+    causal: bool,
+    softcap: float = 0.0,
+    ck: int = 1024,
+    sp_attn: bool = False,
+) -> jax.Array:
+    """Flash-style online-softmax attention, scanned over KV chunks only.
+
+    Queries keep their natural [B, Sq, ...] layout so GSPMD shards the score
+    blocks natively: head-parallel when Hkv divides the model axis (Megatron),
+    else sequence-parallel on Sq (SP attention for odd head counts). The KV
+    chunk axis is the scan axis and is never sharded; materialized score block
+    is [B, Sq_local, Hkv, G, ck].
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    ck = min(ck, Sk)
+    while Sk % ck:
+        ck -= 1
+    nk = Sk // ck
+    scale = 1.0 / (D ** 0.5)
+
+    # --- model-axis work split for the score/PV blocks -------------------
+    # Hkv | M : Megatron head-parallel attention on the kv-head dim.
+    # Hq  | M : GQA with too few kv heads — expand K/V to Hq ("repeat_kv")
+    #           and shard the query-head dim; kv replication cost is tiny.
+    # otherwise: attention replicated on the model axis (odd head counts,
+    #           e.g. 24/28 heads over 16); everything else stays TP.
+    M = mesh_axis("model")
+    dp = dp_spec()
+    expand = M > 1 and Hkv % M != 0 and Hq % M == 0
+    if expand:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        Hkv, G = Hq, 1
+
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, G, D).astype(q.dtype)
+
+    if M > 1 and Hkv % M == 0:
+        qg = shard_hint(qg, dp, None, "model", None, None)
+        k = shard_hint(k, dp, None, "model", None)
+        v = shard_hint(v, dp, None, "model", None)
+    elif sp_attn and M > 1 and Sq % M == 0:
+        # sequence-parallel score blocks (forward-only paths; §Perf knob for
+        # odd head counts — kv replicated, q rows sharded)
+        qg = shard_hint(qg, dp, "model", None, None, None)
+
+    kc = k.reshape(B, nk, ck, Hkv, D).transpose(1, 0, 2, 3, 4)  # [nk,B,ck,Hkv,D]
+    vc = v.reshape(B, nk, ck, Hkv, D).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(nk, ck)
+
+    def kv_step(carry, kv):
+        m, l, acc = carry                              # [B,Sq,Hkv,G](,D)
+        kb, vb, kpb = kv                               # [B,ck,Hkv,D], ..., [ck]
+        s = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", qg, kb, preferred_element_type=jnp.float32)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = kpb[None, :] < kv_len
+        if causal:
+            mask &= kpb[None, :] <= q_pos[:, None]
+        mask &= jnp.where(
+            window > 0, kpb[None, :] > q_pos[:, None] - window, True)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kp))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+# ------------------------------------------------- flash backward (custom VJP)
+
+def _mask_block(kpb, q_pos, kv_len, window, causal: bool):
+    mask = kpb[None, :] < kv_len
+    if causal:
+        mask &= kpb[None, :] <= q_pos[:, None]
+    mask &= jnp.where(window > 0, kpb[None, :] > q_pos[:, None] - window, True)
+    return mask                                            # [Sq, ck]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def sdpa_flash(q, k, v, q_pos, k_pos, window, kv_len, causal, softcap, ck):
+    return _flash_fwd(q, k, v, q_pos, k_pos, window, kv_len,
+                      causal, softcap, ck)[0]
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, window, kv_len, causal, softcap, ck):
+    """Online-softmax forward that also returns the row statistics (m, l) —
+    the only residuals the backward needs besides (q, k, v, out)."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    ckk = min(ck, Sk)
+    while Sk % ckk:
+        ckk -= 1
+    nk = Sk // ckk
+    scale = 1.0 / (D ** 0.5)
+    M = mesh_axis("model")
+    dp = dp_spec()
+    expand = M > 1 and Hkv % M != 0 and Hq % M == 0
+    if expand:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        Hkv, G = Hq, 1
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, G, D).astype(q.dtype)
+    if M > 1 and Hkv % M == 0:
+        qg = shard_hint(qg, dp, None, "model", None, None)
+        k = shard_hint(k, dp, None, "model", None)
+        v = shard_hint(v, dp, None, "model", None)
+    kc = k.reshape(B, nk, ckk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ckk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(nk, ckk)
+
+    def kv_step(carry, kv):
+        m, l, acc = carry
+        kb, vb, kpb = kv
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kb,
+                       preferred_element_type=jnp.float32)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _mask_block(kpb, q_pos, kv_len, window, causal)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        kv_step, (m0, l0, a0), (kc, vc, kp), unroll=1)
+    l = jnp.maximum(l, 1e-20)
+    out = (acc / l[..., None]).reshape(B, Sq, Hq, D).astype(q.dtype)
+    lse = m + jnp.log(l)                                    # [B,Sq,Hkv,G]
+    return out, lse
+
+
+def _flash_fwd_vjp(q, k, v, q_pos, k_pos, window, kv_len, causal, softcap, ck):
+    out, lse = _flash_fwd(q, k, v, q_pos, k_pos, window, kv_len,
+                          causal, softcap, ck)
+    return out, (q, k, v, out, lse, q_pos, k_pos, window, kv_len)
+
+
+def _flash_bwd(causal, softcap, ck, res, dout):
+    """Chunk-streamed backward: recompute p per kv chunk from (q, k, lse);
+    never materializes the [Sq, Sk] score matrix nor stacks per-chunk
+    intermediates (scan carries are only dq)."""
+    q, k, v, out, lse, q_pos, k_pos, window, kv_len = res
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    ckk = min(ck, Sk)
+    while Sk % ckk:
+        ckk -= 1
+    nk = Sk // ckk
+    scale = 1.0 / (D ** 0.5)
+    M = mesh_axis("model")
+    dp = dp_spec()
+    expand = M > 1 and Hkv % M != 0 and Hq % M == 0
+    if expand:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        Hkv_e, G_e = Hq, 1
+    else:
+        Hkv_e, G_e = Hkv, G
+    qg = q.astype(jnp.float32).reshape(B, Sq, Hkv_e, G_e, D) * scale
+    dog = dout.astype(jnp.float32).reshape(B, Sq, Hkv_e, G_e, D)
+    og = out.astype(jnp.float32).reshape(B, Sq, Hkv_e, G_e, D)
+    Drow = (dog * og).sum(-1)                               # [B,Sq,Hkv_e,G_e]
+    if M > 1 and Hkv_e % M == 0:
+        qg = shard_hint(qg.astype(q.dtype), dp, None, "model", None, None)
+        dog = shard_hint(dog, dp, None, "model", None, None)
+        k = shard_hint(k, dp, None, "model", None)
+        v = shard_hint(v, dp, None, "model", None)
+    kc = k.reshape(B, nk, ckk, Hkv_e, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ckk, Hkv_e, D).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(nk, ckk)
+
+    def kv_step(dq, kv):
+        kb, vb, kpb = kv
+        sraw = jnp.einsum("bqhgd,bkhd->bqhgk", qg.astype(q.dtype), kb,
+                          preferred_element_type=jnp.float32)
+        if softcap > 0:
+            t = jnp.tanh(sraw / softcap)
+            s = softcap * t
+            dsoft = 1.0 - t * t                             # d softcap / d sraw
+        else:
+            s = sraw
+            dsoft = None
+        mask = _mask_block(kpb, q_pos, kv_len, window, causal)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                     # [B,Sq,Hkv,G,ck]
+        dv = jnp.einsum("bqhgk,bqhgd->bkhd", p, dog,
+                        preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqhgd,bkhd->bqhgk", dog.astype(v.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - Drow[..., None])
+        if dsoft is not None:
+            ds = ds * dsoft
+        ds = jnp.where(mask[None, :, None, None, :], ds, 0.0)
+        dq = dq + jnp.einsum("bqhgk,bkhd->bqhgd", ds.astype(k.dtype), kb,
+                             preferred_element_type=jnp.float32)
+        dk = jnp.einsum("bqhgk,bqhgd->bkhd", ds, qg,
+                        preferred_element_type=jnp.float32)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((B, Sq, Hkv_e, G_e, D), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(kv_step, dq0, (kc, vc, kp))
+    dq = (dq * scale).reshape(B, Sq, Hq, D).astype(q.dtype)
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, Sk, Hkv_e, D)
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, Sk, Hkv_e, D)
+    if expand:
+        dk = dk.reshape(B, Sk, Hkv, G, D).sum(3)
+        dv = dv.reshape(B, Sk, Hkv, G, D).sum(3)
+    dk = dk.astype(k.dtype)
+    dv = dv.astype(v.dtype)
+    zero_i = jnp.zeros_like(q_pos)
+    return (dq, dk, dv, zero_i, jnp.zeros_like(k_pos),
+            jnp.zeros_like(jnp.asarray(0, jnp.int32)),
+            jnp.zeros_like(jnp.asarray(0, jnp.int32)))
+
+
+sdpa_flash.defvjp(_flash_fwd_vjp, _flash_bwd)
+
+
+# ------------------------------------------------------------------- full pass
+
+def attn_forward(
+    params: dict,
+    x: jax.Array,                 # [B, S, D]
+    *,
+    cfg,
+    positions: jax.Array,         # [S]
+    window=0,                     # traced scalar ok (scan-over-layers)
+    causal: bool = True,
+    kv_source: jax.Array = None,  # cross-attention memory [B, Sk, D]
+    use_rope: bool = True,
+    return_kv: bool = False,
+) -> jax.Array:
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+
+    q = x @ params["wq"]
+    src = x if kv_source is None else kv_source
+    k = src @ params["wk"]
+    v = src @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    Sk = src.shape[1]
+    q = q.reshape(B, S, nq, hd)
+    k = k.reshape(B, Sk, nkv, hd)
+    v = v.reshape(B, Sk, nkv, hd)
+
+    if use_rope and kv_source is None:
+        from repro.models.layers import rope_angles
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+
+    k_pos = positions if kv_source is None else jnp.arange(Sk, dtype=jnp.int32)
+    if getattr(cfg, "sp_attn", False):
+        # sequence-parallel score blocks (forward-only serving paths)
+        out = sdpa_chunked(
+            q, k, v, positions.astype(jnp.int32), k_pos.astype(jnp.int32),
+            jnp.asarray(window, jnp.int32), jnp.asarray(Sk + 10**9, jnp.int32),
+            causal=causal and kv_source is None, softcap=cfg.logit_softcap,
+            sp_attn=True,
+        )
+    else:
+        # flash custom-VJP core: backward recomputes score blocks chunk-wise
+        # instead of letting scan-AD stack fp32 intermediates (§Perf H3b)
+        out = sdpa_flash(
+            q, k, v, positions.astype(jnp.int32), k_pos.astype(jnp.int32),
+            jnp.asarray(window, jnp.int32), jnp.asarray(Sk + 10**9, jnp.int32),
+            causal and kv_source is None, cfg.logit_softcap, 1024,
+        )
+    out = out.reshape(B, S, nq * hd) @ params["wo"]
+    # pin the residual back to the Megatron layout (batch-sharded, replicated
+    # on the model axis) so sequence-parallel attention for odd head counts
+    # does not flip the MLP/MoE strategy to replicated-weight SP
+    out = shard_hint(out, dp_spec(), None, None)
+    if return_kv:
+        return out, k, v
+    return out
+
+
+# --------------------------------------------------------------------- decode
+
+def _decode_sdpa(q, k, v, mask, softcap_val: float):
+    """Direct single-query SDPA — no scan, so GSPMD can shard the KV-cache
+    sequence dim (scores get partitioned; softmax max/sum become all-reduces).
+    q [B,1,Hq,D]; k/v [B,S,Hkv,D]; mask [B?,S] or [S] bool."""
+    B, _, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k,
+                   preferred_element_type=jnp.float32) / (D ** 0.5)
+    if softcap_val > 0:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+    m = mask if mask.ndim == 2 else mask[None]
+    s = jnp.where(m[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, D)
+
+
+def attn_decode(
+    params: dict,
+    x_t: jax.Array,               # [B, 1, D] current token
+    cache_k: jax.Array,           # [B, Smax, Hkv, hd]
+    cache_v: jax.Array,
+    t,                            # traced int32 scalar: current position
+    *,
+    cfg,
+    window=0,
+    use_rope: bool = True,
+) -> tuple:
+    B = x_t.shape[0]
+    hd = cfg.resolved_head_dim()
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+
+    q = x_t @ params["wq"]
+    k = x_t @ params["wk"]
+    v = x_t @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, 1, nq, hd)
+    k = k.reshape(B, 1, nkv, hd)
+    v = v.reshape(B, 1, nkv, hd)
+
+    if use_rope:
+        from repro.models.layers import rope_angles
+        pos = jnp.asarray(t, jnp.int32)[None]
+        cos, sin = rope_angles(pos, hd, cfg.rope_theta)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, t, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, t, 0, 0))
+
+    Smax = cache_k.shape[1]
+    k_pos = jnp.arange(Smax, dtype=jnp.int32)
+    mask = k_pos <= t
+    w = jnp.asarray(window, jnp.int32)
+    mask &= jnp.where(w > 0, k_pos > t - w, True)
+    out = _decode_sdpa(q, cache_k, cache_v, mask, cfg.logit_softcap)
+    out = out.astype(x_t.dtype).reshape(B, 1, nq * hd) @ params["wo"]
+    return out, cache_k, cache_v
+
+
+def cross_attn_decode(params: dict, x_t: jax.Array, memory: jax.Array, *, cfg):
+    """Single-token cross attention over a fixed encoder/image memory."""
+    B = x_t.shape[0]
+    hd = cfg.resolved_head_dim()
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    Sk = memory.shape[1]
+    q = (x_t @ params["wq"]).reshape(B, 1, nq, hd)
+    k = (memory @ params["wk"]).reshape(B, Sk, nkv, hd)
+    v = (memory @ params["wv"]).reshape(B, Sk, nkv, hd)
+    mask = jnp.ones((Sk,), bool)
+    out = _decode_sdpa(q, k, v, mask, cfg.logit_softcap)
+    return out.astype(x_t.dtype).reshape(B, 1, nq * hd) @ params["wo"]

@@ -1,0 +1,152 @@
+"""Residual blocks assembled from attention / MoE / SSM / xLSTM primitives.
+
+Every block is an (init, apply) pair over plain dict pytrees, with a matching
+single-token decode variant that threads its cache/state explicitly. Blocks
+are *stackable*: inits are vmap-safe so whole layer stacks can be built with
+`stack_init` and consumed by `jax.lax.scan`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import moe as MOE
+from repro.core.go_cache import go_cache_step
+from repro.models import attention as ATT
+from repro.models.layers import (gelu_mlp, gelu_mlp_init, mlp, mlp_init,
+                                 rmsnorm, rmsnorm_init)
+from repro.models.ssm import mamba2_decode, mamba2_forward, mamba2_init
+from repro.models.xlstm import mlstm_block, mlstm_block_init, slstm_block, slstm_block_init
+
+
+# ------------------------------------------------------- attention (+FFN) block
+
+def attn_block_init(key, cfg, *, use_moe: bool = False, cross: bool = False,
+                    gelu: bool = False) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "attn": ATT.attn_init(k1, cfg, cross=cross),
+        "ln2": rmsnorm_init(cfg.d_model),
+    }
+    if use_moe:
+        p["moe"] = MOE.moe_init(k2, cfg.d_model, cfg.moe, jnp.dtype(cfg.dtype))
+    elif cfg.d_ff > 0:
+        p["mlp"] = (gelu_mlp_init if gelu else mlp_init)(
+            k2, cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype))
+    return p
+
+
+def _ffn_apply(params: dict, x: jax.Array, cfg, group_of_expert) -> tuple:
+    """Post-attention FFN sublayer (dense MLP or MoE). x [B,S,d]."""
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    aux = None
+    if "moe" in params:
+        B, S, d = h.shape
+        # Per-sequence routing (vmap over batch), two reasons:
+        #  * the sort-based dispatch never crosses the batch dim, so GSPMD
+        #    keeps dispatch buffers batch-sharded (a global argsort over
+        #    B*S would gather the whole batch onto every device);
+        #  * expert-choice selection per sequence is what the GO cache
+        #    serves, so train == serve semantics.
+        if cfg.moe.routing == "expert_choice":
+            y, aux = jax.vmap(
+                lambda xb: MOE.expert_choice_forward(params["moe"], xb, cfg.moe)
+            )(h)
+        elif MOE.ep_available(cfg.moe):
+            y, aux = MOE.moe_forward_ep(params["moe"], h, cfg.moe)
+        else:
+            y, aux = jax.vmap(
+                lambda xb: MOE.moe_forward(params["moe"], xb, cfg.moe,
+                                           group_of_expert))(h)
+            aux = {"counts": aux["counts"].sum(0),
+                   "balance_loss": aux["balance_loss"].mean(),
+                   "dropped": aux["dropped"].sum()}
+    elif "mlp" in params:
+        w = params["mlp"]
+        y = gelu_mlp(w, h) if "wg" not in w else mlp(w, h)
+    else:
+        y = jnp.zeros_like(h)
+    return x + y, aux
+
+
+def attn_block(params: dict, x: jax.Array, *, cfg, positions, window=0,
+               causal: bool = True, group_of_expert=None, kv_source=None,
+               use_rope: bool = True, return_kv: bool = False) -> tuple:
+    """Full-sequence attention block. Returns (x, aux) with MoE aux or None;
+    with return_kv also the post-RoPE (k, v) for KV-cache prefill."""
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    a = ATT.attn_forward(params["attn"], h, cfg=cfg, positions=positions,
+                         window=window, causal=causal, kv_source=kv_source,
+                         use_rope=use_rope, return_kv=return_kv)
+    if return_kv:
+        a, k, v = a
+    x = x + a
+    x, aux = _ffn_apply(params, x, cfg, group_of_expert)
+    if return_kv:
+        return x, aux, k, v
+    return x, aux
+
+
+def attn_block_decode(params: dict, x_t: jax.Array, cache_k, cache_v, t, *,
+                      cfg, window=0, group_of_expert=None,
+                      go_cache=None) -> tuple:
+    """One-token decode. x_t [B,1,d]. Returns (x, ck, cv, go_cache, aux)."""
+    h = rmsnorm(params["ln1"], x_t, cfg.norm_eps)
+    a, ck, cv = ATT.attn_decode(params["attn"], h, cache_k, cache_v, t,
+                                cfg=cfg, window=window)
+    x = x_t + a
+    h2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    aux = None
+    if "moe" in params:
+        B = h2.shape[0]
+        h2f = h2[:, 0]                                   # [B, d]
+        if go_cache is not None:
+            # C4: expert-choice decode through the GO cache
+            res = go_cache_step(
+                go_cache, h2f, t, params["moe"]["gate"],
+                lambda xt: MOE.expert_ffn_all(params["moe"], xt))
+            y = res.y + MOE._shared_out(params["moe"], h2f)
+            go_cache = res.cache
+            aux = {"selected": res.selected}
+        else:
+            y = MOE.token_choice_decode(params["moe"], h2f, cfg.moe)
+        x = x + y[:, None, :]
+    elif "mlp" in params:
+        w = params["mlp"]
+        y = gelu_mlp(w, h2) if "wg" not in w else mlp(w, h2)
+        x = x + y
+    return x, ck, cv, go_cache, aux
+
+
+def cross_block_decode(params: dict, x_t: jax.Array, memory, *, cfg) -> jax.Array:
+    """Cross-attention block decode (static memory, no cache growth)."""
+    h = rmsnorm(params["ln1"], x_t, cfg.norm_eps)
+    a = ATT.cross_attn_decode(params["attn"], h, memory, cfg=cfg)
+    x = x_t + a
+    x, _ = _ffn_apply(params, x, cfg, None)
+    return x
+
+
+# ------------------------------------------------------------- mamba2 block
+
+def mamba2_block_init(key, cfg) -> dict:
+    return {"ln": rmsnorm_init(cfg.d_model), "mix": mamba2_init(key, cfg)}
+
+
+def mamba2_block(params: dict, x: jax.Array, *, cfg) -> jax.Array:
+    h = rmsnorm(params["ln"], x, cfg.norm_eps)
+    return x + mamba2_forward(params["mix"], h, cfg=cfg)
+
+
+def mamba2_block_decode(params: dict, x_t: jax.Array, state, *, cfg) -> tuple:
+    h = rmsnorm(params["ln"], x_t, cfg.norm_eps)
+    y, new_state = mamba2_decode(params["mix"], h, state, cfg=cfg)
+    return x_t + y, new_state
+
+
+__all__ = [
+    "attn_block_init", "attn_block", "attn_block_decode", "cross_block_decode",
+    "mamba2_block_init", "mamba2_block", "mamba2_block_decode",
+    "mlstm_block_init", "mlstm_block", "slstm_block_init", "slstm_block",
+]

@@ -1,0 +1,647 @@
+"""Language-model assembly for every assigned architecture family.
+
+One schema (`ModelConfig`) drives five structural families:
+
+  attn      dense / MoE decoder-only transformers (starcoder2, granite-8b,
+            qwen2, gemma3, deepseek-moe, granite-moe, llama_moe_4_16)
+  attn+enc  whisper-style encoder-decoder (encoder_layers > 0)
+  attn+x    llama-3.2-vision: cross-attention image layers every Nth layer
+  xlstm     mLSTM stacks with interleaved sLSTM blocks
+  mamba2    zamba2: Mamba2 stack with a weight-shared attention block
+
+Public API:
+  model_init(key, cfg)                                   -> params
+  model_forward(params, tokens, cfg, extras)             -> (x_final, aux_loss)
+  logits_from_hidden(params, x, cfg)                     -> [.., V]
+  loss_fn(params, batch, cfg)                            -> (loss, metrics)
+  init_decode_state(cfg, batch, max_len, extras)         -> state pytree
+  prefill(params, tokens, cfg, extras)                   -> (state, last_logits)
+  serve_step(params, state, tokens_t, cfg)               -> (logits, state)
+
+All layer stacks are scanned (jax.lax.scan over stacked params) so the HLO
+stays compact at 62-100 layers; heterogeneous families scan homogeneous
+segments. `cfg.remat` wraps scan bodies in jax.checkpoint.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import moe as MOE
+from repro.core.go_cache import GOCache, go_cache_init, go_cache_prefill
+from repro.core.grouping import default_groups, group_of_expert_from_groups
+from repro.models import attention as ATT
+from repro.models import blocks as B
+from repro.models.layers import (dense_init, embed_init, rmsnorm,
+                                 rmsnorm_init, split, stack_init)
+from repro.models.ssm import mamba2_init_state
+from repro.models.xlstm import mlstm_init_state, slstm_init_state
+
+
+# ----------------------------------------------------------------- structure
+
+def layer_windows(cfg) -> np.ndarray:
+    """Per-layer sliding-window spans (0 = global attention)."""
+    L = cfg.num_layers
+    if cfg.local_global_ratio > 0:
+        r = cfg.local_global_ratio
+        return np.array(
+            [cfg.sliding_window if (l % (r + 1)) != r else 0 for l in range(L)],
+            np.int32)
+    if cfg.sliding_window > 0:
+        return np.full(L, cfg.sliding_window, np.int32)
+    return np.zeros(L, np.int32)
+
+
+def expert_groups(cfg) -> jax.Array | None:
+    """C2 grouping -> [E] group id per expert (None for non-MoE)."""
+    if cfg.moe is None:
+        return None
+    return jnp.asarray(group_of_expert_from_groups(default_groups(cfg.moe)))
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _xlstm_segments(cfg):
+    """(num_segments, mlstm_per_segment); sLSTM closes each segment."""
+    if cfg.slstm_every <= 0:
+        return 1, cfg.num_layers
+    assert cfg.num_layers % cfg.slstm_every == 0
+    return cfg.num_layers // cfg.slstm_every, cfg.slstm_every - 1
+
+
+def _zamba_segments(cfg):
+    if cfg.attn_every <= 0:
+        return 0, cfg.num_layers
+    return cfg.num_layers // cfg.attn_every, cfg.attn_every
+
+
+# ----------------------------------------------------------------------- init
+
+def model_init(key, cfg) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    ks = split(key, 10)
+    p = {
+        "embed": embed_init(ks[0], cfg.vocab_size, d, dt),
+        "final_norm": rmsnorm_init(d),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], d, cfg.vocab_size, dt)
+
+    if cfg.block == "attn":
+        use_moe = cfg.moe is not None
+        if cfg.encoder_layers > 0:
+            # whisper-style enc-dec (no RoPE: learned decoder positions);
+            # table sized for the assigned decode_32k cell
+            p["pos_embed"] = (jax.random.normal(
+                ks[2], (40960, d), jnp.float32) * 0.02).astype(dt)
+            p["encoder"] = stack_init(
+                ks[3], cfg.encoder_layers,
+                lambda k: B.attn_block_init(k, cfg, gelu=True))
+            p["dec_self"] = stack_init(
+                ks[4], cfg.num_layers, _dec_self_init_fn(cfg))
+            p["dec_cross"] = stack_init(
+                ks[5], cfg.num_layers,
+                lambda k: B.attn_block_init(k, cfg, cross=True, gelu=True))
+            p["enc_norm"] = rmsnorm_init(d)
+        elif cfg.cross_attn_every > 0:
+            every = cfg.cross_attn_every
+            assert cfg.num_layers % every == 0
+            n_sup = cfg.num_layers // every
+            n_self = every - 1
+            p["layers"] = stack_init(
+                ks[3], n_sup,
+                lambda k: stack_init(k, n_self,
+                                     lambda k2: B.attn_block_init(k2, cfg)))
+            p["cross_layers"] = stack_init(
+                ks[4], n_sup,
+                lambda k: B.attn_block_init(k, cfg, cross=True))
+        else:
+            p["layers"] = stack_init(
+                ks[3], cfg.num_layers,
+                lambda k: B.attn_block_init(k, cfg, use_moe=use_moe))
+    elif cfg.block == "xlstm":
+        n_seg, n_m = _xlstm_segments(cfg)
+        p["mlayers"] = stack_init(
+            ks[3], n_seg,
+            lambda k: stack_init(k, n_m, lambda k2: B.mlstm_block_init(k2, cfg)))
+        p["slayers"] = stack_init(
+            ks[4], n_seg, lambda k: B.slstm_block_init(k, cfg))
+    elif cfg.block == "mamba2":
+        p["layers"] = stack_init(
+            ks[3], cfg.num_layers, lambda k: B.mamba2_block_init(k, cfg))
+        if cfg.attn_every > 0:
+            p["shared_attn"] = B.attn_block_init(ks[4], cfg)
+    else:
+        raise ValueError(cfg.block)
+    return p
+
+
+def _dec_self_init_fn(cfg):
+    def init(k):
+        return {"ln1": rmsnorm_init(cfg.d_model),
+                "attn": ATT.attn_init(k, cfg)}
+    return init
+
+
+# -------------------------------------------------------------------- forward
+
+def model_forward(params: dict, tokens: jax.Array, cfg, extras: dict | None = None):
+    """tokens [B, S] -> (x_final [B, S, d] normalized, aux_balance_loss)."""
+    extras = extras or {}
+    x = params["embed"][tokens]
+    if cfg.block == "attn" and cfg.encoder_layers > 0:
+        return _fwd_whisper(params, x, cfg, extras)
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if cfg.block == "attn" and cfg.cross_attn_every > 0:
+        return _fwd_vlm(params, x, positions, cfg, extras)
+    if cfg.block == "attn":
+        return _fwd_attn(params, x, positions, cfg)
+    if cfg.block == "xlstm":
+        return _fwd_xlstm(params, x, cfg)
+    if cfg.block == "mamba2":
+        return _fwd_zamba(params, x, positions, cfg)
+    raise ValueError(cfg.block)
+
+
+def _fwd_attn(params, x, positions, cfg):
+    goe = expert_groups(cfg)
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(carry, xs):
+        x, bal = carry
+        lp, w = xs
+        x, aux = B.attn_block(lp, x, cfg=cfg, positions=positions, window=w,
+                              group_of_expert=goe)
+        if aux is not None and "balance_loss" in aux:
+            bal = bal + jnp.sum(aux["balance_loss"])
+        return (x, bal), None
+
+    (x, bal), _ = jax.lax.scan(
+        _maybe_remat(body, cfg), (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], windows))
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), bal
+
+
+def _fwd_vlm(params, x, positions, cfg, extras):
+    memory = extras["image_embeds"]                    # [B, I, d] stub patches
+
+    def body(x, xs):
+        self_stack, cross_p = xs
+        n_self = cfg.cross_attn_every - 1
+        for i in range(n_self):
+            lp = jax.tree.map(lambda a: a[i], self_stack)
+            x, _ = B.attn_block(lp, x, cfg=cfg, positions=positions)
+        xc, _ = B.attn_block(cross_p, x, cfg=cfg, positions=positions,
+                             causal=False, kv_source=memory, use_rope=False)
+        return xc, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x,
+                        (params["layers"], params["cross_layers"]))
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), jnp.zeros((), jnp.float32)
+
+
+def _fwd_whisper(params, x, cfg, extras):
+    frames = extras["audio_frames"]                    # [B, F, d] stub frames
+    F = frames.shape[1]
+    enc_pos = jnp.arange(F, dtype=jnp.int32)
+
+    def enc_body(h, lp):
+        h, _ = B.attn_block(lp, h, cfg=cfg, positions=enc_pos, causal=False,
+                            use_rope=False)
+        return h, None
+
+    h, _ = jax.lax.scan(_maybe_remat(enc_body, cfg), frames, params["encoder"])
+    memory = rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+    S = x.shape[1]
+    x = x + params["pos_embed"][:S]
+    dec_pos = jnp.arange(S, dtype=jnp.int32)
+
+    def dec_body(x, xs):
+        sp, cp = xs
+        hh = rmsnorm(sp["ln1"], x, cfg.norm_eps)
+        x = x + ATT.attn_forward(sp["attn"], hh, cfg=cfg, positions=dec_pos,
+                                 causal=True, use_rope=False)
+        x, _ = B.attn_block(cp, x, cfg=cfg, positions=dec_pos, causal=False,
+                            kv_source=memory, use_rope=False)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(dec_body, cfg), x,
+                        (params["dec_self"], params["dec_cross"]))
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), jnp.zeros((), jnp.float32)
+
+
+def _fwd_xlstm(params, x, cfg):
+    n_seg, n_m = _xlstm_segments(cfg)
+
+    def m_body(x, lp):
+        return B.mlstm_block(lp, x, cfg=cfg), None
+
+    for s in range(n_seg):
+        mstack = jax.tree.map(lambda a: a[s], params["mlayers"])
+        x, _ = jax.lax.scan(_maybe_remat(m_body, cfg), x, mstack)
+        sp = jax.tree.map(lambda a: a[s], params["slayers"])
+        x = B.slstm_block(sp, x, cfg=cfg)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), jnp.zeros((), jnp.float32)
+
+
+def _fwd_zamba(params, x, positions, cfg):
+    n_app, seg = _zamba_segments(cfg)
+
+    def m_body(x, lp):
+        return B.mamba2_block(lp, x, cfg=cfg), None
+
+    if n_app == 0:
+        x, _ = jax.lax.scan(_maybe_remat(m_body, cfg), x, params["layers"])
+    else:
+        for s in range(n_app):
+            stack = jax.tree.map(lambda a: a[s * seg:(s + 1) * seg],
+                                 params["layers"])
+            x, _ = jax.lax.scan(_maybe_remat(m_body, cfg), x, stack)
+            x, _ = B.attn_block(params["shared_attn"], x, cfg=cfg,
+                                positions=positions)
+        rem = cfg.num_layers - n_app * seg
+        if rem:
+            stack = jax.tree.map(lambda a: a[n_app * seg:], params["layers"])
+            x, _ = jax.lax.scan(_maybe_remat(m_body, cfg), x, stack)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), jnp.zeros((), jnp.float32)
+
+
+# ----------------------------------------------------------------------- loss
+
+def logits_from_hidden(params: dict, x: jax.Array, cfg) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def chunked_xent(params, x, labels, cfg, chunk: int = 512):
+    """Cross-entropy without materializing [B, S, V]: scan over S chunks.
+    x [B,S,d]; labels [B,S] int32 (-1 = masked). Returns (sum_loss, count)."""
+    Bsz, S, d = x.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    n = S // chunk
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    xc = x.reshape(Bsz, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(Bsz, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        loss, cnt = carry
+        xb, lb = inp                                    # [B, c, d], [B, c]
+        logits = (xb @ w.astype(xb.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        mask = (lb >= 0).astype(jnp.float32)
+        loss = loss + jnp.sum((lse - gold) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (loss, cnt), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    (loss, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc))
+    return loss, cnt
+
+
+def loss_fn(params: dict, batch: dict, cfg):
+    """batch: tokens [B,S], labels [B,S] (+ stub extras). -> (loss, metrics)."""
+    extras = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+    x, bal = model_forward(params, batch["tokens"], cfg, extras)
+    loss_sum, cnt = chunked_xent(params, x, batch["labels"], cfg)
+    ce = loss_sum / jnp.maximum(cnt, 1.0)
+    coef = cfg.moe.balance_coef if cfg.moe is not None else 0.0
+    total = ce + coef * bal / max(1, cfg.num_layers)
+    return total, {"ce": ce, "balance": bal}
+
+
+# --------------------------------------------------------------- decode state
+
+def kv_cache_spec(cfg, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim()
+    return (batch, max_len, cfg.num_kv_heads, hd)
+
+
+def init_decode_state(cfg, batch: int, max_len: int,
+                      extras: dict | None = None) -> dict:
+    """Zero-initialized decode state. `extras` may carry the cross-attention
+    memory (image/audio embeds already encoded) for vlm/enc-dec archs."""
+    extras = extras or {}
+    dt = jnp.dtype(cfg.dtype)
+    st = {"t": jnp.zeros((), jnp.int32)}
+    shp = kv_cache_spec(cfg, batch, max_len)
+
+    if cfg.block == "attn" and cfg.encoder_layers > 0:
+        L = cfg.num_layers
+        st["k"] = jnp.zeros((L, *shp), dt)
+        st["v"] = jnp.zeros((L, *shp), dt)
+        st["memory"] = extras.get(
+            "memory", jnp.zeros((batch, cfg.num_audio_frames, cfg.d_model), dt))
+    elif cfg.block == "attn" and cfg.cross_attn_every > 0:
+        n_sup = cfg.num_layers // cfg.cross_attn_every
+        n_self = cfg.cross_attn_every - 1
+        st["k"] = jnp.zeros((n_sup * n_self, *shp), dt)   # flat self-layer idx
+        st["v"] = jnp.zeros((n_sup * n_self, *shp), dt)
+        st["memory"] = extras.get(
+            "memory", jnp.zeros((batch, cfg.num_image_tokens, cfg.d_model), dt))
+    elif cfg.block == "attn":
+        L = cfg.num_layers
+        st["k"] = jnp.zeros((L, *shp), dt)
+        st["v"] = jnp.zeros((L, *shp), dt)
+        if cfg.moe is not None and cfg.moe.routing == "expert_choice" \
+                and cfg.moe.go_cache:
+            e = cfg.moe
+            per = go_cache_init(batch, e.num_experts, e.top_k, cfg.d_model, dt)
+            st["go"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (L, *a.shape)), per)
+    elif cfg.block == "xlstm":
+        n_seg, n_m = _xlstm_segments(cfg)
+        per_m = mlstm_init_state(cfg, batch)
+        st["mlstm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_seg, n_m, *a.shape)), per_m)
+        per_s = slstm_init_state(cfg, batch)
+        st["slstm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_seg, *a.shape)), per_s)
+    elif cfg.block == "mamba2":
+        per = mamba2_init_state(cfg, batch)
+        st["ssm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), per)
+        n_app, _ = _zamba_segments(cfg)
+        if n_app:
+            st["k"] = jnp.zeros((n_app, *shp), dt)
+            st["v"] = jnp.zeros((n_app, *shp), dt)
+    return st
+
+
+# ----------------------------------------------------------------- serve step
+
+def serve_step(params: dict, state: dict, tokens_t: jax.Array, cfg):
+    """One decode step. tokens_t [B] int32 -> (logits [B, V] fp32, state)."""
+    x = params["embed"][tokens_t][:, None, :]            # [B, 1, d]
+    t = state["t"]
+
+    if cfg.block == "attn" and cfg.encoder_layers > 0:
+        x, state = _dec_whisper(params, x, state, cfg)
+    elif cfg.block == "attn" and cfg.cross_attn_every > 0:
+        x, state = _dec_vlm(params, x, state, cfg)
+    elif cfg.block == "attn":
+        x, state = _dec_attn(params, x, state, cfg)
+    elif cfg.block == "xlstm":
+        x, state = _dec_xlstm(params, x, state, cfg)
+    elif cfg.block == "mamba2":
+        x, state = _dec_zamba(params, x, state, cfg)
+    else:
+        raise ValueError(cfg.block)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params, x[:, 0, :], cfg)
+    state["t"] = t + 1
+    return logits, state
+
+
+def _dec_attn(params, x, state, cfg):
+    t = state["t"]
+    windows = jnp.asarray(layer_windows(cfg))
+    goe = expert_groups(cfg)
+    has_go = "go" in state
+
+    # The full KV (and GO) caches ride in the scan CARRY and are updated
+    # layer-by-layer with dynamic_update_index — XLA keeps them in place
+    # (donated buffers), instead of double-buffering a stacked ys output.
+    def body(carry, xs):
+        x, K, V, go, l = carry
+        lp, w = xs
+        ck = jax.lax.dynamic_index_in_dim(K, l, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(V, l, 0, keepdims=False)
+        go_l = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False),
+            go) if has_go else None
+        x, ck, cv, go_l, _ = B.attn_block_decode(
+            lp, x, ck, cv, t, cfg=cfg, window=w, group_of_expert=goe,
+            go_cache=go_l)
+        K = jax.lax.dynamic_update_index_in_dim(K, ck.astype(K.dtype), l, 0)
+        V = jax.lax.dynamic_update_index_in_dim(V, cv.astype(V.dtype), l, 0)
+        if has_go:
+            go = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), l, 0), go, go_l)
+        return (x, K, V, go, l + 1), None
+
+    go0 = state.get("go")
+    carry0 = (x, state["k"], state["v"], go0, jnp.zeros((), jnp.int32))
+    (x, K, V, go, _), _ = jax.lax.scan(
+        body, carry0, (params["layers"], windows))
+    state["k"], state["v"] = K, V
+    if has_go:
+        state["go"] = go
+    return x, state
+
+
+def _dec_vlm(params, x, state, cfg):
+    t = state["t"]
+    memory = state["memory"]
+    n_self = cfg.cross_attn_every - 1
+
+    def body(carry, xs):
+        x, K, V, sup = carry                 # K/V [n_sup*n_self, B, S, h, hd]
+        self_stack, cross_p = xs
+        for i in range(n_self):
+            lp = jax.tree.map(lambda a: a[i], self_stack)
+            l = sup * n_self + i
+            ck = jax.lax.dynamic_index_in_dim(K, l, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(V, l, 0, keepdims=False)
+            x, ck, cv, _, _ = B.attn_block_decode(lp, x, ck, cv, t, cfg=cfg)
+            K = jax.lax.dynamic_update_index_in_dim(
+                K, ck.astype(K.dtype), l, 0)
+            V = jax.lax.dynamic_update_index_in_dim(
+                V, cv.astype(V.dtype), l, 0)
+        x = B.cross_block_decode(cross_p, x, memory, cfg=cfg)
+        return (x, K, V, sup + 1), None
+
+    carry0 = (x, state["k"], state["v"], jnp.zeros((), jnp.int32))
+    (x, K, V, _), _ = jax.lax.scan(
+        body, carry0, (params["layers"], params["cross_layers"]))
+    state["k"], state["v"] = K, V
+    return x, state
+
+
+def _dec_whisper(params, x, state, cfg):
+    t = state["t"]
+    memory = state["memory"]
+    x = x + params["pos_embed"][state["t"]][None, None, :]
+
+    def body(carry, xs):
+        x, K, V, l = carry
+        sp, cp = xs
+        ck = jax.lax.dynamic_index_in_dim(K, l, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(V, l, 0, keepdims=False)
+        h = rmsnorm(sp["ln1"], x, cfg.norm_eps)
+        a, ck, cv = ATT.attn_decode(sp["attn"], h, ck, cv, t, cfg=cfg,
+                                    use_rope=False)
+        x = x + a
+        x = B.cross_block_decode(cp, x, memory, cfg=cfg)
+        K = jax.lax.dynamic_update_index_in_dim(K, ck.astype(K.dtype), l, 0)
+        V = jax.lax.dynamic_update_index_in_dim(V, cv.astype(V.dtype), l, 0)
+        return (x, K, V, l + 1), None
+
+    carry0 = (x, state["k"], state["v"], jnp.zeros((), jnp.int32))
+    (x, K, V, _), _ = jax.lax.scan(
+        body, carry0, (params["dec_self"], params["dec_cross"]))
+    state["k"], state["v"] = K, V
+    return x, state
+
+
+def _dec_xlstm(params, x, state, cfg):
+    n_seg, n_m = _xlstm_segments(cfg)
+
+    def m_body(x, xs):
+        lp, st = xs
+        x, st2 = B.mlstm_block(lp, x, cfg=cfg, decode_state=st)
+        return x, st2
+
+    new_m, new_s = [], []
+    for s in range(n_seg):
+        mstack = jax.tree.map(lambda a: a[s], params["mlayers"])
+        mstate = jax.tree.map(lambda a: a[s], state["mlstm"])
+        x, mst = jax.lax.scan(m_body, x, (mstack, mstate))
+        new_m.append(mst)
+        sp = jax.tree.map(lambda a: a[s], params["slayers"])
+        sst = jax.tree.map(lambda a: a[s], state["slstm"])
+        x, sst2 = B.slstm_block(sp, x, cfg=cfg, decode_state=sst)
+        new_s.append(sst2)
+    state["mlstm"] = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
+    state["slstm"] = jax.tree.map(lambda *a: jnp.stack(a), *new_s)
+    return x, state
+
+
+def _dec_zamba(params, x, state, cfg):
+    t = state["t"]
+    n_app, seg = _zamba_segments(cfg)
+
+    def m_body(x, xs):
+        lp, st = xs
+        x, st2 = B.mamba2_block_decode(lp, x, st, cfg=cfg)
+        return x, st2
+
+    if n_app == 0:
+        x, ssm = jax.lax.scan(m_body, x, (params["layers"], state["ssm"]))
+        state["ssm"] = ssm
+        return x, state
+
+    new_ssm, new_k, new_v = [], [], []
+    for s in range(n_app):
+        stack = jax.tree.map(lambda a: a[s * seg:(s + 1) * seg], params["layers"])
+        sst = jax.tree.map(lambda a: a[s * seg:(s + 1) * seg], state["ssm"])
+        x, ssm2 = jax.lax.scan(m_body, x, (stack, sst))
+        new_ssm.append(ssm2)
+        x, ck, cv, _, _ = B.attn_block_decode(
+            params["shared_attn"], x, state["k"][s], state["v"][s], t, cfg=cfg)
+        new_k.append(ck)
+        new_v.append(cv)
+    rem = cfg.num_layers - n_app * seg
+    if rem:
+        stack = jax.tree.map(lambda a: a[n_app * seg:], params["layers"])
+        sst = jax.tree.map(lambda a: a[n_app * seg:], state["ssm"])
+        x, ssm2 = jax.lax.scan(m_body, x, (stack, sst))
+        new_ssm.append(ssm2)
+    state["ssm"] = jax.tree.map(lambda *a: jnp.concatenate(a), *new_ssm)
+    state["k"] = jnp.stack(new_k)
+    state["v"] = jnp.stack(new_v)
+    return x, state
+
+
+# -------------------------------------------------------------------- prefill
+
+def prefill(params: dict, tokens: jax.Array, cfg, extras: dict | None = None,
+            max_len: int = 0):
+    """Run the full-sequence forward while FILLING the decode state (KV caches,
+    GO caches, SSM states). Returns (state, last_token_logits [B, V]).
+
+    Implemented for the attention families (the serving examples); recurrent
+    families can prefill by stepping serve_step (their state is O(1))."""
+    extras = extras or {}
+    Bsz, S = tokens.shape
+    max_len = max_len or (2 * S)
+    state = init_decode_state(cfg, Bsz, max_len, extras)
+    if cfg.block != "attn" or cfg.encoder_layers > 0:
+        # step-by-step prefill (exactly equivalent for recurrent/enc-dec archs)
+        logits = None
+        for i in range(S):
+            logits, state = serve_step(params, state, tokens[:, i], cfg)
+        return state, logits
+
+    positions = jnp.arange(S, dtype=jnp.int32)
+    windows = jnp.asarray(layer_windows(cfg))
+    goe = expert_groups(cfg)
+    x = params["embed"][tokens]
+    has_go = "go" in state
+
+    def body(x, xs):
+        lp, w = xs
+        out = B.attn_block(lp, x, cfg=cfg, positions=positions, window=w,
+                           group_of_expert=goe, return_kv=True)
+        x, aux, k, v = out
+        if has_go:
+            # build this layer's GO cache from the expert-choice aux
+            e = cfg.moe
+            go = go_cache_prefill(
+                None, None, aux["weighted_outputs"], aux["chosen_tokens"],
+                aux["chosen_scores"], e.top_k)
+            return x, (k, v, go)
+        return x, (k, v)
+
+    if cfg.cross_attn_every > 0:
+        state, x = _prefill_vlm(params, x, positions, state, cfg)
+    else:
+        x, ys = jax.lax.scan(body, x, (params["layers"], windows))
+        k, v = ys[0], ys[1]
+        L = cfg.num_layers
+        state["k"] = jax.lax.dynamic_update_slice(
+            state["k"], k.astype(state["k"].dtype), (0, 0, 0, 0, 0))
+        state["v"] = jax.lax.dynamic_update_slice(
+            state["v"], v.astype(state["v"].dtype), (0, 0, 0, 0, 0))
+        if has_go:
+            state["go"] = ys[2]
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params, x[:, -1, :], cfg)
+    state["t"] = jnp.asarray(S, jnp.int32)
+    return state, logits
+
+
+def _prefill_vlm(params, x, positions, state, cfg):
+    memory = state["memory"]
+    n_self = cfg.cross_attn_every - 1
+
+    def body(x, xs):
+        self_stack, cross_p = xs
+        ks, vs = [], []
+        for i in range(n_self):
+            lp = jax.tree.map(lambda a: a[i], self_stack)
+            x, _, k, v = B.attn_block(lp, x, cfg=cfg, positions=positions,
+                                      return_kv=True)
+            ks.append(k)
+            vs.append(v)
+        x, _ = B.attn_block(cross_p, x, cfg=cfg, positions=positions,
+                            causal=False, kv_source=memory, use_rope=False)
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    x, (k, v) = jax.lax.scan(body, x, (params["layers"], params["cross_layers"]))
+    # [n_sup, n_self, B, S, h, hd] -> flat layer index, matching decode state
+    k = k.reshape(-1, *k.shape[2:])
+    v = v.reshape(-1, *v.shape[2:])
+    state["k"] = jax.lax.dynamic_update_slice(
+        state["k"], k.astype(state["k"].dtype), (0,) * 5)
+    state["v"] = jax.lax.dynamic_update_slice(
+        state["v"], v.astype(state["v"].dtype), (0,) * 5)
+    return state, x

@@ -1,0 +1,200 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-parallel + recurrent decode.
+
+Follows the minimal-SSD formulation of the Mamba2 paper: scalar A per head,
+grouped B/C (ngroups=1), short causal conv on (x, B, C), chunked scan:
+intra-chunk quadratic term + inter-chunk state recurrence. The decode path is
+the O(1) per-token recurrence on the [H, P, N] state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, split
+
+
+def _segsum(x):
+    """x [..., L] -> [..., L, L] lower-triangular segment sums:
+    out[i,j] = sum_{k=j+1..i} x[k] for j<i, 0 for i==j, -inf above."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(L)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D_skip, chunk: int):
+    """SSD forward.
+
+    x  [b, s, h, p]   per-head inputs
+    dt [b, s, h]      positive step sizes
+    A  [h]            negative scalars
+    B  [b, s, n]      input matrix (ngroups=1, broadcast over heads)
+    C  [b, s, n]      output matrix
+    D_skip [h]        skip connection
+    Returns y [b, s, h, p] and final state [b, h, p, n].
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    L = min(chunk, s)
+    while s % L:
+        L -= 1
+    c = s // L
+
+    xc = x.reshape(b, c, L, h, p)
+    dtc = dt.reshape(b, c, L, h)
+    Bc = B.reshape(b, c, L, n)
+    Cc = C.reshape(b, c, L, n)
+
+    dA = dtc * A  # [b,c,L,h], negative
+    dA_cs = jnp.cumsum(dA, axis=2)                    # [b,c,L,h]
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # [b,c,h,L,L]
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)     # [b,c,L,L]
+    y_diag = jnp.einsum(
+        "bclm,bchlm,bcmh,bcmhp->bclhp", scores, Lmat, dtc, xc,
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- chunk states ----
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)          # [b,c,L,h]
+    states = jnp.einsum(
+        "bcln,bclh,bclhp->bchpn", Bc, dtc * decay_states, xc,
+        preferred_element_type=jnp.float32,
+    )                                                             # [b,c,h,p,n]
+
+    # ---- inter-chunk recurrence over c ----
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                     # [b,c,h]
+
+    def step(carry, inp):
+        st, dec = inp                                             # [b,h,p,n],[b,h]
+        new = carry * dec[..., None, None] + st
+        return new, carry                                         # emit state entering chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)            # [b,c,h,p,n]
+
+    # ---- inter-chunk contribution to outputs ----
+    state_decay = jnp.exp(dA_cs)                                  # [b,c,L,h]
+    y_off = jnp.einsum(
+        "bcln,bclh,bchpn->bclhp", Cc, state_decay, prev_states,
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, p) + x * D_skip[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t, D_skip):
+    """One-token recurrence. state [b,h,p,n]; x_t [b,h,p]; dt_t [b,h];
+    B_t/C_t [b,n]."""
+    dA = jnp.exp(dt_t * A)                                        # [b,h]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t, B_t)
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C_t) + x_t * D_skip[None, :, None]
+    return state, y.astype(x_t.dtype)
+
+
+# ------------------------------------------------------------- mamba2 block
+
+def mamba2_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di = 2 * d
+    n = cfg.ssm_state
+    h = cfg.num_heads
+    dt_ = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = split(key, 4)
+    conv_ch = di + 2 * n
+    return {
+        "in_proj": dense_init(k1, d, 2 * di + 2 * n + h, dt_),   # z, x, B, C, dt
+        "conv_w": (jax.random.normal(k2, (cfg.conv_width, conv_ch), jnp.float32)
+                   * 0.1).astype(dt_),
+        "conv_b": jnp.zeros((conv_ch,), dt_),
+        "A_log": jnp.log(jnp.linspace(1.0, float(h), h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_proj": dense_init(k3, di, d, dt_),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _causal_conv(u, w, b):
+    """u [B,S,C], depthwise causal conv, width K."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _mamba2_project(params, x, cfg):
+    d = cfg.d_model
+    di = 2 * d
+    n = cfg.ssm_state
+    h = cfg.num_heads
+    zxbcdt = x @ params["in_proj"]
+    z, xs, Bc, Cc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, xs, Bc, Cc, dt, di, n, h
+
+
+def mamba2_forward(params, x, *, cfg):
+    """x [B,S,D] -> [B,S,D] (full-sequence chunked SSD)."""
+    z, xs, Bc, Cc, dt, di, n, h = _mamba2_project(params, x, cfg)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"], params["conv_b"]))
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + n], axis=-1)
+    b, s = x.shape[0], x.shape[1]
+    p = di // h
+    dt_pos = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, _ = ssd_chunked(
+        xs.reshape(b, s, h, p), dt_pos, A,
+        Bc.astype(jnp.float32), Cc.astype(jnp.float32), params["D"], cfg.ssm_chunk,
+    )
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (mamba2 style)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"]
+    return yf.astype(x.dtype) @ params["out_proj"]
+
+
+def mamba2_init_state(cfg, batch: int):
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.num_heads
+    return {
+        "ssm": jnp.zeros((batch, h, di // h, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * cfg.ssm_state),
+                          jnp.dtype(cfg.dtype)),
+    }
+
+
+def mamba2_decode(params, x_t, state, *, cfg):
+    """x_t [B,1,D]; state dict -> (y [B,1,D], new_state)."""
+    z, xs, Bc, Cc, dt, di, n, h = _mamba2_project(params, x_t, cfg)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)          # [B,1,C]
+    hist = jnp.concatenate([state["conv"], conv_in], axis=1)  # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", hist, params["conv_w"]) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:, :]
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + n], axis=-1)
+    b = x_t.shape[0]
+    p = di // h
+    dt_pos = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    new_ssm, y = ssd_decode_step(
+        state["ssm"], xs.reshape(b, h, p).astype(jnp.float32), dt_pos, A,
+        Bc.astype(jnp.float32), Cc.astype(jnp.float32), params["D"],
+    )
+    y = y.reshape(b, 1, di)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"]
+    out = yf.astype(x_t.dtype) @ params["out_proj"]
+    return out, {"ssm": new_ssm, "conv": new_conv}

@@ -1,0 +1,289 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel training form with
+exact log-domain stabilization) and sLSTM (scalar memory, recurrent scan).
+
+mLSTM true semantics (per head):
+  C_t = f_t C_{t-1} + i_t k_t v_t^T      n_t = f_t n_{t-1} + i_t k_t
+  h_t = (q_t^T C_t) / max(|q_t^T n_t|, 1)
+with f_t = sigmoid(f_raw), i_t = exp(i_raw). The chunkwise form carries a
+log-scale M per head so all exponentials stay bounded; the decode path is the
+standard stabilized recurrence and matches the chunkwise form exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init, split
+
+LOG_EPS = -1e30
+
+
+# ------------------------------------------------------------- mLSTM core
+
+def mlstm_chunked(q, k, v, li, lf, chunk: int, state=None):
+    """q/k/v [B,S,H,D]; li/lf [B,S,H] (log input gate, log forget gate).
+
+    Returns h [B,S,H,D] and final state (C_hat [B,H,D,D], n_hat [B,H,D], M [B,H]).
+    """
+    B, S, H, D = q.shape
+    scale = 1.0 / (D ** 0.5)
+    L = min(chunk, S)
+    while S % L:
+        L -= 1
+    c = S // L
+
+    qc = (q * scale).reshape(B, c, L, H, D).astype(jnp.float32)
+    kc = k.reshape(B, c, L, H, D).astype(jnp.float32)
+    vc = v.reshape(B, c, L, H, D).astype(jnp.float32)
+    lic = li.reshape(B, c, L, H).astype(jnp.float32)
+    lfc = lf.reshape(B, c, L, H).astype(jnp.float32)
+    bc = jnp.cumsum(lfc, axis=2)                       # [B,c,L,H]
+
+    tril = jnp.tril(jnp.ones((L, L), bool))
+
+    if state is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        M0 = jnp.full((B, H), LOG_EPS, jnp.float32)
+    else:
+        C0, n0, M0 = state
+
+    def chunk_step(carry, inp):
+        C_hat, n_hat, M = carry
+        qb, kb, vb, lib, bb = inp                      # [B,L,H,*]
+        bT = bb.transpose(0, 2, 1)                     # [B,H,L]
+        liT = lib.transpose(0, 2, 1)
+        logD = bT[:, :, :, None] - bT[:, :, None, :] + liT[:, :, None, :]
+        logD = jnp.where(tril[None, None], logD, LOG_EPS)
+        m_intra = logD.max(axis=-1)                    # [B,H,L]
+        m_inter = bT + M[:, :, None]
+        m = jnp.maximum(m_intra, m_inter)
+        Dm = jnp.exp(logD - m[..., None])              # [B,H,L,L]
+        scores = jnp.einsum("blhd,bmhd->bhlm", qb, kb)
+        w = scores * Dm
+        num = jnp.einsum("bhlm,bmhd->bhld", w, vb)
+        num = num + jnp.exp(m_inter - m)[..., None] * jnp.einsum(
+            "blhd,bhdv->bhlv", qb, C_hat)
+        qn = w.sum(axis=-1) + jnp.exp(m_inter - m) * jnp.einsum(
+            "blhd,bhd->bhl", qb, n_hat)
+        den = jnp.maximum(jnp.abs(qn), jnp.exp(-m))
+        h = (num / den[..., None]).transpose(0, 2, 1, 3)   # [B,L,H,D]
+
+        bL = bb[:, -1]                                  # [B,H]
+        g = bL[:, None] - bb + lib                      # [B,L,H]
+        M_new = jnp.maximum(M + bL, g.max(axis=1))
+        sc_old = jnp.exp(M + bL - M_new)
+        sc_new = jnp.exp(g - M_new[:, None])            # [B,L,H]
+        C_new = C_hat * sc_old[..., None, None] + jnp.einsum(
+            "blhd,blhv,blh->bhdv", kb, vb, sc_new)
+        n_new = n_hat * sc_old[..., None] + jnp.einsum(
+            "blhd,blh->bhd", kb, sc_new)
+        return (C_new, n_new, M_new), h
+
+    xs = (
+        qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+        vc.transpose(1, 0, 2, 3, 4), lic.transpose(1, 0, 2, 3),
+        bc.transpose(1, 0, 2, 3),
+    )
+    (Cf, nf, Mf), hs = jax.lax.scan(chunk_step, (C0, n0, M0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+    return h.astype(q.dtype), (Cf, nf, Mf)
+
+
+def mlstm_decode_step(state, q_t, k_t, v_t, li_t, lf_t):
+    """One-token stabilized recurrence. q/k/v_t [B,H,D]; li/lf [B,H]."""
+    C_hat, n_hat, M = state
+    D = q_t.shape[-1]
+    q_t = q_t.astype(jnp.float32) / (D ** 0.5)
+    k_t = k_t.astype(jnp.float32)
+    v_t = v_t.astype(jnp.float32)
+    M_new = jnp.maximum(lf_t + M, li_t)
+    sc_old = jnp.exp(lf_t + M - M_new)
+    sc_in = jnp.exp(li_t - M_new)
+    C_new = C_hat * sc_old[..., None, None] + sc_in[..., None, None] * (
+        k_t[..., :, None] * v_t[..., None, :])
+    n_new = n_hat * sc_old[..., None] + sc_in[..., None] * k_t
+    num = jnp.einsum("bhd,bhdv->bhv", q_t, C_new)
+    qn = jnp.einsum("bhd,bhd->bh", q_t, n_new)
+    den = jnp.maximum(jnp.abs(qn), jnp.exp(-M_new))
+    h = num / den[..., None]
+    return (C_new, n_new, M_new), h
+
+
+# ------------------------------------------------------------- mLSTM block
+
+def mlstm_block_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.num_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = split(key, 7)
+    return {
+        "norm": rmsnorm_init(d),
+        "up": dense_init(ks[0], d, 2 * di, dt),        # (x_m, gate)
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, di), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "wq": dense_init(ks[2], di, di, dt),
+        "wk": dense_init(ks[3], di, di, dt),
+        "wv": dense_init(ks[4], di, di, dt),
+        "w_if": dense_init(ks[5], di, 2 * h, dt),
+        "gn": jnp.ones((di,), jnp.float32),
+        "down": dense_init(ks[6], di, d, dt),
+    }
+
+
+def _causal_conv(u, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(K)) + b
+
+
+def _headnorm(y, scale, H):
+    """Per-head group RMS norm; y [B,S,H,D] -> [B,S,H*D]."""
+    B, S = y.shape[0], y.shape[1]
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6)
+    return yf.reshape(B, S, -1) * scale
+
+
+def mlstm_block(params, x, *, cfg, decode_state=None):
+    """Full mLSTM residual block. x [B,S,D].
+
+    decode_state None -> chunkwise parallel over S (returns out only);
+    else single-token decode (S==1) returning (out, new_state).
+    """
+    B, S, d = x.shape
+    di = 2 * d
+    H = cfg.num_heads
+    hd = di // H
+    xin = rmsnorm(params["norm"], x, cfg.norm_eps)
+    up = xin @ params["up"]
+    xm, gate = jnp.split(up, 2, axis=-1)
+
+    if decode_state is None:
+        xc = jax.nn.silu(_causal_conv(xm, params["conv_w"], params["conv_b"]))
+        new_conv = None
+    else:
+        hist = jnp.concatenate([decode_state["conv"], xm], axis=1)
+        xc = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", hist, params["conv_w"]) + params["conv_b"]
+        )[:, None, :]
+        new_conv = hist[:, 1:, :]
+
+    q = (xc @ params["wq"]).reshape(B, S, H, hd)
+    k = (xc @ params["wk"]).reshape(B, S, H, hd)
+    v = (xm @ params["wv"]).reshape(B, S, H, hd)
+    if_raw = (xm @ params["w_if"]).astype(jnp.float32)
+    li = if_raw[..., :H]                                  # log input gate = i_raw
+    lf = jax.nn.log_sigmoid(if_raw[..., H:])
+
+    if decode_state is None:
+        hseq, _ = mlstm_chunked(q, k, v, li, lf, chunk=min(128, S))
+        out = _headnorm(hseq, params["gn"], H)
+        out = out * jax.nn.silu(gate.astype(jnp.float32))
+        return x + (out.astype(x.dtype) @ params["down"])
+    else:
+        st, h1 = mlstm_decode_step(
+            decode_state["mlstm"], q[:, 0], k[:, 0], v[:, 0], li[:, 0], lf[:, 0])
+        out = _headnorm(h1[:, None], params["gn"], H)
+        out = out * jax.nn.silu(gate.astype(jnp.float32))
+        y = x + (out.astype(x.dtype) @ params["down"])
+        return y, {"mlstm": st, "conv": new_conv}
+
+
+def mlstm_init_state(cfg, batch: int):
+    d = cfg.d_model
+    di = 2 * d
+    H = cfg.num_heads
+    hd = di // H
+    return {
+        "mlstm": (
+            jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.full((batch, H), LOG_EPS, jnp.float32),
+        ),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), jnp.dtype(cfg.dtype)),
+    }
+
+
+# ------------------------------------------------------------- sLSTM block
+
+def slstm_block_init(key, cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    dt = jnp.dtype(cfg.dtype)
+    ks = split(key, 4)
+    ff = max(d * 4 // 3, 64)
+    return {
+        "norm": rmsnorm_init(d),
+        "w_in": dense_init(ks[0], d, 4 * d, dt),       # i,f,z,o inputs
+        "r": (jax.random.normal(ks[1], (4, H, hd, hd), jnp.float32)
+              / (hd ** 0.5)).astype(dt),                # block-diag recurrent
+        "gn": jnp.ones((d,), jnp.float32),
+        "ff_norm": rmsnorm_init(d),
+        "ff_up": dense_init(ks[2], d, 2 * ff, dt),
+        "ff_down": dense_init(ks[3], ff, d, dt),
+    }
+
+
+def _slstm_cell(params, u, state, H, hd):
+    """One time step. u [B,4d] pre-activations from input; state dict."""
+    h_prev = state["h"]                                   # [B,H,hd]
+    rec = jnp.einsum("ghij,bhj->bghi", params["r"].astype(jnp.float32),
+                     h_prev)                              # [B,4,H,hd]
+    B = u.shape[0]
+    gates = u.astype(jnp.float32).reshape(B, 4, H, hd) + rec
+    li_, lf_, z, o = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+    lf_ = jax.nn.log_sigmoid(lf_)
+    m_new = jnp.maximum(lf_ + state["m"], li_)
+    fi = jnp.exp(lf_ + state["m"] - m_new)
+    ii = jnp.exp(li_ - m_new)
+    c = fi * state["c"] + ii * jnp.tanh(z)
+    n = fi * state["n"] + ii
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new, "h": h}
+
+
+def slstm_init_state(cfg, batch: int):
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, H, hd), 0.0, jnp.float32), "h": z}
+
+
+def slstm_block(params, x, *, cfg, decode_state=None):
+    """sLSTM residual block + gated FFN. x [B,S,D]."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    xin = rmsnorm(params["norm"], x, cfg.norm_eps)
+    u = xin @ params["w_in"]                              # [B,S,4d]
+
+    if decode_state is None:
+        def step(st, ut):
+            st2 = _slstm_cell(params, ut, st, H, hd)
+            return st2, st2["h"]
+        st0 = slstm_init_state(cfg, B)
+        _, hs = jax.lax.scan(step, st0, u.transpose(1, 0, 2))
+        h = hs.transpose(1, 0, 2, 3)                      # [B,S,H,hd]
+        new_state = None
+    else:
+        st = _slstm_cell(params, u[:, 0], decode_state, H, hd)
+        h = st["h"][:, None]
+        new_state = st
+
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    hf = hf * jax.lax.rsqrt(var + 1e-6)
+    out = hf.reshape(B, S, d) * params["gn"]
+    x = x + out.astype(x.dtype)
+    # gated FFN
+    xin2 = rmsnorm(params["ff_norm"], x, cfg.norm_eps)
+    a, b = jnp.split(xin2 @ params["ff_up"], 2, axis=-1)
+    x = x + (jax.nn.silu(a) * b) @ params["ff_down"]
+    if decode_state is None:
+        return x
+    return x, new_state

@@ -1,0 +1,107 @@
+"""AdamW + cosine schedule + global-norm clipping + gradient accumulation.
+
+Self-contained (no optax): plain pytree transforms so the optimizer state is
+an ordinary dict pytree that the sharder (ZeRO-1: m/v sharded over data AND
+model axes) and the checkpointer can treat uniformly.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # [] int32
+    m: dict                  # first moment (fp32, same tree as params)
+    v: dict                  # second moment (fp32)
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+
+def adamw_init(params: dict) -> AdamWState:
+    def zeros():
+        # fresh buffers for m and v (aliased buffers break donation)
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32) if _is_float(p) else None,
+            params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+
+def cosine_lr(step, *, base_lr: float, warmup: int, total: int,
+              min_frac: float = 0.1):
+    warm = base_lr * (step + 1) / max(1, warmup)
+    prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree) if x is not None]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(
+        lambda x: None if x is None else x * scale, grads,
+        is_leaf=lambda x: x is None), g
+
+
+def adamw_update(params: dict, grads: dict, state: AdamWState, *,
+                 lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, grad_clip: float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(
+        lambda g, p: g.astype(jnp.float32) if _is_float(p) else None,
+        grads, params)
+    if grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    t = state.step + 1
+    c1 = 1.0 - b1 ** t.astype(jnp.float32)
+    c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        if g is None:
+            return p, m, v
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / c1
+        vh = v2 / c2
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(t, new_m, new_v), {"grad_norm": gnorm}
+
+
+def accumulate_grads(loss_fn, params, microbatches, cfg):
+    """Gradient accumulation via scan over leading microbatch axis.
+    microbatches: dict of arrays [n_micro, per_micro, ...]."""
+    def body(carry, mb):
+        acc, loss_acc = carry
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb, cfg)
+        acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+        return (acc, loss_acc + loss), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    n = jax.tree.leaves(microbatches)[0].shape[0]
+    (g, loss), _ = jax.lax.scan(body, (zeros, jnp.zeros((), jnp.float32)),
+                                microbatches)
+    inv = 1.0 / n
+    return jax.tree.map(lambda x: x * inv, g), loss * inv

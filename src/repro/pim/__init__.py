@@ -1,0 +1,1 @@
+# C5 — the paper's operator-accurate PIM evaluation substrate (pure Python).

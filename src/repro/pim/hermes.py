@@ -1,0 +1,89 @@
+"""HERMES PIM chip specification + 3DCIM-style system constants.
+
+Printed HERMES numbers (paper §IV.A): 256x256 crossbar, 8-bit I/O, one core
+activation = 130 ns; core area 0.635 mm²; crossbar array = 40% of core area
+(so shared peripherals are the remaining 60%, >60% of which is ADCs).
+Core activation energy follows the HERMES JSSC energy efficiency
+(~10.5 TOPS/W at 2 x 256 x 256 OPS / 130 ns -> ~0.096 W per active core,
+matching the paper's printed "0.096" figure): 0.096 W x 130 ns = 12.48 nJ.
+
+Digital-unit and DRAM constants are FIT to the paper's Table I anchors
+(baseline and S2O+KVGO totals), exactly as the paper fits "polynomial
+functions as in [7]" for the non-PIM components — see simulator.calibrate().
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class PimSpec:
+    # --- HERMES core (printed values) ---
+    xbar: int = 256                # crossbar rows = cols
+    io_bits: int = 8
+    t_core_ns: float = 130.0       # latency of one core activation
+    p_core_w: float = 0.096        # power while active -> e_core = p*t
+    area_core_mm2: float = 0.635
+    xbar_area_frac: float = 0.40   # paper §IV.B: "crossbar area accounts for 40%"
+
+    # --- digital unit (attention, gate, softmax) — calibrated ---
+    # Cost of one invocation: t_dig_call_ns + ops / dig_ops_per_s (the
+    # polynomial-fit form of 3DCIM's digital components: a per-call latency
+    # floor plus a throughput term). Energy has no floor.
+    dig_ops_per_s: float = 6.62262e13
+    t_dig_call_ns: float = 6.59128e4
+    dig_j_per_op: float = 1.34658e-13
+
+    # --- off-chip DRAM (KV + GO caches, retained hidden states) — calibrated ---
+    dram_gbps: float = 1.77306     # GB/s effective (critical-path)
+    dram_j_per_byte: float = 8.01875e-11
+
+    @property
+    def e_core_nj(self) -> float:
+        return self.p_core_w * self.t_core_ns  # (W x ns) = nJ
+
+    def with_(self, **kw) -> "PimSpec":
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class MoEModelSpec:
+    """Llama-MoE-4/16 (paper target): one transformer block."""
+    d_model: int = 4096
+    d_expert: int = 688            # 11008 / 16
+    num_experts: int = 16
+    top_k: int = 4
+    num_heads: int = 32
+    n_matrices: int = 2            # up + down (paper's 1536-crossbar count)
+
+    def crossbars_per_expert(self, spec: PimSpec) -> int:
+        import math
+        rows = math.ceil(self.d_model / spec.xbar)
+        cols = math.ceil(self.d_expert / spec.xbar)
+        return self.n_matrices * rows * cols   # up [d,de] + down [de,d]
+
+    def total_crossbars(self, spec: PimSpec) -> int:
+        return self.num_experts * self.crossbars_per_expert(spec)
+
+    def pair_ops(self) -> int:
+        """MAC ops (x2) for one (token, expert) pass: up + down."""
+        return 2 * self.n_matrices * self.d_model * self.d_expert
+
+    def pair_latency_ns(self, spec: PimSpec) -> float:
+        """Up stage then down stage; crossbars within a stage in parallel."""
+        return self.n_matrices * spec.t_core_ns
+
+    def pair_energy_nj(self, spec: PimSpec) -> float:
+        return self.crossbars_per_expert(spec) * spec.e_core_nj
+
+
+HERMES = PimSpec()
+LLAMA_MOE_4_16 = MoEModelSpec()
+
+
+def moe_area_mm2(model: MoEModelSpec, spec: PimSpec, group_size: int) -> float:
+    """C1: crossbars keep their array area; peripherals are shared g-ways.
+    2D layout for both ours and the baseline (paper §IV.A)."""
+    n = model.total_crossbars(spec)
+    frac = spec.xbar_area_frac + (1.0 - spec.xbar_area_frac) / max(1, group_size)
+    return n * spec.area_core_mm2 * frac

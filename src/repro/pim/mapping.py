@@ -1,0 +1,60 @@
+"""Deployment-time mapping: experts -> crossbars -> multiplexing groups.
+
+Mirrors paper §III.A/B: each expert occupies `crossbars_per_expert` HERMES
+cores (Llama-MoE-4/16: 96 -> 1536 total); groups of `group_size` experts share
+one peripheral set. Grouping is uniform (U) or workload-sorted (S, C2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.grouping import (group_loads, imbalance, sorted_grouping,
+                                 uniform_grouping)
+from repro.pim.hermes import MoEModelSpec, PimSpec, moe_area_mm2
+
+
+@dataclass(frozen=True)
+class Mapping:
+    groups: np.ndarray           # [G, g] expert ids sharing one peripheral set
+    group_of_expert: np.ndarray  # [E]
+    area_mm2: float
+    n_crossbars: int
+
+    @property
+    def group_size(self) -> int:
+        return self.groups.shape[1]
+
+
+def build_mapping(model: MoEModelSpec, spec: PimSpec, group_size: int,
+                  grouping: str, loads: np.ndarray | None = None,
+                  seed: int = 0) -> Mapping:
+    E = model.num_experts
+    if group_size <= 1:
+        groups = np.arange(E)[:, None]
+    elif grouping == "uniform":
+        groups = uniform_grouping(E, group_size, seed=seed)
+    elif grouping == "sorted":
+        assert loads is not None, "sorted grouping needs a traced workload"
+        groups = sorted_grouping(loads, group_size)
+    else:
+        raise ValueError(grouping)
+    goe = np.empty(E, np.int64)
+    for gid, members in enumerate(groups):
+        goe[members] = gid
+    return Mapping(
+        groups=groups,
+        group_of_expert=goe,
+        area_mm2=moe_area_mm2(model, spec, group_size),
+        n_crossbars=model.total_crossbars(spec),
+    )
+
+
+def mapping_stats(m: Mapping, loads: np.ndarray) -> dict:
+    gl = group_loads(loads, m.groups)
+    return {
+        "group_loads": gl.tolist(),
+        "imbalance": imbalance(gl),
+        "area_mm2": m.area_mm2,
+    }

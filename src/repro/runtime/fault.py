@@ -1,0 +1,77 @@
+"""Fault tolerance: step supervision, retry policy, straggler detection.
+
+At 1000+ nodes the failure model is: transient device/step errors (retry),
+hard node loss (restart from checkpoint, possibly re-meshed — see elastic.py),
+and stragglers (slow steps that stall the synchronous collective).
+
+`StepSupervisor` wraps the train step:
+  * retries transient failures up to `max_retries` (with the same inputs —
+    steps are deterministic given (params, batch), so retry is safe);
+  * raises `RestartRequired` after exhausting retries — the launcher catches
+    it, restores the latest committed checkpoint, and resumes (train.py);
+  * records per-step wall times and flags stragglers at
+    median * straggler_factor; the hook is where a production deployment
+    would trigger hot-spare swap / re-sharding. At the MoE layer the C2
+    load-aware placement is itself the straggler *prevention* mechanism.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+class RestartRequired(RuntimeError):
+    """Raised when a step cannot be completed in-place; the launcher must
+    restore from the latest committed checkpoint."""
+
+
+@dataclass
+class StepStats:
+    times: list = field(default_factory=list)
+    retries: int = 0
+    stragglers: list = field(default_factory=list)
+
+    def median(self) -> float:
+        if not self.times:
+            return 0.0
+        s = sorted(self.times)
+        return s[len(s) // 2]
+
+
+class StepSupervisor:
+    def __init__(self, max_retries: int = 2, straggler_factor: float = 3.0,
+                 on_straggler=None):
+        self.max_retries = max_retries
+        self.straggler_factor = straggler_factor
+        self.on_straggler = on_straggler
+        self.stats = StepStats()
+
+    def run(self, step_fn, *args, step: int = -1, **kw):
+        """Execute step_fn with retry + timing. Returns its result."""
+        attempt = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                out = step_fn(*args, **kw)
+                out = _block(out)
+                break
+            except (RuntimeError, ValueError) as e:
+                attempt += 1
+                self.stats.retries += 1
+                if attempt > self.max_retries:
+                    raise RestartRequired(
+                        f"step {step} failed {attempt} times: {e}") from e
+        dt = time.perf_counter() - t0
+        med = self.stats.median()
+        self.stats.times.append(dt)
+        if med > 0 and dt > med * self.straggler_factor:
+            self.stats.stragglers.append((step, dt, med))
+            if self.on_straggler is not None:
+                self.on_straggler(step, dt, med)
+        return out
+
+
+def _block(x):
+    """Force async dispatch errors to surface inside the supervised region."""
+    import jax
+    return jax.block_until_ready(x)

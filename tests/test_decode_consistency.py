@@ -1,0 +1,102 @@
+"""Serving == training-forward consistency per family:
+  * causal attention archs: prefill + one serve_step == full forward;
+  * recurrent archs (xlstm/zamba2): stepwise decode == chunked-parallel;
+  * whisper: stepwise decode (with encoder memory) == teacher-forced forward;
+  * expert-choice + GO cache: validated against the incremental oracle in
+    test_go_cache (full forward differs BY DESIGN — expert-choice routing is
+    non-causal; the paper's GO cache is the causal-incremental semantics)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import blocks as B
+from repro.models.layers import rmsnorm
+from repro.models.model import (init_decode_state, logits_from_hidden,
+                                model_forward, model_init, prefill,
+                                serve_step)
+
+CAUSAL = ["starcoder2-3b", "granite-8b", "qwen2-7b", "gemma3-27b",
+          "llama-3.2-vision-90b"]
+RECURRENT = ["xlstm-1.3b", "zamba2-1.2b"]
+
+
+def _setup(arch, dropless=False):
+    cfg = get_config(arch, smoke=True)
+    if dropless and cfg.moe is not None:
+        cfg = cfg.with_overrides(
+            moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    key = jax.random.PRNGKey(2)
+    params = model_init(key, cfg)
+    B_, S = 2, 12
+    tokens = jax.random.randint(key, (B_, S), 0, cfg.vocab_size)
+    extras = {}
+    if cfg.cross_attn_every:
+        im = jax.random.normal(key, (B_, cfg.num_image_tokens, cfg.d_model))
+        extras = {"image_embeds": im, "memory": im}
+    return cfg, params, tokens, extras
+
+
+@pytest.mark.parametrize("arch", CAUSAL + RECURRENT)
+def test_prefill_decode_matches_forward(arch):
+    cfg, params, tokens, extras = _setup(arch)
+    x, _ = model_forward(params, tokens, cfg, extras)
+    ref = logits_from_hidden(params, x[:, -1, :], cfg)
+    st, _ = prefill(params, tokens[:, :-1], cfg, extras, max_len=16)
+    logits, st = serve_step(params, st, tokens[:, -1], cfg)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=1e-2, atol=5e-3)
+
+
+def test_token_choice_moe_decode_matches_forward_dropless():
+    cfg, params, tokens, extras = _setup("deepseek-moe-16b", dropless=True)
+    x, _ = model_forward(params, tokens, cfg, extras)
+    ref = logits_from_hidden(params, x[:, -1, :], cfg)
+    st, _ = prefill(params, tokens[:, :-1], cfg, extras, max_len=16)
+    logits, _ = serve_step(params, st, tokens[:, -1], cfg)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=1e-2, atol=5e-3)
+
+
+def test_whisper_decode_matches_forward():
+    cfg, params, tokens, _ = _setup("whisper-base")
+    key = jax.random.PRNGKey(3)
+    frames = jax.random.normal(key, (2, cfg.num_audio_frames, cfg.d_model))
+    x, _ = model_forward(params, tokens, cfg, {"audio_frames": frames})
+    ref = logits_from_hidden(params, x[:, -1, :], cfg)
+    # encode once, then step-by-step prefill + decode
+    enc_pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+    def enc_body(h, lp):
+        h, _ = B.attn_block(lp, h, cfg=cfg, positions=enc_pos, causal=False,
+                            use_rope=False)
+        return h, None
+
+    h, _ = jax.lax.scan(enc_body, frames.astype(jnp.dtype(cfg.dtype)),
+                        params["encoder"])
+    memory = rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+    st, _ = prefill(params, tokens[:, :-1], cfg, {"memory": memory},
+                    max_len=16)
+    logits, _ = serve_step(params, st, tokens[:, -1], cfg)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=1e-2, atol=5e-3)
+
+
+def test_go_cache_decode_runs_and_selects():
+    """Expert-choice serving: GO cache fields update, at most one slot per
+    expert per step, state sizes static."""
+    cfg, params, tokens, _ = _setup("llama_moe_4_16")
+    st, _ = prefill(params, tokens, cfg, {}, max_len=24)
+    sizes0 = jax.tree.map(lambda a: a.shape, st)
+    tok = tokens[:, -1]
+    for _ in range(4):
+        before = st["go"].scores
+        logits, st = serve_step(params, st, tok, cfg)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        changed = (st["go"].scores != before).sum(axis=-1)
+        assert int(changed.max()) <= 1
+    assert jax.tree.map(lambda a: a.shape, st) == sizes0
+    assert bool(jnp.isfinite(logits).all())

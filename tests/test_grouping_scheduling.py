@@ -1,0 +1,103 @@
+"""C2 grouping + C3 scheduling invariants (hypothesis property tests)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import grouping as G
+from repro.core import scheduling as S
+
+
+# ------------------------------------------------------------------ grouping
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from([8, 16, 32]),
+       st.sampled_from([2, 4]))
+def test_sorted_grouping_beats_uniform_on_average(seed, E, g):
+    rng = np.random.default_rng(seed)
+    loads = rng.zipf(1.5, size=E).astype(np.float64)
+    s = G.imbalance(G.group_loads(loads, G.sorted_grouping(loads, g)))
+    u = np.mean([G.imbalance(G.group_loads(
+        loads, G.uniform_grouping(E, g, seed=i))) for i in range(8)])
+    assert s <= u + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from([16, 64]), st.sampled_from([2, 4]))
+def test_grouping_is_partition(seed, E, g):
+    rng = np.random.default_rng(seed)
+    loads = rng.random(E)
+    groups = G.sorted_grouping(loads, g)
+    assert sorted(groups.reshape(-1).tolist()) == list(range(E))
+    goe = G.group_of_expert_from_groups(groups)
+    for gid, members in enumerate(groups):
+        assert all(goe[m] == gid for m in members)
+
+
+def test_shard_placement_balances_contiguous_blocks():
+    rng = np.random.default_rng(0)
+    loads = rng.zipf(1.5, size=64).astype(np.float64)
+    perm = G.shard_placement(loads, 16)
+    assert sorted(perm.tolist()) == list(range(64))
+    shard_loads = loads[perm].reshape(16, 4).sum(axis=1)
+    naive = loads.reshape(16, 4).sum(axis=1)
+    assert G.imbalance(shard_loads) <= G.imbalance(naive)
+
+
+def test_expert_permutation_roundtrip():
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(8)
+    bank = {"wi": rng.normal(size=(8, 4, 4))}
+    out = G.apply_expert_permutation(bank, perm)
+    inv = G.inverse_permutation(perm)
+    np.testing.assert_array_equal(out["wi"][inv[3]], bank["wi"][3])
+
+
+# ---------------------------------------------------------------- scheduling
+
+def _rand_choices(rng, T, E, k):
+    ch = np.zeros((T, E), bool)
+    for t in range(T):
+        ch[t, rng.choice(E, size=k, replace=False)] = True
+    return ch
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10**6), st.integers(4, 24), st.sampled_from([8, 16]),
+       st.integers(1, 4), st.sampled_from([2, 4]))
+def test_schedule_invariants(seed, T, E, k, g):
+    rng = np.random.default_rng(seed)
+    choices = _rand_choices(rng, T, E, min(k, E))
+    groups = G.sorted_grouping(choices.sum(0).astype(float), g)
+
+    tw = S.token_wise_schedule(choices, groups)
+    c = S.compact_schedule(choices, groups)
+    o = S.reschedule_idle(choices, groups)
+
+    # every (token, expert-hit) is scheduled exactly once per schedule
+    total_pairs = int(choices.sum())
+    for sch in (tw, c, o):
+        assert int((sch.timeline != S.IDLE).sum()) == total_pairs
+
+    # compact achieves the lower bound: max group queue length
+    queues = S.choices_to_group_queues(choices, groups)
+    assert c.makespan == max(len(q) for q in queues)
+    # paper: compact is no slower than token-wise; reschedule keeps compact's
+    # makespan but never more transfers
+    assert c.makespan <= tw.makespan
+    assert o.makespan == c.makespan
+    assert o.transfers <= c.transfers
+
+    # group order within each group's timeline is token-monotone for compact
+    for i, q in enumerate(queues):
+        got = [t for t in c.timeline[i] if t != S.IDLE]
+        assert got == q
+
+
+def test_reschedule_example_reduces_transfers():
+    """A constructed case with slack where idle insertion aligns reuse (the
+    paper's Fig. 2 shows 16 -> 12 on its example)."""
+    rng = np.random.default_rng(7)
+    choices = _rand_choices(rng, 16, 8, 3)
+    groups = G.sorted_grouping(choices.sum(0).astype(float), 2)
+    c = S.compact_schedule(choices, groups)
+    o = S.reschedule_idle(choices, groups)
+    assert o.transfers <= c.transfers

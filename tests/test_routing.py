@@ -1,0 +1,73 @@
+"""Routing invariants + the paper's TopKUpdate (eq. 4-5) exactness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import routing as R
+
+
+def test_token_choice_shapes_and_weights():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (10, 16))
+    w = jax.random.normal(key, (16, 8))
+    r = R.token_choice(x, w, 3)
+    assert r.expert_idx.shape == (10, 3)
+    np.testing.assert_allclose(np.asarray(r.weights.sum(-1)), 1.0, rtol=1e-5)
+    # chosen experts are the k largest scores
+    s = np.asarray(r.scores)
+    for t in range(10):
+        top = set(np.argsort(-s[t])[:3])
+        assert set(np.asarray(r.expert_idx[t]).tolist()) == top
+
+
+def test_expert_choice_balanced_by_construction():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (32, 16))
+    w = jax.random.normal(key, (16, 8))
+    r = R.expert_choice(x, w, capacity=4)
+    assert r.token_idx.shape == (8, 4)
+    # every expert selects exactly `capacity` tokens: loads are equal
+    counts = np.bincount(np.asarray(r.token_idx).reshape(-1), minlength=32)
+    assert counts.sum() == 8 * 4
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(1, 4),
+       st.integers(5, 40))
+def test_topk_update_matches_full_recompute(seed, E, k, steps):
+    """The paper's incremental TopKUpdate == exact top-k over the full score
+    history (the selection invariant that makes the GO cache lossless w.r.t.
+    fixed-capacity expert choice)."""
+    rng = np.random.default_rng(seed)
+    history = rng.normal(size=(k, E)).astype(np.float32)  # warm cache
+    s_prev = jnp.asarray(np.sort(history, axis=0)[::-1].T.copy())  # [E, k]
+    tok_prev = jnp.asarray(np.argsort(-history, axis=0).T.copy().astype(np.int32))
+    all_scores = [history]
+    for t in range(steps):
+        s_new = rng.normal(size=E).astype(np.float32)
+        upd = R.topk_update(s_prev, tok_prev, jnp.asarray(s_new), k + t)
+        all_scores.append(s_new[None])
+        full = np.concatenate(all_scores, axis=0)        # [k+t+1, E]
+        for e in range(E):
+            expect_topk = np.sort(full[:, e])[::-1][:k]
+            got = np.sort(np.asarray(upd.new_scores[e]))[::-1]
+            np.testing.assert_allclose(got, expect_topk, rtol=1e-6)
+            # selection flag: new score is in the exact top-k
+            kth = expect_topk[-1]
+            assert bool(upd.selected[e]) == bool(s_new[e] >= kth) or \
+                np.isclose(s_new[e], kth)
+        s_prev, tok_prev = upd.new_scores, upd.new_token_ids
+
+
+def test_load_balance_loss_prefers_uniform():
+    key = jax.random.PRNGKey(2)
+    T, E, k = 64, 8, 2
+    uniform_scores = jax.random.normal(key, (T, E)) * 0.01
+    skew_scores = uniform_scores.at[:, 0].add(10.0)
+    u_idx = jax.lax.top_k(uniform_scores, k)[1]
+    s_idx = jax.lax.top_k(skew_scores, k)[1]
+    lu = R.load_balance_loss(uniform_scores, u_idx, E)
+    ls = R.load_balance_loss(skew_scores, s_idx, E)
+    assert float(ls) > float(lu)
