@@ -1,0 +1,125 @@
+"""Continuous-batching serving throughput under a Poisson arrival trace.
+
+Replays one open-loop trace (exponential inter-arrival times in engine
+ticks, mixed generation lengths) against the ServingEngine at several slot
+counts and reports, per slot count:
+
+  tok_per_s       generated tokens / wall-clock of the whole trace
+  p50_ms / p95_ms request latency (arrival -> final token), wall-clock
+  steps           engine ticks to drain the trace
+
+Compilation is excluded: each slot count warms up prefill + its pool-width
+decode step on a throwaway request before the timed run. Prompts share one
+length so prefill compiles once (the engine docstring covers bucketing).
+
+  PYTHONPATH=src python -m benchmarks.serve_throughput --smoke
+  PYTHONPATH=src python benchmarks/serve_throughput.py --smoke --slots 1,4,8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def build_trace(rng, num_requests: int, prompt_len: int, gen: int,
+                rate: float, vocab: int):
+    """Open-loop Poisson trace: arrival tick, prompt, gen length per request."""
+    gaps = rng.exponential(1.0 / rate, size=num_requests)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    arrivals[0] = 0
+    prompts = [rng.integers(0, vocab, size=prompt_len, dtype=np.int32)
+               for _ in range(num_requests)]
+    gens = rng.integers(max(1, gen // 2), gen + 1, size=num_requests)
+    return arrivals, prompts, gens
+
+
+def run_trace(params, cfg, *, num_slots: int, max_tokens: int,
+              arrivals, prompts, gens) -> dict:
+    from repro.serving import ServingEngine
+
+    # warmup: compile prefill + this pool width's decode step off the clock
+    warm = ServingEngine(params, cfg, num_slots=num_slots,
+                         max_tokens=max_tokens)
+    warm.submit(prompts[0], 2)
+    warm.run()
+
+    eng = ServingEngine(params, cfg, num_slots=num_slots,
+                        max_tokens=max_tokens)
+    ids = [eng.submit(p, int(g), arrival_step=int(a))
+           for p, g, a in zip(prompts, gens, arrivals)]
+    t0 = time.monotonic()
+    fin = eng.run()
+    dt = time.monotonic() - t0
+
+    lats = np.array([fin[i].latency_s for i in ids])
+    toks = sum(len(fin[i].tokens) for i in ids)
+    return {
+        "slots": num_slots,
+        "tok_per_s": toks / dt,
+        "p50_ms": float(np.percentile(lats, 50) * 1e3),
+        "p95_ms": float(np.percentile(lats, 95) * 1e3),
+        "steps": eng.step_count,
+        "wall_s": dt,
+        "tokens": toks,
+    }
+
+
+def run(arch: str = "llama_moe_4_16", smoke: bool = True,
+        slot_counts=(1, 4, 8), num_requests: int = 8, prompt_len: int = 16,
+        gen: int = 8, rate: float = 0.5, seed: int = 0) -> list[dict]:
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.models.model import model_init
+
+    cfg = get_config(arch, smoke=smoke)
+    params = model_init(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    arrivals, prompts, gens = build_trace(
+        rng, num_requests, prompt_len, gen, rate, cfg.vocab_size)
+    max_tokens = prompt_len + gen + 1
+
+    rows = []
+    for s in slot_counts:
+        rows.append(run_trace(params, cfg, num_slots=s, max_tokens=max_tokens,
+                              arrivals=arrivals, prompts=prompts, gens=gens))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama_moe_4_16")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--slots", default="1,4,8",
+                    help="comma-separated slot counts")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="0 -> 8 for --smoke, 32 otherwise")
+    ap.add_argument("--prompt", type=int, default=0,
+                    help="0 -> 16 for --smoke, 64 otherwise")
+    ap.add_argument("--gen", type=int, default=0,
+                    help="0 -> 8 for --smoke, 32 otherwise")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="mean arrivals per engine tick")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    slot_counts = [int(s) for s in args.slots.split(",")]
+    n = args.requests or (8 if args.smoke else 32)
+    p = args.prompt or (16 if args.smoke else 64)
+    g = args.gen or (8 if args.smoke else 32)
+
+    rows = run(args.arch, smoke=args.smoke, slot_counts=slot_counts,
+               num_requests=n, prompt_len=p, gen=g, rate=args.rate,
+               seed=args.seed)
+    print(f"# serve_throughput arch={args.arch} smoke={args.smoke} "
+          f"requests={n} prompt={p} gen<={g} rate={args.rate}")
+    print("slots,tok_per_s,p50_ms,p95_ms,steps,wall_s,tokens")
+    for r in rows:
+        print(f"{r['slots']},{r['tok_per_s']:.1f},{r['p50_ms']:.0f},"
+              f"{r['p95_ms']:.0f},{r['steps']},{r['wall_s']:.2f},{r['tokens']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,28 @@ def go_cache_init(batch: int, num_experts: int, k: int, d: int, dtype) -> GOCach
     )
 
 
+def go_cache_init_slot(cache: GOCache, slot) -> GOCache:
+    """Reset ONE batch slot to the empty-cache state (scores -inf, ids -1,
+    outputs 0). `slot` may be a traced int32. Leading axes before the batch
+    dim (e.g. a stacked layer axis) are handled by the caller via vmap;
+    here the batch dim is axis 0."""
+    return GOCache(
+        scores=cache.scores.at[slot].set(-jnp.inf),
+        token_ids=cache.token_ids.at[slot].set(-1),
+        outputs=cache.outputs.at[slot].set(0),
+    )
+
+
+def go_cache_write_slot(cache: GOCache, slot, src: GOCache) -> GOCache:
+    """Write a batch-1 cache (e.g. from a single-request prefill) into batch
+    slot `slot` of a pooled cache. Batch dim is axis 0 on both sides."""
+    return GOCache(
+        scores=cache.scores.at[slot].set(src.scores[0]),
+        token_ids=cache.token_ids.at[slot].set(src.token_ids[0]),
+        outputs=cache.outputs.at[slot].set(src.outputs[0].astype(cache.outputs.dtype)),
+    )
+
+
 def go_cache_prefill(
     scores: jax.Array,       # [B, T, E] gate affinities (softmax over E)
     token_ids: jax.Array,    # [T] absolute positions
@@ -67,7 +89,7 @@ class GOStepResult(NamedTuple):
 def go_cache_step(
     cache: GOCache,
     x_t: jax.Array,          # [B, d] incoming token hidden state
-    token_id,                # scalar int32 absolute position
+    token_id,                # int32 absolute position: scalar or [B] per-slot
     gate_w: jax.Array,       # [d, E]
     expert_fn,               # (x [B, d]) -> [B, E, d] all-expert outputs
     *,
@@ -88,8 +110,10 @@ def go_cache_step(
     s_raw = x_t.astype(jnp.float32) @ gate_w.astype(jnp.float32)   # [B, E]
     g = jax.nn.softmax(s_raw, axis=-1)
 
-    upd = jax.vmap(lambda sp, tp, sn: topk_update(sp, tp, sn, token_id))(
-        cache.scores, cache.token_ids, g)
+    # Scalar token_id (static batch) broadcasts to the per-slot vector form
+    # used by the continuous-batching engine (each slot at its own position).
+    tid = jnp.broadcast_to(jnp.asarray(token_id, jnp.int32).reshape(-1), (B,))
+    upd = jax.vmap(topk_update)(cache.scores, cache.token_ids, g, tid)
     selected = upd.selected                                        # [B, E]
 
     eo = expert_fn(x_t)                                            # [B, E, d]

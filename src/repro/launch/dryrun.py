@@ -26,7 +26,7 @@ from repro.configs.base import SHAPES
 from repro.configs.registry import get_config, list_archs, shape_cells
 from repro.launch import sharding as SH
 from repro.launch import specs as SPEC
-from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.hlo_cost import analyze as hlo_analyze, xla_cost_dict
 from repro.launch.mesh import dp_axes, make_production_mesh
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
@@ -116,7 +116,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = xla_cost_dict(compiled)
         hlo_text = compiled.as_text()
         loop_aware = hlo_analyze(hlo_text)   # trip-count-corrected totals
 

@@ -36,6 +36,16 @@ _COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s*\(.*\)\s*->")
 _OPCODE = re.compile(r"([\w\-]+)\((.*)")
 
 
+def xla_cost_dict(compiled) -> dict:
+    """`compiled.cost_analysis()` normalized to a flat dict: depending on the
+    jax/jaxlib version it returns a dict or a one-element list of dicts
+    (per device partition)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _parse_instr(line: str):
     """'%name = SHAPE opcode(args), attrs' -> (name, shape, op, rest).
     Handles tuple shapes containing commas, layouts and /*index=N*/ comments."""
@@ -94,6 +104,11 @@ _BYTES_OPS = {"fusion", "dot", "copy", "custom-call", "dynamic-slice",
               "cholesky", "triangular-solve", *COLLECTIVES}
 _SKIP_BYTES = {"get-tuple-element", "tuple", "parameter", "constant",
                "bitcast", "after-all", "while", "conditional", "call"}
+# Layout/shape ops excluded from the fallback below for the same reason they
+# are excluded from _BYTES_OPS (fuse into consumers on TPU).
+_LAYOUT_OPS = {"transpose", "reshape", "broadcast", "iota", "convert",
+               "bitcast-convert", "reverse", "pad", "slice",
+               "copy-start", "copy-done"}
 
 
 def _shape_bytes(shape_str: str) -> int:
@@ -144,6 +159,7 @@ def parse_computations(hlo: str) -> dict:
     # symbol table per computation: %name -> shape string
     symbols: dict[str, str] = {}
     upcast_syms: set[str] = set()
+    fusion_bodies: set[str] = set()   # computations called BY fusion ops
 
     for line in hlo.splitlines():
         if line.startswith("ENTRY ") or (line.startswith("%") and "->" in line
@@ -200,6 +216,8 @@ def parse_computations(hlo: str) -> dict:
         if op not in ("while",):
             for cm in _CALLS.finditer(line):
                 cur.calls.append((cm.group(1), 1))
+                if op == "fusion":
+                    fusion_bodies.add(cm.group(1))
             bm = _BRANCHES.search(line)
             if bm:
                 for b in bm.group(1).split(","):
@@ -238,12 +256,20 @@ def parse_computations(hlo: str) -> dict:
                 b = _shape_bytes(shape)
                 if b >= 16 * 2**20:
                     cur.upcast += b
-        if op in _BYTES_OPS:
+        fallback = (op not in _BYTES_OPS and op not in _SKIP_BYTES
+                    and op not in _LAYOUT_OPS)
+        if op in _BYTES_OPS or fallback:
+            # The fallback catches UNFUSED elementwise ops (tanh, add,
+            # select, ...): the CPU backend schedules them as standalone
+            # top-level instructions — a real result+operands buffer
+            # traversal. Inside fusion bodies the same opcodes are on-chip
+            # temporaries already covered by the fusion call site's entry in
+            # _BYTES_OPS, so the second pass drops fallback instrs there.
             ops_part = rest.split(")")[0]
             onames = _OPERANDS.findall(ops_part)
             cur.instrs.append((op, shape, [
                 (on, symbols.get(on, ""), on in upcast_syms)
-                for on in onames]))
+                for on in onames], fallback))
 
     # ---- second pass: bytes attribution.
     # * dynamic-slice/gather read only the sliced region (NOT the full
@@ -256,7 +282,10 @@ def parse_computations(hlo: str) -> dict:
         invariant = {sym for sym, idx in c.param_gte.items()
                      if idx < len(c.root_operands)
                      and c.root_operands[idx] == sym}
-        for op, shape, operands in c.instrs:
+        is_fusion_body = c.name in fusion_bodies
+        for op, shape, operands, fallback in c.instrs:
+            if fallback and is_fusion_body:
+                continue        # on-chip temporary, counted at the call site
             rb = _shape_bytes(shape)
             if op == "dynamic-update-slice":
                 upd = _shape_bytes(operands[1][1]) if len(operands) > 1 else rb

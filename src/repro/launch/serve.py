@@ -1,6 +1,16 @@
-"""Batched serving driver with KV + GO caches (the paper's generation path).
+"""Serving drivers with KV + GO caches (the paper's generation path).
 
-Flow per batch of requests:
+Two modes share the same compiled kernels:
+
+  generate()        static batch — a fixed batch of requests moves lock-step
+                    from prefill to completion. The reference semantics (and
+                    the oracle the serving tests compare against).
+  ServingEngine     continuous batching (repro/serving) — requests join
+                    mid-flight into free slots of a pooled KV+GO cache and
+                    retire on EOS/length; nothing stalls, nothing recompiles.
+                    This is the default for the CLI below.
+
+Flow per request, either way:
   1. prefill() — full-sequence pass fills the KV caches and, for
      expert-choice MoE, builds the per-layer GO caches (paper eq. 4-5);
   2. serve_step() per generated token — O(1) state growth: the gate sees ONE
@@ -9,7 +19,10 @@ Flow per batch of requests:
 
 CPU-runnable with smoke configs:
   PYTHONPATH=src python -m repro.launch.serve --arch llama_moe_4_16 --smoke \
-      --batch 4 --prompt 32 --gen 16
+      --requests 8 --slots 4 --prompt 32 --gen 16
+  # static-batch reference path:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama_moe_4_16 --smoke \
+      --static --batch 4 --prompt 32 --gen 16
 """
 from __future__ import annotations
 
@@ -22,16 +35,20 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.models.model import model_init, prefill, serve_step
+from repro.serving import ServingEngine
 
 
 def generate(params, cfg, prompts: jax.Array, gen_tokens: int,
              extras: dict | None = None, *, greedy: bool = True,
-             key=None) -> dict:
-    """prompts [B, T] -> generated [B, gen_tokens] (+ stats)."""
+             key=None, max_len: int = 0) -> dict:
+    """prompts [B, T] -> generated [B, gen_tokens] (+ stats). `max_len` sizes
+    the KV/GO cache (0 -> prompt + gen + 1); pass the slot pool's max_tokens
+    to compare bit-exactly against the continuous-batching engine."""
     B, T = prompts.shape
     state, logits = jax.jit(
         prefill, static_argnames=("cfg", "max_len"))(
-            params, prompts, cfg, extras or {}, max_len=T + gen_tokens + 1)
+            params, prompts, cfg, extras or {},
+            max_len=max_len or (T + gen_tokens + 1))
     step = jax.jit(serve_step, static_argnames="cfg")
 
     out = []
@@ -54,11 +71,45 @@ def generate(params, cfg, prompts: jax.Array, gen_tokens: int,
     }
 
 
+def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
+                     num_slots: int, max_tokens: int = 0,
+                     extras: dict | None = None,
+                     arrival_steps: list | None = None) -> dict:
+    """Run a list of prompts through the continuous-batching engine.
+    Returns per-request token arrays plus engine stats."""
+    max_tokens = max_tokens or (
+        max(len(p) for p in prompts) + gen_tokens + 1)
+    eng = ServingEngine(params, cfg, num_slots=num_slots,
+                        max_tokens=max_tokens, extras=extras)
+    ids = []
+    for i, p in enumerate(prompts):
+        step = arrival_steps[i] if arrival_steps else 0
+        ids.append(eng.submit(p, gen_tokens, extras=extras,
+                              arrival_step=step))
+    t0 = time.time()
+    fin = eng.run()
+    dt = time.time() - t0
+    toks = {rid: np.asarray(fin[rid].tokens, np.int32) for rid in ids}
+    return {
+        "tokens": toks,
+        "decode_s": dt,
+        "tok_per_s": sum(len(t) for t in toks.values()) / dt,
+        "stats": eng.stats(),
+        "engine": eng,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--static", action="store_true",
+                    help="static-batch generate() instead of the engine")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch size for --static")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="request count for the engine")
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     args = ap.parse_args()
@@ -66,17 +117,35 @@ def main():
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(0)
     params = model_init(key, cfg)
-    prompts = jax.random.randint(
-        key, (args.batch, args.prompt), 0, cfg.vocab_size, dtype=jnp.int32)
     extras = {}
     if cfg.cross_attn_every:
         extras["image_embeds"] = extras["memory"] = jnp.zeros(
-            (args.batch, cfg.num_image_tokens, cfg.d_model),
-            jnp.dtype(cfg.dtype))
-    res = generate(params, cfg, prompts, args.gen, extras)
-    print(f"generated {res['tokens'].shape} in {res['decode_s']:.2f}s "
+            (1 if not args.static else args.batch, cfg.num_image_tokens,
+             cfg.d_model), jnp.dtype(cfg.dtype))
+
+    if args.static:
+        prompts = jax.random.randint(
+            key, (args.batch, args.prompt), 0, cfg.vocab_size, dtype=jnp.int32)
+        res = generate(params, cfg, prompts, args.gen, extras)
+        print(f"generated {res['tokens'].shape} in {res['decode_s']:.2f}s "
+              f"({res['tok_per_s']:.1f} tok/s)")
+        print("sample:", np.asarray(res["tokens"][0])[:16])
+        return
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=args.prompt, dtype=np.int32)
+               for _ in range(args.requests)]
+    # staggered arrivals: one new request every other engine tick
+    arrivals = [2 * i for i in range(args.requests)]
+    res = serve_continuous(params, cfg, prompts, args.gen,
+                           num_slots=args.slots, extras=extras or None,
+                           arrival_steps=arrivals)
+    s = res["stats"]
+    print(f"served {s['finished']} requests over {s['steps']} ticks on "
+          f"{args.slots} slots in {res['decode_s']:.2f}s "
           f"({res['tok_per_s']:.1f} tok/s)")
-    print("sample:", np.asarray(res["tokens"][0])[:16])
+    first = res["tokens"][min(res["tokens"])]
+    print("sample:", first[:16])
 
 
 if __name__ == "__main__":

@@ -390,7 +390,7 @@ def attn_decode(
     x_t: jax.Array,               # [B, 1, D] current token
     cache_k: jax.Array,           # [B, Smax, Hkv, hd]
     cache_v: jax.Array,
-    t,                            # traced int32 scalar: current position
+    t,                            # traced int32 position: scalar or [B] per-slot
     *,
     cfg,
     window=0,
@@ -399,6 +399,10 @@ def attn_decode(
     B = x_t.shape[0]
     hd = cfg.resolved_head_dim()
     nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    # Per-slot positions: every slot of a continuous-batching pool sits at its
+    # own decode offset. A scalar t (static batch, all rows in lock-step) is
+    # broadcast so both paths share one compiled graph.
+    t_vec = jnp.broadcast_to(jnp.asarray(t, jnp.int32).reshape(-1), (B,))
 
     q = x_t @ params["wq"]
     k = x_t @ params["wk"]
@@ -411,19 +415,19 @@ def attn_decode(
 
     if use_rope:
         from repro.models.layers import rope_angles
-        pos = jnp.asarray(t, jnp.int32)[None]
-        cos, sin = rope_angles(pos, hd, cfg.rope_theta)
-        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
-        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+        cos, sin = rope_angles(t_vec[:, None], hd, cfg.rope_theta)  # [B,1,hd/2]
+        q = apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+        k = apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
 
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, t, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, t, 0, 0))
+    rows = jnp.arange(B)
+    cache_k = cache_k.at[rows, t_vec].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[rows, t_vec].set(v[:, 0].astype(cache_v.dtype))
 
     Smax = cache_k.shape[1]
     k_pos = jnp.arange(Smax, dtype=jnp.int32)
-    mask = k_pos <= t
+    mask = k_pos[None, :] <= t_vec[:, None]                         # [B, Smax]
     w = jnp.asarray(window, jnp.int32)
-    mask &= jnp.where(w > 0, k_pos > t - w, True)
+    mask &= jnp.where(w > 0, k_pos[None, :] > t_vec[:, None] - w, True)
     out = _decode_sdpa(q, cache_k, cache_v, mask, cfg.logit_softcap)
     out = out.astype(x_t.dtype).reshape(B, 1, nq * hd) @ params["wo"]
     return out, cache_k, cache_v

@@ -17,6 +17,14 @@ Public API:
   init_decode_state(cfg, batch, max_len, extras)         -> state pytree
   prefill(params, tokens, cfg, extras)                   -> (state, last_logits)
   serve_step(params, state, tokens_t, cfg)               -> (logits, state)
+  init_decode_slot(state, slot)                          -> state (slot reset)
+  write_decode_slot(state, slot, src_state)              -> state (slot filled)
+
+Decode positions: `state["t"]` is either a scalar (static batch — every row in
+lock-step, the classic generate() path) or an int32 vector [B] (per-slot —
+the continuous-batching pool in repro/serving, where each slot sits at its
+own offset). All decode kernels broadcast the scalar form to the vector form
+internally, so both run the same compiled graph.
 
 All layer stacks are scanned (jax.lax.scan over stacked params) so the HLO
 stays compact at 62-100 layers; heterogeneous families scan homogeneous
@@ -31,7 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import moe as MOE
-from repro.core.go_cache import GOCache, go_cache_init, go_cache_prefill
+from repro.core.go_cache import (GOCache, go_cache_init, go_cache_init_slot,
+                                 go_cache_prefill, go_cache_write_slot)
 from repro.core.grouping import default_groups, group_of_expert_from_groups
 from repro.models import attention as ATT
 from repro.models import blocks as B
@@ -333,12 +342,15 @@ def kv_cache_spec(cfg, batch: int, max_len: int):
 
 
 def init_decode_state(cfg, batch: int, max_len: int,
-                      extras: dict | None = None) -> dict:
+                      extras: dict | None = None, *,
+                      per_slot_t: bool = False) -> dict:
     """Zero-initialized decode state. `extras` may carry the cross-attention
-    memory (image/audio embeds already encoded) for vlm/enc-dec archs."""
+    memory (image/audio embeds already encoded) for vlm/enc-dec archs.
+    With per_slot_t, `t` is an int32 vector [batch] so every slot advances
+    independently (the continuous-batching pool layout)."""
     extras = extras or {}
     dt = jnp.dtype(cfg.dtype)
-    st = {"t": jnp.zeros((), jnp.int32)}
+    st = {"t": jnp.zeros((batch,) if per_slot_t else (), jnp.int32)}
     shp = kv_cache_spec(cfg, batch, max_len)
 
     if cfg.block == "attn" and cfg.encoder_layers > 0:
@@ -380,6 +392,71 @@ def init_decode_state(cfg, batch: int, max_len: int,
         if n_app:
             st["k"] = jnp.zeros((n_app, *shp), dt)
             st["v"] = jnp.zeros((n_app, *shp), dt)
+    return st
+
+
+# ------------------------------------------------------------- per-slot state
+#
+# The continuous-batching engine (repro/serving) owns ONE pooled decode state
+# of `num_slots` batch rows and retires/admits requests per row. These two ops
+# are the whole interface it needs: reset a row, and splat a single-request
+# prefill (batch-1 state) into a row. Batch axes per key:
+#   t -> 0 (vector form)   k/v/go/ssm/slstm -> 1 (leading layer axis)
+#   mlstm -> 2 (segment, layer, batch)      memory -> 0
+
+def init_decode_slot(state: dict, slot) -> dict:
+    """Reset pool slot `slot` (traced int32 ok) to the empty decode state."""
+    st = dict(state)
+    if st["t"].ndim == 1:
+        st["t"] = st["t"].at[slot].set(0)
+    else:
+        st["t"] = jnp.zeros((), jnp.int32)
+    for key in ("k", "v"):
+        if key in st:
+            st[key] = st[key].at[:, slot].set(0)
+    if "go" in st:
+        # vmap over the stacked layer axis -> per-layer [B, ...] caches
+        st["go"] = jax.vmap(lambda c: go_cache_init_slot(c, slot))(st["go"])
+    if "ssm" in st:
+        st["ssm"] = jax.tree.map(lambda a: a.at[:, slot].set(0), st["ssm"])
+    if "mlstm" in st:
+        st["mlstm"] = jax.tree.map(lambda a: a.at[:, :, slot].set(0), st["mlstm"])
+    if "slstm" in st:
+        st["slstm"] = jax.tree.map(lambda a: a.at[:, slot].set(0), st["slstm"])
+    if "memory" in st:
+        st["memory"] = st["memory"].at[slot].set(0)
+    return st
+
+
+def write_decode_slot(state: dict, slot, src: dict) -> dict:
+    """Write a batch-1 decode state `src` (a single-request prefill built with
+    the SAME max_len as the pool) into pool slot `slot`."""
+    st = dict(state)
+    st["t"] = st["t"].at[slot].set(jnp.asarray(src["t"], jnp.int32).reshape(()))
+    for key in ("k", "v"):
+        if key in st:
+            assert st[key].shape[2:] == src[key].shape[2:], \
+                f"{key}: pool {st[key].shape} vs slot {src[key].shape} " \
+                "(prefill must use the pool's max_len)"
+            st[key] = st[key].at[:, slot].set(src[key][:, 0].astype(st[key].dtype))
+    if "go" in st:
+        st["go"] = jax.vmap(lambda c, s: go_cache_write_slot(c, slot, s))(
+            st["go"], src["go"])
+    if "ssm" in st:
+        st["ssm"] = jax.tree.map(
+            lambda a, b: a.at[:, slot].set(b[:, 0].astype(a.dtype)),
+            st["ssm"], src["ssm"])
+    if "mlstm" in st:
+        st["mlstm"] = jax.tree.map(
+            lambda a, b: a.at[:, :, slot].set(b[:, :, 0].astype(a.dtype)),
+            st["mlstm"], src["mlstm"])
+    if "slstm" in st:
+        st["slstm"] = jax.tree.map(
+            lambda a, b: a.at[:, slot].set(b[:, 0].astype(a.dtype)),
+            st["slstm"], src["slstm"])
+    if "memory" in st:
+        st["memory"] = st["memory"].at[slot].set(
+            src["memory"][0].astype(st["memory"].dtype))
     return st
 
 
@@ -478,7 +555,9 @@ def _dec_vlm(params, x, state, cfg):
 def _dec_whisper(params, x, state, cfg):
     t = state["t"]
     memory = state["memory"]
-    x = x + params["pos_embed"][state["t"]][None, None, :]
+    t_vec = jnp.broadcast_to(
+        jnp.asarray(t, jnp.int32).reshape(-1), (x.shape[0],))
+    x = x + params["pos_embed"][t_vec][:, None, :]
 
     def body(carry, xs):
         x, K, V, l = carry

@@ -1,0 +1,11 @@
+"""Continuous-batching serving over the paper's KV + GO cache pool.
+
+  scheduler  FIFO admission queue + max-slots/max-tokens policy (host-side)
+  pool       fixed-width slot pool owning the pooled decode state
+  engine     jitted masked decode step; admit -> prefill -> decode -> retire
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.pool import SlotPool
+from repro.serving.scheduler import FIFOScheduler, Request
+
+__all__ = ["ServingEngine", "SlotPool", "FIFOScheduler", "Request"]

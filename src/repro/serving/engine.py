@@ -1,0 +1,175 @@
+"""Continuous-batching serving engine over the pooled KV + GO cache state.
+
+The paper's GO cache makes each decode step O(1) per request; this engine
+makes the REQUEST schedule dynamic too. One jitted decode step runs over a
+fixed slot array with an active mask:
+
+  admit    a queued request prefills into a free slot — its KV rows and
+           per-layer GO cache entries are written in place (write_decode_slot)
+           while the other slots keep decoding between engine ticks;
+  decode   every tick advances ALL occupied slots one token in a single
+           batched serve_step — slots sit at different positions thanks to
+           the per-slot `t` vector, so nothing recompiles and nobody stalls;
+  retire   a slot frees on EOS or length; its caches are reset
+           (init_decode_slot) and the row is immediately reusable.
+
+Greedy decoding is the default and is bit-identical per request to the
+static-batch `repro.launch.serve.generate` path (tests/test_serving.py):
+the same compiled kernels run in both, and every batched op is row-wise
+independent.
+
+Compile surface: the decode step compiles ONCE per (pool width, max_tokens);
+prefill compiles once per distinct prompt length (pad prompts to buckets in
+front of the engine if that matters for your trace).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import prefill, serve_step
+from repro.serving.pool import SlotPool
+from repro.serving.scheduler import FIFOScheduler, Request
+
+
+@partial(jax.jit, static_argnames="cfg")
+def _decode_step(params, state, tokens, active, cfg):
+    """One batched decode tick. Retired slots still flow through the math
+    (masking beats reshaping — shapes never change) but their position is
+    pinned to 0 so they stay inside max_tokens until the next admission."""
+    logits, state = serve_step(params, state, tokens, cfg)
+    state["t"] = jnp.where(active, state["t"], 0)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+
+# prefill compiles once per (prompt length, max_len) and is shared across
+# engine instances — module-level so benchmark sweeps don't recompile it
+_jit_prefill = jax.jit(prefill, static_argnames=("cfg", "max_len"))
+
+
+class ServingEngine:
+    """Continuous-batching engine: submit requests any time, run ticks."""
+
+    def __init__(self, params, cfg, *, num_slots: int = 8,
+                 max_tokens: int = 256, max_queue: int = 0,
+                 extras: dict | None = None):
+        self.params = params
+        self.cfg = cfg
+        self.pool = SlotPool(cfg, num_slots, max_tokens, extras)
+        self.scheduler = FIFOScheduler(num_slots, max_tokens, max_queue)
+        self.step_count = 0
+        self.finished: dict[int, Request] = {}
+        self._ids = itertools.count()
+
+    # ------------------------------------------------------------- submission
+
+    def submit(self, prompt, max_new_tokens: int, *, eos_id: int | None = None,
+               extras: dict | None = None, arrival_step: int = 0,
+               request_id: int | None = None) -> int:
+        """Queue a request. `arrival_step` > current step defers arrival to
+        that engine tick (trace replay). Returns the request id."""
+        rid = request_id if request_id is not None else next(self._ids)
+        req = Request(
+            request_id=rid,
+            prompt=np.asarray(prompt, np.int32).reshape(-1),
+            max_new_tokens=int(max_new_tokens),
+            eos_id=eos_id,
+            extras=extras,
+            arrival_step=arrival_step,
+        )
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        req.arrival_time = time.monotonic()
+        self.scheduler.submit(req, now_step=self.step_count)
+        return rid
+
+    # ------------------------------------------------------------------ ticks
+
+    def step(self) -> list[Request]:
+        """One engine tick: admit due+queued requests into free slots, then
+        advance every occupied slot one token. Returns requests finished on
+        this tick."""
+        done: list[Request] = []
+
+        for req in self.scheduler.poll(self.step_count):
+            req.arrival_time = time.monotonic()
+
+        free = self.pool.free_slots()
+        while free:
+            req = self.scheduler.next_admission(self.pool.num_active())
+            if req is None:
+                break
+            self._admit(free.pop(0), req, done)
+
+        if self.pool.any_active():
+            toks, self.pool.state = _decode_step(
+                self.params, self.pool.state,
+                jnp.asarray(self.pool.pending),
+                jnp.asarray(self.pool.active_mask()), self.cfg)
+            toks = np.asarray(toks)
+            self.step_count += 1
+            for slot, req in enumerate(self.pool.owner):
+                if req is None:
+                    continue
+                tok = int(toks[slot])
+                req.tokens.append(tok)
+                self.pool.pending[slot] = tok
+                self.pool.remaining[slot] -= 1
+                if self.pool.remaining[slot] <= 0 or \
+                        (req.eos_id is not None and tok == req.eos_id):
+                    self._finish(slot, done)
+        else:
+            # idle tick — jump straight to the next trace arrival
+            nxt = self.scheduler.next_arrival_step()
+            self.step_count = max(self.step_count + 1,
+                                  nxt if nxt is not None else 0)
+        return done
+
+    def run(self) -> dict[int, Request]:
+        """Tick until queue, trace and pool drain; returns finished requests
+        keyed by request id (token streams in Request.tokens)."""
+        while self.scheduler.has_pending() or self.pool.any_active():
+            self.step()
+        return self.finished
+
+    # -------------------------------------------------------------- internals
+
+    def _admit(self, slot: int, req: Request, done: list[Request]) -> None:
+        """Prefill a request into `slot` mid-flight: fills that row's KV and
+        GO cache entries and emits the request's first token (from the
+        prefill logits — exactly what static generate() emits first)."""
+        slot_state, logits = _jit_prefill(
+            self.params, jnp.asarray(req.prompt, jnp.int32)[None, :],
+            self.cfg, req.extras or {}, self.pool.max_tokens)
+        first = int(jnp.argmax(logits, axis=-1)[0])
+        req.admit_step = self.step_count
+        req.tokens.append(first)
+        self.pool.admit(slot, req, slot_state, first)
+        if self.pool.remaining[slot] <= 0 or \
+                (req.eos_id is not None and first == req.eos_id):
+            self._finish(slot, done)
+
+    def _finish(self, slot: int, done: list[Request]) -> None:
+        req = self.pool.retire(slot)
+        req.finish_step = self.step_count
+        req.finish_time = time.monotonic()
+        self.finished[req.request_id] = req
+        done.append(req)
+
+    # ------------------------------------------------------------------ stats
+
+    def stats(self) -> dict:
+        reqs = self.finished.values()
+        return {
+            "steps": self.step_count,
+            "admitted": self.pool.admitted_total,
+            "finished": len(self.finished),
+            "queued": len(self.scheduler.queue),
+            "active": self.pool.num_active(),
+            "tokens_out": sum(len(r.tokens) for r in reqs),
+        }

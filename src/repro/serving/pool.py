@@ -1,0 +1,91 @@
+"""Slot pool: owns the pooled per-request KV + GO decode state.
+
+One decode state of `num_slots` batch rows lives on device for the whole
+engine lifetime; requests are admitted into free rows and retired out of
+them without reshaping anything — so the jitted decode step never
+recompiles. Per-slot positions (`state["t"]` as an int32 vector) are what
+let rows sit at different sequence offsets (models/model.py per-slot ops).
+
+Host-side metadata (which request owns which row, its next input token, how
+many tokens it still owes) stays in numpy; only the cache tensors live in
+jax. The GO cache rows ride along with the KV rows: `write_decode_slot`
+splats a single-request prefill (KV + per-layer GO entries) into the row,
+`init_decode_slot` clears it at retirement (scores back to -inf) so a stale
+expert-choice cache can never leak into the next occupant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import (init_decode_slot, init_decode_state,
+                                write_decode_slot)
+from repro.serving.scheduler import Request
+
+# Module-level jits: the slot index is traced, so each op compiles once per
+# pool SHAPE — shared across every engine/pool instance of that shape (the
+# throughput benchmark spins up one engine per slot count).
+_write_slot = jax.jit(write_decode_slot)
+_reset_slot = jax.jit(init_decode_slot)
+
+
+class SlotPool:
+    """Fixed-width pool of per-request decode-cache rows."""
+
+    def __init__(self, cfg, num_slots: int, max_tokens: int,
+                 extras: dict | None = None):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_tokens = max_tokens
+        # Per-request cross-attn memory arrives batch-1 via each prefill and
+        # is splatted in by write_decode_slot — the pool itself always inits
+        # the default (zero, [num_slots, ...]) memory rows.
+        pool_extras = {k: v for k, v in (extras or {}).items()
+                       if k != "memory"}
+        self.state = init_decode_state(
+            cfg, num_slots, max_tokens, pool_extras, per_slot_t=True)
+        # host-side slot metadata
+        self.owner: list[Request | None] = [None] * num_slots
+        self.pending = np.zeros(num_slots, np.int32)    # next input token
+        self.remaining = np.zeros(num_slots, np.int64)  # tokens still owed
+        self.admitted_total = 0
+
+    # ---------------------------------------------------------------- queries
+
+    def free_slots(self) -> list[int]:
+        return [i for i, o in enumerate(self.owner) if o is None]
+
+    def num_active(self) -> int:
+        return self.num_slots - len(self.free_slots())
+
+    def any_active(self) -> bool:
+        return any(o is not None for o in self.owner)
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([o is not None for o in self.owner], bool)
+
+    # -------------------------------------------------------------- lifecycle
+
+    def admit(self, slot: int, req: Request, slot_state: dict,
+              first_token: int) -> None:
+        """Install a prefilled request into a free row: write its KV + GO
+        cache entries and position in place, arm its first decode input."""
+        assert self.owner[slot] is None, f"slot {slot} is occupied"
+        self.state = _write_slot(self.state, slot, slot_state)
+        self.owner[slot] = req
+        self.pending[slot] = first_token
+        self.remaining[slot] = req.max_new_tokens - 1   # first token emitted
+        self.admitted_total += 1
+        req.slot = slot
+
+    def retire(self, slot: int) -> Request:
+        """Free a row: clear its caches (GO scores to -inf) and return the
+        finished request. The row is immediately reusable."""
+        req = self.owner[slot]
+        assert req is not None, f"slot {slot} is already free"
+        self.state = _reset_slot(self.state, slot)
+        self.owner[slot] = None
+        self.pending[slot] = 0
+        self.remaining[slot] = 0
+        return req

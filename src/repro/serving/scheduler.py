@@ -1,0 +1,111 @@
+"""Admission / retirement scheduling for the continuous-batching engine.
+
+Host-side only (numpy, no jax): the scheduler decides WHICH request enters
+the pool next; the pool/engine decide WHERE (free slot) and do the device
+work. Policy knobs:
+
+  max_slots   pool width — at most this many requests in flight at once
+  max_tokens  pool sequence capacity — prompt + generation of every request
+              must fit (enforced at submit; nothing is silently truncated)
+  max_queue   optional backlog bound (0 = unbounded) over queued AND
+              not-yet-arrived trace requests; submit raises when the backlog
+              is full, the serving analogue of load-shedding
+
+Requests may carry an `arrival_step`: the trace-replay hook used by the
+staggered-arrival tests and the Poisson-trace throughput benchmark. Such a
+request stays in the `pending` list until the engine's step counter reaches
+its arrival step, then joins the FIFO queue.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request plus its lifecycle bookkeeping."""
+
+    request_id: int
+    prompt: np.ndarray               # [T] int32 token ids
+    max_new_tokens: int
+    eos_id: int | None = None
+    extras: dict | None = None       # per-request cross-attn memory (vlm/audio)
+    arrival_step: int = 0            # engine step at which the request arrives
+
+    # --- filled in by the engine ---
+    arrival_time: float = 0.0        # wall-clock when it joined the queue
+    admit_step: int = -1
+    finish_step: int = -1
+    finish_time: float = 0.0
+    slot: int = -1                   # slot it was admitted into
+    tokens: list[int] = field(default_factory=list)
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_time - self.arrival_time
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+class FIFOScheduler:
+    """FIFO admission queue with the max-slots / max-tokens policy."""
+
+    def __init__(self, max_slots: int, max_tokens: int, max_queue: int = 0):
+        self.max_slots = max_slots
+        self.max_tokens = max_tokens
+        self.max_queue = max_queue
+        self.queue: deque[Request] = deque()
+        self._pending: list[tuple[int, int, Request]] = []   # arrival-step heap
+
+    # ------------------------------------------------------------- submission
+
+    def submit(self, req: Request, *, now_step: int = 0) -> None:
+        """Queue a request (immediately, or at its arrival_step if later)."""
+        need = req.prompt_len + req.max_new_tokens
+        if need > self.max_tokens:
+            raise ValueError(
+                f"request {req.request_id}: prompt({req.prompt_len}) + "
+                f"max_new_tokens({req.max_new_tokens}) = {need} exceeds the "
+                f"pool's max_tokens={self.max_tokens}")
+        backlog = len(self.queue) + len(self._pending)
+        if self.max_queue and backlog >= self.max_queue:
+            raise RuntimeError(
+                f"admission queue full (max_queue={self.max_queue})")
+        if req.arrival_step > now_step:
+            heapq.heappush(
+                self._pending, (req.arrival_step, req.request_id, req))
+            return
+        self.queue.append(req)
+
+    def poll(self, step: int) -> list[Request]:
+        """Move trace-replay requests whose arrival step has come into the
+        FIFO queue; returns the newly arrived requests."""
+        arrived = []
+        while self._pending and self._pending[0][0] <= step:
+            _, _, req = heapq.heappop(self._pending)
+            self.queue.append(req)
+            arrived.append(req)
+        return arrived
+
+    # -------------------------------------------------------------- admission
+
+    def next_admission(self, num_active: int) -> Request | None:
+        """Pop the next request to admit, or None (empty queue or the pool is
+        already at max_slots)."""
+        if not self.queue or num_active >= self.max_slots:
+            return None
+        return self.queue.popleft()
+
+    def has_pending(self) -> bool:
+        return bool(self.queue) or bool(self._pending)
+
+    def next_arrival_step(self) -> int | None:
+        """Earliest future arrival step (None when no trace-replay requests
+        remain) — lets an idle engine fast-forward its tick counter."""
+        return self._pending[0][0] if self._pending else None

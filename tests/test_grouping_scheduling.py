@@ -1,6 +1,6 @@
 """C2 grouping + C3 scheduling invariants (hypothesis property tests)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st   # hypothesis, or skip shim
 
 from repro.core import grouping as G
 from repro.core import scheduling as S
