@@ -1,0 +1,161 @@
+"""MoE execution-path benchmark: xla-masked vs Pallas tile-dispatch, and
+GO-cache decode dense-vs-selected — the perf trajectory for the C1/C4 engine.
+
+Measures, on the SAME weights and routing:
+
+  forward   group_forward on backend="xla" (masked member loop: g x redundant
+            FLOPs over the pooled group buffer) vs backend="pallas" (each
+            routed pair streams through the grouped GEMM exactly once).
+            Reports us/call and the redundant-FLOP ratio of each path
+            (FFN rows computed / routed pairs; 1.0 = zero redundancy).
+  decode    the GO-cache step with the dense fallback (expert_ffn_all: B*E
+            FFN rows per step) vs the selected-experts grouped GEMM
+            (kernels/ops.py:go_selected_ffn: only pairs the TopKUpdate
+            selected). Reports us/step and rows computed per step.
+
+Emits machine-readable ``BENCH_moe_path.json`` next to the cwd (or --out)
+so CI can track the numbers over time. On CPU the pallas kernels run in
+interpret mode — absolute us are a correctness-path baseline there; the
+row/FLOP accounting is platform-independent.
+
+Usage:  PYTHONPATH=src python -m benchmarks.moe_path [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+
+
+def _timeit(fn, iters: int = 3) -> float:
+    fn()  # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(smoke: bool = True, out: str = "BENCH_moe_path.json") -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import MoEConfig
+    from repro.core import moe as MOE
+    from repro.core.go_cache import go_cache_init, go_cache_step
+    from repro.core.grouping import default_groups, group_of_expert_from_groups
+    from repro.kernels.ops import go_selected_ffn, plan_tile_dispatch
+
+    if smoke:
+        T, d, E, k, g, de, bn, steps, B = 128, 64, 8, 2, 2, 64, 8, 8, 8
+    else:
+        T, d, E, k, g, de, bn, steps, B = 1024, 256, 16, 4, 2, 256, 128, 32, 32
+
+    e_xla = MoEConfig(num_experts=E, top_k=k, d_expert=de, group_size=g,
+                      capacity_factor=2.0, backend="xla")
+    e_pal = dataclasses.replace(e_xla, backend="pallas", gmm_block_rows=bn)
+    key = jax.random.PRNGKey(0)
+    params = MOE.moe_init(key, d, e_xla, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, d), jnp.float32) * 0.3
+    goe = jnp.asarray(group_of_expert_from_groups(default_groups(e_xla)))
+
+    f_xla = jax.jit(lambda x: MOE.group_forward(params, x, e_xla, goe)[0])
+    f_pal = jax.jit(lambda x: MOE.group_forward(params, x, e_pal, goe)[0])
+    us_xla = _timeit(lambda: f_xla(x).block_until_ready())
+    us_pal = _timeit(lambda: f_pal(x).block_until_ready())
+
+    # FFN-row accounting: the xla masked loop runs every group member over
+    # the WHOLE pooled group buffer; pallas computes each pair's tile once.
+    N = T * k
+    G = E // g
+    C_exp = max(1, math.ceil(T * k / E * e_xla.capacity_factor))
+    C_grp = max(1, math.ceil(g * C_exp * 0.7))
+    rows_xla = g * G * C_grp                     # g member passes x G*C_grp
+    from repro.core.routing import token_choice
+    r = token_choice(x, params["gate"], k)
+    plan = plan_tile_dispatch(
+        r.expert_idx.reshape(-1).astype(jnp.int32), E, bn)
+    rows_pal = int(((plan.counts + bn - 1) // bn * bn).sum())  # tile-padded
+
+    # --- GO-cache decode: dense all-experts vs selected-only grouped GEMM
+    cache = go_cache_init(B, E, k, d, jnp.float32)
+    gate = params["gate"]
+    dense_fn = lambda xt: MOE.expert_ffn_all(params, xt)
+    sel_fn = lambda xt, sel, gg: go_selected_ffn(
+        xt, sel, gg, params["experts"], E, bn=bn)[0]
+
+    step_dense = jax.jit(lambda c, xt, t: go_cache_step(
+        c, xt, t, gate, dense_fn))
+    step_sel = jax.jit(lambda c, xt, t: go_cache_step(
+        c, xt, t, gate, contrib_fn=sel_fn))
+
+    # warm the cache so selection is sparse (empty cache selects everything)
+    xs = jax.random.normal(jax.random.PRNGKey(2), (steps + k, B, d)) * 0.3
+    for t in range(k):
+        cache = step_dense(cache, xs[t], t).cache
+
+    sel_rows = 0
+    c_d, c_s = cache, cache
+    for t in range(k, k + steps):
+        res = step_dense(c_d, xs[t], t)
+        c_d = res.cache
+        sel_rows += int(res.selected.sum())
+    us_dense = _timeit(
+        lambda: step_dense(cache, xs[k], k).y.block_until_ready())
+    for t in range(k, k + steps):
+        c_s = step_sel(c_s, xs[t], t).cache
+    us_sel = _timeit(
+        lambda: step_sel(cache, xs[k], k).y.block_until_ready())
+    assert np.allclose(np.asarray(c_d.outputs), np.asarray(c_s.outputs),
+                       atol=1e-5), "dense vs selected decode diverged"
+
+    report = {
+        "host_backend": jax.default_backend(),
+        "config": {"T": T, "d": d, "E": E, "k": k, "g": g, "d_expert": de,
+                   "bn": bn, "decode_batch": B, "decode_steps": steps},
+        "forward": {
+            "us_xla_masked": round(us_xla, 1),
+            "us_pallas": round(us_pal, 1),
+            "routed_pairs": N,
+            "ffn_rows_xla_masked": rows_xla,
+            "ffn_rows_pallas": rows_pal,
+            "redundant_flop_ratio_xla": round(rows_xla / N, 3),
+            "redundant_flop_ratio_pallas": round(rows_pal / N, 3),
+        },
+        "decode": {
+            "us_step_dense": round(us_dense, 1),
+            "us_step_selected": round(us_sel, 1),
+            "rows_dense_per_steps": steps * B * E,
+            "rows_selected_per_steps": sel_rows,
+            "row_ratio_dense_over_selected": round(
+                steps * B * E / max(1, sel_rows), 2),
+        },
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2)
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_moe_path.json")
+    args = ap.parse_args()
+    rep = run(smoke=args.smoke, out=args.out)
+    f, dck = rep["forward"], rep["decode"]
+    print(f"forward: xla {f['us_xla_masked']:.0f}us "
+          f"(FLOP ratio {f['redundant_flop_ratio_xla']:.2f}x) vs "
+          f"pallas {f['us_pallas']:.0f}us "
+          f"(ratio {f['redundant_flop_ratio_pallas']:.2f}x)")
+    print(f"decode:  dense {dck['us_step_dense']:.0f}us/"
+          f"{dck['rows_dense_per_steps']} rows vs selected "
+          f"{dck['us_step_selected']:.0f}us/{dck['rows_selected_per_steps']} "
+          f"rows ({dck['row_ratio_dense_over_selected']:.1f}x fewer)")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -65,6 +65,15 @@ def main() -> None:
     name, us, per_call = _timed("kernel_moe_gmm_interpret", _kern)
     rows.append((name, us, f"us_per_call={per_call:.0f}"))
 
+    # MoE execution-path trajectory: xla-masked vs pallas, dense vs selected
+    # decode (writes BENCH_moe_path.json for CI tracking)
+    from benchmarks import moe_path
+    name, us, mp = _timed("moe_path", lambda: moe_path.run(smoke=True))
+    rows.append((name, us,
+                 f"fwd_flop_ratio_xla={mp['forward']['redundant_flop_ratio_xla']:.2f}"
+                 f"/pallas={mp['forward']['redundant_flop_ratio_pallas']:.2f},"
+                 f"decode_row_x={mp['decode']['row_ratio_dense_over_selected']:.1f}"))
+
     print("name,us_per_call,derived")
     for n, u, d in rows:
         print(f"{n},{u:.0f},{d}")

@@ -25,6 +25,15 @@ class MoEConfig:
     capacity_factor: float = 1.25     # token-choice expert capacity
     balance_coef: float = 0.01        # aux balance-loss coefficient (training)
     use_grouped_gemm: bool = True     # group-multiplexed execution path (C1)
+    # --- execution backend ---
+    # "pallas" streams every path through the tile-dispatch grouped GEMM
+    # (kernels/moe_gmm.py): zero-redundancy C1 multiplexing, dropless.
+    # "xla" is the masked einsum realization (validation + CPU production).
+    # "auto" resolves per host: pallas on TPU (Mosaic), xla elsewhere —
+    # except under training (loss_fn), which pins "auto" to xla until the
+    # pallas kernels grow a VJP (see ROADMAP).
+    backend: str = "auto"             # "auto" | "xla" | "pallas"
+    gmm_block_rows: int = 0           # pallas row-tile height (0 = auto)
     # --- C4 ---
     go_cache: bool = True             # gate-output cache for expert-choice decode
 

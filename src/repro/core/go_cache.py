@@ -91,9 +91,11 @@ def go_cache_step(
     x_t: jax.Array,          # [B, d] incoming token hidden state
     token_id,                # int32 absolute position: scalar or [B] per-slot
     gate_w: jax.Array,       # [d, E]
-    expert_fn,               # (x [B, d]) -> [B, E, d] all-expert outputs
+    expert_fn=None,          # (x [B, d]) -> [B, E, d] all-expert outputs
     *,
     retain_outputs: bool = True,
+    contrib_fn=None,         # (x, selected, g) -> [B, E, d] fp32 weighted
+                             # contributions (zeros where unselected)
 ) -> GOStepResult:
     """One decode step under expert-choice routing with the GO cache.
 
@@ -101,11 +103,15 @@ def go_cache_step(
     per-expert cached-min comparison; the incoming token's combine weight is
     its softmax affinity, and only selecting experts contribute.
 
-    `expert_fn` computes per-expert FFN outputs for the single token. On the
-    multiplexed grouped-GEMM path only the selected experts' tiles are
-    streamed; the dense fallback computes all E and masks (correct either
-    way — `selected` carries the mask).
+    Expert compute comes from ONE of two callables: `expert_fn` (dense
+    fallback: all E expert FFNs, masked afterwards) or `contrib_fn` (the
+    multiplexed grouped-GEMM path, kernels/ops.py:go_selected_ffn: sees the
+    `selected` mask and streams ONLY the selected experts' tiles, returning
+    the already-weighted contributions). Both are correct; `selected`
+    carries the mask either way.
     """
+    if (expert_fn is None) == (contrib_fn is None):
+        raise ValueError("pass exactly one of expert_fn / contrib_fn")
     B, E, k = cache.scores.shape
     s_raw = x_t.astype(jnp.float32) @ gate_w.astype(jnp.float32)   # [B, E]
     g = jax.nn.softmax(s_raw, axis=-1)
@@ -116,8 +122,11 @@ def go_cache_step(
     upd = jax.vmap(topk_update)(cache.scores, cache.token_ids, g, tid)
     selected = upd.selected                                        # [B, E]
 
-    eo = expert_fn(x_t)                                            # [B, E, d]
-    contrib = g[..., None] * eo.astype(jnp.float32)                # [B, E, d]
+    if contrib_fn is not None:
+        contrib = contrib_fn(x_t, selected, g)                     # [B, E, d]
+    else:
+        eo = expert_fn(x_t)                                        # [B, E, d]
+        contrib = g[..., None] * eo.astype(jnp.float32)
     y = jnp.where(selected[..., None], contrib, 0.0).sum(axis=1)
 
     if retain_outputs:

@@ -8,14 +8,27 @@ Execution paths (all numerically validated against `dense_forward`):
                      Expert dim is EP-sharded; the C2 load-aware permutation is
                      applied to the expert axis at deployment so each EP shard
                      carries balanced aggregate load.
-  group_forward      C1 group-multiplexed XLA path: experts share a group lane
+  group_forward      C1 group-multiplexed path: experts share a group lane
                      with POOLED capacity (the TPU analogue of shared
                      peripherals: padding amortized at group granularity).
-                     The zero-redundancy version of this path is the Pallas
-                     kernel `kernels/moe_gmm`; the XLA version masks over the
-                     g members (correct, used for validation + CPU).
   expert-choice      routing where experts pick tokens (Zhou et al.); decode
                      uses the GO cache (core/go_cache.py) instead of this.
+
+Every routed path executes on one of two BACKENDS, selected by
+`MoEConfig.backend` (resolved by `resolve_backend`):
+
+  "xla"     masked/capacity-padded einsum realization. group_forward masks
+            over the g group members (g x redundant FLOPs); dispatch packs
+            [E, C, d] capacity buffers. Correct everywhere; the CPU default.
+  "pallas"  the tile-dispatch grouped GEMM (kernels/moe_gmm + kernels/ops):
+            (group, expert)-sorted rows stream through ONE execution lane,
+            each expert weight tile staged exactly once per column stripe —
+            the paper's C1 multiplexing with ZERO redundant member passes.
+            Combine weights are applied in-kernel (gmm_scaled); the path is
+            dropless (worst-case tile padding instead of capacity drops;
+            pooled-capacity overflow reduces to zero combine weights so the
+            C1 drop semantics are preserved bit-for-bit).
+  "auto"    pallas on TPU (Mosaic lowering), xla elsewhere.
 
 Aux outputs carry load statistics for the balance loss and for the C2
 workload tracer.
@@ -30,7 +43,22 @@ import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
 from repro.core import routing as R
+from repro.kernels import ops as OPS
 from repro.models.layers import dense_init, split
+
+
+def resolve_backend(e: MoEConfig) -> str:
+    """Resolve `MoEConfig.backend` to the concrete engine for this host."""
+    b = getattr(e, "backend", "auto")
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if b not in ("xla", "pallas"):
+        raise ValueError(f"unknown MoE backend: {b!r}")
+    return b
+
+
+def _block_rows(e: MoEConfig) -> int:
+    return getattr(e, "gmm_block_rows", 0) or OPS.default_block_rows()
 
 
 # ----------------------------------------------------------------------- init
@@ -115,7 +143,6 @@ def ec_capacity(num_tokens: int, e: MoEConfig) -> int:
 
 class DispatchPlan(NamedTuple):
     x_disp: jax.Array        # [E, C, d] dispatched tokens (zeros where empty)
-    inv: jax.Array           # [N] unsort permutation
     dest: jax.Array          # [N] flat slot (E*C = dropped)
     weights: jax.Array       # [N] combine weights
     token: jax.Array         # [N] source token per pair
@@ -129,12 +156,12 @@ def _plan_dispatch(x, expert_flat, weights_flat, token_flat, E, C):
     pos = jnp.arange(N, dtype=jnp.int32) - jnp.searchsorted(
         se, se, side="left").astype(jnp.int32)
     dest_sorted = jnp.where(pos < C, se * C + pos, E * C)
-    inv = jnp.argsort(order, stable=True)
-    dest = dest_sorted[inv]                              # back to pair order
+    # O(N) scatter inversion of the sort permutation (was a second argsort)
+    dest = jnp.zeros((N,), jnp.int32).at[order].set(dest_sorted)
     buf = jnp.zeros((E * C + 1, x.shape[-1]), x.dtype)
     x_disp = buf.at[dest].set(x[token_flat], mode="drop")[:-1].reshape(E, C, -1)
     counts = jnp.bincount(expert_flat, length=E)
-    return DispatchPlan(x_disp, inv, dest, weights_flat, token_flat, counts)
+    return DispatchPlan(x_disp, dest, weights_flat, token_flat, counts)
 
 
 def _combine(y_disp, plan, T, out_dtype):
@@ -149,7 +176,13 @@ def _combine(y_disp, plan, T, out_dtype):
 
 def dispatch_forward(params: dict, x: jax.Array, e: MoEConfig,
                      capacity: int = 0) -> tuple:
-    """Production token-choice path. x [T, d] -> (y [T, d], aux dict)."""
+    """Production token-choice path. x [T, d] -> (y [T, d], aux dict).
+
+    backend="pallas" routes through the tile-dispatch grouped GEMM: no
+    [E, C, d] capacity buffer and no drops (padding absorbs the worst case),
+    combine weights fused in-kernel."""
+    if resolve_backend(e) == "pallas":
+        return _dispatch_forward_pallas(params, x, e)
     T = x.shape[0]
     E, k = e.num_experts, e.top_k
     C = capacity or max(1, int(math.ceil(T * k / E * e.capacity_factor)))
@@ -168,22 +201,50 @@ def dispatch_forward(params: dict, x: jax.Array, e: MoEConfig,
     return y, aux
 
 
+def _dispatch_forward_pallas(params: dict, x: jax.Array, e: MoEConfig) -> tuple:
+    """Token-choice through the tile-dispatch grouped GEMM (dropless)."""
+    T = x.shape[0]
+    E, k = e.num_experts, e.top_k
+    r = R.token_choice(x, params["gate"], k)
+    ef = r.expert_idx.reshape(-1).astype(jnp.int32)
+    wf = r.weights.reshape(-1)
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    y, _, plan = OPS.moe_ffn_fused(x, tok, ef, wf, params["experts"], E, T,
+                                   bn=_block_rows(e))
+    y = y.astype(x.dtype) + _shared_out(params, x)
+    aux = {
+        "counts": plan.counts,
+        "balance_loss": R.load_balance_loss(r.scores, r.expert_idx, E),
+        "dropped": jnp.zeros((), jnp.int32),
+    }
+    return y, aux
+
+
 def group_forward(params: dict, x: jax.Array, e: MoEConfig,
-                  group_of_expert: jax.Array, pool_factor: float = 0.7) -> tuple:
+                  group_of_expert: jax.Array, pool_factor: float = 0.7,
+                  members: jax.Array | None = None) -> tuple:
     """C1 — group-multiplexed path with POOLED group capacity.
 
     Experts of a group share one lane buffer of size C_grp = g * C_exp *
     pool_factor: pooling lets a hot expert borrow slots from its cold
     group-mates (the paper pairs them by sorted load precisely so this works),
     cutting padded slots vs per-expert buckets at equal drop rate.
-    XLA realization masks over the g members (g x redundant FLOPs); the Pallas
-    kernel moe_gmm removes the redundancy by expert-indexed weight staging.
+    The XLA realization masks over the g members (g x redundant FLOPs); the
+    pallas backend removes the redundancy by expert-indexed weight staging
+    over (group, expert)-sorted tiles. `members` is the [G, g] expert-id
+    matrix precomputed at deployment (models/model.py:expert_group_members);
+    when None it is derived from `group_of_expert` in-trace.
     """
     T = x.shape[0]
     E, k, g = e.num_experts, e.top_k, e.group_size
     G = E // g
     C_exp = max(1, int(math.ceil(T * k / E * e.capacity_factor)))
     C_grp = max(1, int(math.ceil(g * C_exp * pool_factor)))
+    if members is None:
+        members = _members_matrix(group_of_expert, G, g)         # [G, g]
+    if resolve_backend(e) == "pallas":
+        return _group_forward_pallas(params, x, e, group_of_expert, members,
+                                     C_grp)
     r = R.token_choice(x, params["gate"], k)
     expert_flat = r.expert_idx.reshape(-1).astype(jnp.int32)
     grp_flat = group_of_expert[expert_flat]
@@ -192,14 +253,10 @@ def group_forward(params: dict, x: jax.Array, e: MoEConfig,
 
     # dispatch by GROUP, but keep rows sorted by (group, expert) so the kernel
     # sees expert-contiguous runs (dispatch-locality analogue of Alg. 1)
-    sort_key = grp_flat * E + expert_flat
-    order = jnp.argsort(sort_key, stable=True)
-    sg = grp_flat[order]
-    pos = jnp.arange(sg.shape[0], dtype=jnp.int32) - jnp.searchsorted(
-        sg, sg, side="left").astype(jnp.int32)
+    order, sg, pos = _group_sorted_positions(grp_flat, expert_flat, E)
     dest_sorted = jnp.where(pos < C_grp, sg * C_grp + pos, G * C_grp)
-    inv = jnp.argsort(order, stable=True)
-    dest = dest_sorted[inv]
+    N = order.shape[0]
+    dest = jnp.zeros((N,), jnp.int32).at[order].set(dest_sorted)
     buf = jnp.zeros((G * C_grp + 1, x.shape[-1]), x.dtype)
     x_disp = buf.at[dest].set(x[token_flat], mode="drop")[:-1].reshape(G, C_grp, -1)
     row_expert = jnp.full((G * C_grp + 1,), -1, jnp.int32).at[dest].set(
@@ -208,9 +265,8 @@ def group_forward(params: dict, x: jax.Array, e: MoEConfig,
     # XLA fallback: accumulate each member's masked contribution
     bank = params["experts"]
     y_disp = jnp.zeros(x_disp.shape, jnp.float32)
-    member_ids = _members_matrix(group_of_expert, G, g)          # [G, g]
     for j in range(g):
-        eid = member_ids[:, j]                                   # [G]
+        eid = members[:, j]                                      # [G]
         wg = bank["wg"][eid]
         wi = bank["wi"][eid]
         wo = bank["wo"][eid]
@@ -220,13 +276,71 @@ def group_forward(params: dict, x: jax.Array, e: MoEConfig,
         m = (row_expert == eid[:, None])[..., None]
         y_disp = y_disp + jnp.where(m, yj.astype(jnp.float32), 0.0)
 
-    plan = DispatchPlan(x_disp, inv, dest, weights_flat, token_flat,
+    plan = DispatchPlan(x_disp, dest, weights_flat, token_flat,
                         jnp.bincount(expert_flat, length=E))
     y = _combine(y_disp.astype(x.dtype), plan, T, x.dtype) + _shared_out(params, x)
     aux = {
         "counts": plan.counts,
         "balance_loss": R.load_balance_loss(r.scores, r.expert_idx, E),
         "dropped": (dest == G * C_grp).sum(),
+        "slots": G * C_grp,
+    }
+    return y, aux
+
+
+def _group_sorted_positions(grp: jax.Array, ef: jax.Array, E: int):
+    """(group, expert)-stable sort of routed pairs + position of each pair
+    within its GROUP's run. ONE definition shared by both backends: the
+    pooled-capacity drop set (pos >= C_grp) must be identical whether it is
+    realized as a buffer eviction (xla) or a zero combine weight (pallas) —
+    pinned by tests/test_moe_paths.py drop-parity."""
+    sort_key = grp * E + ef
+    order = jnp.argsort(sort_key, stable=True)
+    sg = grp[order]
+    pos = jnp.arange(order.shape[0], dtype=jnp.int32) - jnp.searchsorted(
+        sg, sg, side="left").astype(jnp.int32)
+    return order, sg, pos
+
+
+def _group_forward_pallas(params: dict, x: jax.Array, e: MoEConfig,
+                          group_of_expert: jax.Array, members: jax.Array,
+                          C_grp: int) -> tuple:
+    """C1 pooled-capacity semantics on the zero-redundancy kernel.
+
+    The SAME (group, expert)-stable order as the XLA path decides which pairs
+    overflow the pooled group buffer; overflow pairs keep their rows but get a
+    ZERO combine weight — numerically identical to a drop, while every
+    surviving row streams through the grouped GEMM exactly once (no g x
+    member masking). Tiles are planned in group-major lane order so the
+    multiplexed lane sees its members' runs back to back.
+    """
+    T = x.shape[0]
+    E, k, g = e.num_experts, e.top_k, e.group_size
+    G = E // g
+    r = R.token_choice(x, params["gate"], k)
+    ef = r.expert_idx.reshape(-1).astype(jnp.int32)
+    grp = group_of_expert[ef]
+    wf = r.weights.reshape(-1)
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    N = ef.shape[0]
+
+    # pooled-capacity overflow in (group, expert)-stable order == XLA drops
+    order, _, pos = _group_sorted_positions(grp, ef, E)
+    keep = jnp.zeros((N,), bool).at[order].set(pos < C_grp)
+    wf = jnp.where(keep, wf, 0.0)
+
+    # group-major lane ranks: lane r holds expert members.flatten()[r]
+    lane_of_rank = jnp.asarray(members, jnp.int32).reshape(-1)   # [E]
+    rank_of_expert = jnp.zeros((E,), jnp.int32).at[lane_of_rank].set(
+        jnp.arange(E, dtype=jnp.int32))
+    y, _, plan = OPS.moe_ffn_fused(
+        x, tok, rank_of_expert[ef], wf, params["experts"], E, T,
+        expert_of_lane=lane_of_rank, bn=_block_rows(e))
+    y = y.astype(x.dtype) + _shared_out(params, x)
+    aux = {
+        "counts": jnp.bincount(ef, length=E),
+        "balance_loss": R.load_balance_loss(r.scores, r.expert_idx, E),
+        "dropped": (~keep).sum(),
         "slots": G * C_grp,
     }
     return y, aux
@@ -244,6 +358,8 @@ def _members_matrix(group_of_expert: jax.Array, G: int, g: int) -> jax.Array:
 def expert_choice_forward(params: dict, x: jax.Array, e: MoEConfig) -> tuple:
     """Expert-choice prefill/train: each expert gathers its top-C tokens.
     Returns (y, aux) where aux also carries what the GO cache needs."""
+    if resolve_backend(e) == "pallas":
+        return _expert_choice_forward_pallas(params, x, e)
     T = x.shape[0]
     cap = ec_capacity(T, e)
     r = R.expert_choice(x, params["gate"], cap)
@@ -264,24 +380,84 @@ def expert_choice_forward(params: dict, x: jax.Array, e: MoEConfig) -> tuple:
     return y, aux
 
 
+def _expert_choice_forward_pallas(params: dict, x: jax.Array,
+                                  e: MoEConfig) -> tuple:
+    """Expert-choice through the grouped GEMM: (expert, slot) pairs are
+    already expert-contiguous, so the tile plan is the identity layout and
+    every expert's top-C tokens stream through the lane in one run."""
+    T, d = x.shape
+    cap = ec_capacity(T, e)
+    E = e.num_experts
+    r = R.expert_choice(x, params["gate"], cap)
+    ef = jnp.repeat(jnp.arange(E, dtype=jnp.int32), cap)
+    tok = r.token_idx.reshape(-1).astype(jnp.int32)
+    wf = r.weights.reshape(-1)
+    y, y_rows, plan = OPS.moe_ffn_fused(x, tok, ef, wf, params["experts"],
+                                        E, T, bn=_block_rows(e))
+    contrib = OPS.gather_rows(y_rows, plan).reshape(E, cap, d)   # fp32
+    y_out = y.astype(x.dtype) + _shared_out(params, x)
+    aux = {
+        "counts": jnp.bincount(tok, length=T),
+        "chosen_tokens": r.token_idx,
+        "chosen_scores": r.weights,
+        "weighted_outputs": contrib.astype(x.dtype),             # [E, C, d]
+        "scores": r.scores,
+    }
+    return y_out, aux
+
+
+def expert_choice_forward_batched(params: dict, h: jax.Array,
+                                  e: MoEConfig) -> tuple:
+    """Batched expert-choice on the pallas backend: routing stays PER
+    SEQUENCE (the GO-cache / train==serve semantics), but the FFN pairs of
+    the whole batch flatten into ONE tile plan so the grouped GEMM amortizes
+    its per-expert padding across the batch instead of paying it B times.
+    h [B, S, d] -> (y [B, S, d], aux vmapped like the per-sequence path)."""
+    B, S, d = h.shape
+    cap = ec_capacity(S, e)
+    E = e.num_experts
+    r = jax.vmap(lambda xb: R.expert_choice(xb, params["gate"], cap))(h)
+    ef = jnp.tile(jnp.repeat(jnp.arange(E, dtype=jnp.int32), cap), B)
+    tok = (r.token_idx.astype(jnp.int32)
+           + (jnp.arange(B, dtype=jnp.int32) * S)[:, None, None]).reshape(-1)
+    wf = r.weights.reshape(-1)
+    y, y_rows, plan = OPS.moe_ffn_fused(
+        h.reshape(B * S, d), tok, ef, wf, params["experts"], E, B * S,
+        bn=_block_rows(e))
+    contrib = OPS.gather_rows(y_rows, plan).reshape(B, E, cap, d)
+    y = y.reshape(B, S, d).astype(h.dtype) + jax.vmap(
+        lambda xb: _shared_out(params, xb))(h)
+    aux = {
+        "counts": jax.vmap(lambda t: jnp.bincount(t.reshape(-1), length=S))(
+            r.token_idx),
+        "chosen_tokens": r.token_idx,
+        "chosen_scores": r.weights,
+        "weighted_outputs": contrib.astype(h.dtype),             # [B, E, C, d]
+        "scores": r.scores,
+    }
+    return y, aux
+
+
 # -------------------------------------------------------------------- decode
 
 def token_choice_decode(params: dict, x: jax.Array, e: MoEConfig) -> jax.Array:
     """Decode step for token-choice: x [B, d] one token per sequence.
     Dropless: capacity bounds the worst case (every row picks the same expert),
-    so serving never silently drops a token's expert contribution."""
+    so serving never silently drops a token's expert contribution. (The pallas
+    backend is dropless by construction.)"""
     y, _ = dispatch_forward(
         params, x, e, capacity=max(1, x.shape[0] * e.top_k))
     return y
 
 
 def moe_forward(params: dict, x: jax.Array, e: MoEConfig,
-                group_of_expert=None) -> tuple:
+                group_of_expert=None, group_members=None) -> tuple:
     """Router for the full-sequence paths; x [T, d]."""
     if e.routing == "expert_choice":
         return expert_choice_forward(params, x, e)
     if e.use_grouped_gemm and e.group_size > 1 and group_of_expert is not None:
-        return group_forward(params, x, e, group_of_expert)
+        return group_forward(params, x, e, group_of_expert,
+                             members=group_members)
     return dispatch_forward(params, x, e)
 
 

@@ -11,13 +11,30 @@ weight tile into VMEM — each expert tile is fetched once per column stripe,
 never per token (the dispatch-locality analogue of Algorithm 1).
 
 Kernels:
-  gmm(x, w, tile_expert)            y[i] = x[i] @ w[e(i)]
-  gmm_swiglu(x, wg, wi, tile_expert) h[i] = silu(x[i] @ wg[e(i)]) * (x[i] @ wi[e(i)])
+  gmm(x, w, tile_expert[, tile_valid])     y[i] = x[i] @ w[e(i)]
+  gmm_scaled(..., row_scale)               y[i] = (x[i] @ w[e(i)]) * s[i]
+                                           (fused combine: per-row weights
+                                           applied in-kernel at the fp32
+                                           accumulator, out_dtype=fp32)
+  gmm_swiglu(x, wg, wi, tile_expert[, tile_valid])
+                                           h[i] = silu(x[i] @ wg[e(i)])
+                                                  * (x[i] @ wi[e(i)])
 
 Grid: (num_row_tiles, F/bf, K/bk); fp32 VMEM scratch accumulates over k.
-Block shapes default to MXU-aligned (128, 512, 128). Validated on CPU with
-interpret=True against kernels/ref.py; on TPU the same pallas_call lowers to
-Mosaic.
+Block shapes default to MXU-aligned (128, 512, 128).
+
+Alignment: non-tile-aligned shapes are zero-padded to block multiples — K and
+F on both operands (dot products unchanged; extra output columns sliced off),
+rows up to the row-tile boundary. `tile_valid` marks row tiles that carry at
+least one real dispatched row: invalid tiles (alignment padding, empty expert
+runs, the drop lane of the selected-decode path) SKIP the MXU work entirely
+via `pl.when`, so the executed FLOPs track the planner's occupied tiles, not
+the static worst-case shape. The planner emits constant weight indices across
+invalid tail tiles, so the pipeline re-uses the staged VMEM buffer instead of
+issuing fresh HBM copies for tiles it will not compute.
+
+`interpret=None` auto-selects from the host platform: Mosaic lowering on TPU,
+interpreter elsewhere (CPU CI). Validated against kernels/ref.py.
 """
 from __future__ import annotations
 
@@ -29,34 +46,88 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gmm_kernel(te_ref, x_ref, w_ref, o_ref, acc_ref, *, nk: int):
-    k = pl.program_id(2)
+def default_interpret() -> bool:
+    """Interpret unless we can actually lower via Mosaic (i.e. on TPU)."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(a: jax.Array, axis: int, size: int) -> jax.Array:
+    if a.shape[axis] == size:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, size - a.shape[axis])
+    return jnp.pad(a, pads)
+
+
+def _row_tiles(N: int, bn: int, tile_expert: jax.Array, tile_valid):
+    """Validate the (tile_expert, tile_valid) map against ceil(N/bn) row
+    tiles. The map must cover every row — a short map means it was built with
+    a different bn and auto-extending it would silently zero real rows, so
+    fail fast (the planner always emits tile-aligned buffers). A LONGER map
+    is fine: the extra rows are zero-padded."""
+    ni = -(-N // bn)
+    if tile_expert.shape[0] < ni:
+        raise ValueError(
+            f"tile_expert covers {tile_expert.shape[0]} tiles but x has "
+            f"{N} rows at bn={bn} ({ni} tiles) — tile map built with a "
+            "different bn, or rows not padded to the tile boundary?")
+    ni = tile_expert.shape[0]
+    te = tile_expert.astype(jnp.int32)
+    tv = (jnp.ones(te.shape, jnp.int32) if tile_valid is None
+          else tile_valid.astype(jnp.int32))
+    return ni, te, tv
+
+
+def _gmm_kernel(te_ref, tv_ref, x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    i, k = pl.program_id(0), pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
-                            preferred_element_type=jnp.float32)
+    @pl.when(tv_ref[i] != 0)
+    def _mac():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                                preferred_element_type=jnp.float32)
 
     @pl.when(k == nk - 1)
     def _done():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _gmm_swiglu_kernel(te_ref, x_ref, wg_ref, wi_ref, o_ref,
+def _gmm_scaled_kernel(te_ref, tv_ref, x_ref, w_ref, s_ref, o_ref, acc_ref,
+                       *, nk: int):
+    i, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(tv_ref[i] != 0)
+    def _mac():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+def _gmm_swiglu_kernel(te_ref, tv_ref, x_ref, wg_ref, wi_ref, o_ref,
                        accg_ref, acci_ref, *, nk: int):
-    k = pl.program_id(2)
+    i, k = pl.program_id(0), pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         accg_ref[...] = jnp.zeros_like(accg_ref)
         acci_ref[...] = jnp.zeros_like(acci_ref)
 
-    accg_ref[...] += jnp.dot(x_ref[...], wg_ref[0],
-                             preferred_element_type=jnp.float32)
-    acci_ref[...] += jnp.dot(x_ref[...], wi_ref[0],
-                             preferred_element_type=jnp.float32)
+    @pl.when(tv_ref[i] != 0)
+    def _mac():
+        accg_ref[...] += jnp.dot(x_ref[...], wg_ref[0],
+                                 preferred_element_type=jnp.float32)
+        acci_ref[...] += jnp.dot(x_ref[...], wi_ref[0],
+                                 preferred_element_type=jnp.float32)
 
     @pl.when(k == nk - 1)
     def _done():
@@ -64,69 +135,123 @@ def _gmm_swiglu_kernel(te_ref, x_ref, wg_ref, wi_ref, o_ref,
         o_ref[...] = h.astype(o_ref.dtype)
 
 
-def _blocks(N, K, F, bn, bk, bf):
-    bn = min(bn, N)
-    bk = min(bk, K)
-    bf = min(bf, F)
-    assert N % bn == 0 and K % bk == 0 and F % bf == 0, (N, K, F, bn, bk, bf)
-    return bn, bk, bf
-
-
-@functools.partial(jax.jit, static_argnames=("bn", "bk", "bf", "interpret"))
-def gmm(x: jax.Array, w: jax.Array, tile_expert: jax.Array, *,
-        bn: int = 128, bk: int = 512, bf: int = 128,
-        interpret: bool = False) -> jax.Array:
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "bf", "interpret", "out_dtype"))
+def gmm(x: jax.Array, w: jax.Array, tile_expert: jax.Array,
+        tile_valid: jax.Array | None = None, *, bn: int = 128, bk: int = 512,
+        bf: int = 128, interpret: bool | None = None,
+        out_dtype=None) -> jax.Array:
     """x [N, K] (rows tile-aligned by expert), w [E, K, F],
-    tile_expert [N//bn] int32 -> y [N, F]."""
+    tile_expert [n_tiles] int32, tile_valid [n_tiles] optional -> y [N, F]."""
     N, K = x.shape
     E, _, F = w.shape
-    bn, bk, bf = _blocks(N, K, F, bn, bk, bf)
-    ni, nk, nf = N // bn, K // bk, F // bf
+    if interpret is None:
+        interpret = default_interpret()
+    bk, bf = min(bk, K), min(bf, F)
+    ni, te, tv = _row_tiles(N, bn, tile_expert, tile_valid)
+    Kp, Fp = -(-K // bk) * bk, -(-F // bf) * bf
+    xp = _pad_to(_pad_to(x, 0, ni * bn), 1, Kp)
+    wp = _pad_to(_pad_to(w, 1, Kp), 2, Fp)
+    nk, nf = Kp // bk, Fp // bf
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(ni, nf, nk),
         in_specs=[
-            pl.BlockSpec((bn, bk), lambda i, j, k, te: (i, k)),
-            pl.BlockSpec((1, bk, bf), lambda i, j, k, te: (te[i], k, j)),
+            pl.BlockSpec((bn, bk), lambda i, j, k, te, tv: (i, k)),
+            pl.BlockSpec((1, bk, bf), lambda i, j, k, te, tv: (te[i], k, j)),
         ],
-        out_specs=pl.BlockSpec((bn, bf), lambda i, j, k, te: (i, j)),
+        out_specs=pl.BlockSpec((bn, bf), lambda i, j, k, te, tv: (i, j)),
         scratch_shapes=[pltpu.VMEM((bn, bf), jnp.float32)],
     )
-    return pl.pallas_call(
+    y = pl.pallas_call(
         functools.partial(_gmm_kernel, nk=nk),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((N, F), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((ni * bn, Fp), out_dtype or x.dtype),
         interpret=interpret,
-    )(tile_expert.astype(jnp.int32), x, w)
+    )(te, tv, xp, wp)
+    return y[:N, :F]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "bf", "interpret", "out_dtype"))
+def gmm_scaled(x: jax.Array, w: jax.Array, tile_expert: jax.Array,
+               tile_valid: jax.Array | None, row_scale: jax.Array, *,
+               bn: int = 128, bk: int = 512, bf: int = 128,
+               interpret: bool | None = None,
+               out_dtype=jnp.float32) -> jax.Array:
+    """Fused-combine grouped GEMM: y[i] = (x[i] @ w[e(i)]) * row_scale[i].
+
+    The per-row combine weight is applied against the fp32 accumulator in the
+    kernel's epilogue, so the caller can scatter-add the rows straight into the
+    token buffer — no separate gather + fp32 multiply pass. row_scale [N, 1]."""
+    N, K = x.shape
+    E, _, F = w.shape
+    if interpret is None:
+        interpret = default_interpret()
+    bk, bf = min(bk, K), min(bf, F)
+    ni, te, tv = _row_tiles(N, bn, tile_expert, tile_valid)
+    Kp, Fp = -(-K // bk) * bk, -(-F // bf) * bf
+    xp = _pad_to(_pad_to(x, 0, ni * bn), 1, Kp)
+    wp = _pad_to(_pad_to(w, 1, Kp), 2, Fp)
+    sp = _pad_to(row_scale.astype(jnp.float32), 0, ni * bn)
+    nk, nf = Kp // bk, Fp // bf
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ni, nf, nk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, k, te, tv: (i, k)),
+            pl.BlockSpec((1, bk, bf), lambda i, j, k, te, tv: (te[i], k, j)),
+            pl.BlockSpec((bn, 1), lambda i, j, k, te, tv: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bf), lambda i, j, k, te, tv: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bn, bf), jnp.float32)],
+    )
+    y = pl.pallas_call(
+        functools.partial(_gmm_scaled_kernel, nk=nk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((ni * bn, Fp), out_dtype),
+        interpret=interpret,
+    )(te, tv, xp, wp, sp)
+    return y[:N, :F]
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "bk", "bf", "interpret"))
 def gmm_swiglu(x: jax.Array, wg: jax.Array, wi: jax.Array,
-               tile_expert: jax.Array, *, bn: int = 128, bk: int = 512,
-               bf: int = 128, interpret: bool = False) -> jax.Array:
+               tile_expert: jax.Array, tile_valid: jax.Array | None = None, *,
+               bn: int = 128, bk: int = 512, bf: int = 128,
+               interpret: bool | None = None) -> jax.Array:
     """Fused per-expert SwiGLU up-projection: silu(x@wg[e]) * (x@wi[e]).
     One x-tile staging feeds BOTH weight streams (multiplexed operand reuse)."""
     N, K = x.shape
     E, _, F = wg.shape
-    bn, bk, bf = _blocks(N, K, F, bn, bk, bf)
-    ni, nk, nf = N // bn, K // bk, F // bf
+    if interpret is None:
+        interpret = default_interpret()
+    bk, bf = min(bk, K), min(bf, F)
+    ni, te, tv = _row_tiles(N, bn, tile_expert, tile_valid)
+    Kp, Fp = -(-K // bk) * bk, -(-F // bf) * bf
+    xp = _pad_to(_pad_to(x, 0, ni * bn), 1, Kp)
+    wgp = _pad_to(_pad_to(wg, 1, Kp), 2, Fp)
+    wip = _pad_to(_pad_to(wi, 1, Kp), 2, Fp)
+    nk, nf = Kp // bk, Fp // bf
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(ni, nf, nk),
         in_specs=[
-            pl.BlockSpec((bn, bk), lambda i, j, k, te: (i, k)),
-            pl.BlockSpec((1, bk, bf), lambda i, j, k, te: (te[i], k, j)),
-            pl.BlockSpec((1, bk, bf), lambda i, j, k, te: (te[i], k, j)),
+            pl.BlockSpec((bn, bk), lambda i, j, k, te, tv: (i, k)),
+            pl.BlockSpec((1, bk, bf), lambda i, j, k, te, tv: (te[i], k, j)),
+            pl.BlockSpec((1, bk, bf), lambda i, j, k, te, tv: (te[i], k, j)),
         ],
-        out_specs=pl.BlockSpec((bn, bf), lambda i, j, k, te: (i, j)),
+        out_specs=pl.BlockSpec((bn, bf), lambda i, j, k, te, tv: (i, j)),
         scratch_shapes=[pltpu.VMEM((bn, bf), jnp.float32),
                         pltpu.VMEM((bn, bf), jnp.float32)],
     )
-    return pl.pallas_call(
+    y = pl.pallas_call(
         functools.partial(_gmm_swiglu_kernel, nk=nk),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((N, F), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((ni * bn, Fp), x.dtype),
         interpret=interpret,
-    )(tile_expert.astype(jnp.int32), x, wg, wi)
+    )(te, tv, xp, wgp, wip)
+    return y[:N, :F]

@@ -5,7 +5,22 @@ that connects them to the MoE layer.
 tokens are sorted by (group, expert) and each expert's run is padded to the
 row-tile boundary, so the grouped GEMM stages every expert weight tile into
 VMEM exactly once per column stripe (Algorithm 1's "no repeated transfers"),
-and idle slots become zero rows aligned to the MXU tile.
+and idle slots become zero rows aligned to the MXU tile. The plan also marks
+which row tiles actually carry data (`tile_valid`) so the kernels skip the
+MXU work for pure-padding tiles — executed FLOPs track the real token count,
+not the static worst-case buffer.
+
+Production entry points (what core/moe.py's `backend="pallas"` routes to):
+
+  moe_ffn_fused       (token, expert) pairs -> combined [T, d] output with
+                      the per-pair combine weights applied IN-KERNEL
+                      (gmm_scaled) and rows scatter-added straight into the
+                      token buffer — no gather + fp32 multiply pass.
+  go_selected_ffn     C4 decode: flattens the GO cache's [B, E] `selected`
+                      mask into (token, expert) pairs, plans ONLY the
+                      selected pairs (unselected pairs ride in a skipped
+                      drop lane), and runs one grouped GEMM over ~B*k rows
+                      instead of B*E dense FFNs.
 """
 from __future__ import annotations
 
@@ -15,20 +30,30 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.moe_gmm import gmm, gmm_swiglu
+from repro.kernels.moe_gmm import (default_interpret, gmm, gmm_scaled,
+                                   gmm_swiglu)
+
+
+def default_block_rows() -> int:
+    """Row-tile height: MXU-aligned on TPU; small on CPU so the interpreted
+    correctness path does not drown in padding tiles."""
+    return 128 if jax.default_backend() == "tpu" else 8
 
 
 class TilePlan(NamedTuple):
-    dest: jax.Array           # [N] row slot per (token, expert) pair; N_pad = dropped
+    dest: jax.Array           # [N] row slot per (token, expert) pair
     tile_expert: jax.Array    # [n_tiles] expert id per row tile
+    tile_valid: jax.Array     # [n_tiles] bool — tile carries >=1 real row
     row_valid: jax.Array      # [N_pad] bool — real row vs alignment padding
     counts: jax.Array         # [E] pairs per expert (pre-capacity)
     n_pad: int                # static padded row count
 
 
 def padded_rows(num_pairs: int, num_experts: int, bn: int) -> int:
-    """Static worst-case padded row count (every expert run padded up)."""
-    return num_pairs + num_experts * bn
+    """Static worst-case padded row count (every expert run padded up),
+    rounded to the tile boundary so the row buffer is always whole tiles."""
+    worst = num_pairs + num_experts * bn
+    return -(-worst // bn) * bn
 
 
 def plan_tile_dispatch(expert_flat: jax.Array, num_experts: int,
@@ -49,25 +74,27 @@ def plan_tile_dispatch(expert_flat: jax.Array, num_experts: int,
     pos = jnp.arange(N, dtype=jnp.int32) - jnp.searchsorted(
         se, se, side="left").astype(jnp.int32)
     dest_sorted = offsets[se].astype(jnp.int32) + pos
-    inv = jnp.argsort(order, stable=True)
-    dest = dest_sorted[inv]
+    # O(N) scatter inversion of the sort permutation (was a second argsort)
+    dest = jnp.zeros((N,), jnp.int32).at[order].set(dest_sorted)
 
     # expert id per row tile: tile t covers rows [t*bn, (t+1)*bn) — constant
-    # expert by construction. Padding tiles (beyond an expert's run) map to
-    # expert of that stripe; fully-unused tail tiles map to expert 0 (zero rows
-    # in, output discarded via row_valid).
+    # expert by construction. Fully-unused tail tiles clamp to expert E-1
+    # (constant weight index -> the pipeline re-uses the staged buffer) and
+    # are marked invalid so the kernel skips their MXU work.
     n_tiles = n_pad // bn
     tile_start = jnp.arange(n_tiles, dtype=jnp.int32) * bn
     ends = jnp.cumsum(padded)
-    tile_expert = jnp.searchsorted(ends, tile_start, side="right").astype(jnp.int32)
-    tile_expert = jnp.minimum(tile_expert, E - 1)
+    te_raw = jnp.searchsorted(ends, tile_start, side="right").astype(jnp.int32)
+    tile_expert = jnp.minimum(te_raw, E - 1)
+    tile_valid = (te_raw < E) & (
+        tile_start < (offsets + counts)[tile_expert])
 
     row_idx = jnp.arange(n_pad, dtype=jnp.int32)
     row_expert = jnp.searchsorted(ends, row_idx, side="right")
     row_expert = jnp.minimum(row_expert, E - 1)
     row_valid = row_idx < (offsets[row_expert] + counts[row_expert])
 
-    return TilePlan(dest, tile_expert, row_valid, counts, n_pad)
+    return TilePlan(dest, tile_expert, tile_valid, row_valid, counts, n_pad)
 
 
 def scatter_rows(x_pairs: jax.Array, plan: TilePlan) -> jax.Array:
@@ -83,17 +110,87 @@ def gather_rows(y_rows: jax.Array, plan: TilePlan) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
 def expert_ffn_gmm(x_rows: jax.Array, wg: jax.Array, wi: jax.Array,
-                   wo: jax.Array, tile_expert: jax.Array, *, bn: int = 128,
-                   interpret: bool = True) -> jax.Array:
+                   wo: jax.Array, tile_expert: jax.Array,
+                   tile_valid: jax.Array | None = None, *, bn: int = 128,
+                   interpret: bool | None = None) -> jax.Array:
     """Tile-aligned rows [N_pad, d] through per-expert SwiGLU FFNs.
-    interpret=True on CPU; on TPU pass interpret=False to lower via Mosaic."""
-    h = gmm_swiglu(x_rows, wg, wi, tile_expert, bn=bn, interpret=interpret)
-    return gmm(h, wo, tile_expert, bn=bn, interpret=interpret)
+    interpret=None auto-selects: Mosaic on TPU, interpreter elsewhere."""
+    h = gmm_swiglu(x_rows, wg, wi, tile_expert, tile_valid, bn=bn,
+                   interpret=interpret)
+    return gmm(h, wo, tile_expert, tile_valid, bn=bn, interpret=interpret)
+
+
+def moe_ffn_fused(x_src: jax.Array, tok: jax.Array, ef: jax.Array,
+                  wf: jax.Array, bank: dict, num_experts: int,
+                  num_tokens: int, *, expert_of_lane: jax.Array | None = None,
+                  bn: int = 0, interpret: bool | None = None):
+    """Grouped-GEMM MoE FFN over (token, expert) pairs with fused combine.
+
+    x_src [T_src, d] source rows; tok [N] source row per pair; ef [N] lane id
+    per pair (expert id, or a group-major lane rank when `expert_of_lane`
+    maps lanes back to weight indices); wf [N] combine weights (zeroed pairs
+    contribute nothing — capacity drops reduce to zero weights).
+
+    Returns (y [num_tokens, d] fp32 combined output, y_rows [n_pad, d] fp32
+    weighted per-row outputs, plan). The combine weight is applied in-kernel
+    (gmm_scaled) and rows are scatter-added directly into the token buffer.
+    """
+    bn = bn or default_block_rows()
+    plan = plan_tile_dispatch(ef, num_experts, bn)
+    te = (plan.tile_expert if expert_of_lane is None
+          else expert_of_lane[plan.tile_expert])
+    x_rows = scatter_rows(x_src[tok], plan)
+    scale = jnp.zeros((plan.n_pad, 1), jnp.float32).at[plan.dest].set(
+        wf.astype(jnp.float32)[:, None], mode="drop")
+    h = gmm_swiglu(x_rows, bank["wg"], bank["wi"], te, plan.tile_valid,
+                   bn=bn, interpret=interpret)
+    y_rows = gmm_scaled(h, bank["wo"], te, plan.tile_valid, scale, bn=bn,
+                        interpret=interpret)
+    row_token = jnp.full((plan.n_pad,), num_tokens, jnp.int32).at[
+        plan.dest].set(tok.astype(jnp.int32), mode="drop")
+    y = jnp.zeros((num_tokens, x_src.shape[-1]), jnp.float32).at[
+        row_token].add(y_rows, mode="drop")
+    return y, y_rows, plan
+
+
+def go_selected_ffn(x: jax.Array, selected: jax.Array, g: jax.Array,
+                    bank: dict, num_experts: int, *, bn: int = 0,
+                    interpret: bool | None = None):
+    """C4 decode FFN over ONLY the (token, expert) pairs the TopKUpdate
+    selected. x [B, d]; selected [B, E] bool; g [B, E] softmax affinities.
+
+    Unselected pairs are routed to a drop lane whose tiles are planned but
+    marked invalid — the kernel skips their MXU work, so the executed row
+    count is sum(selected) padded to tile boundaries (vs B*E for the dense
+    fallback `expert_ffn_all`). Returns (contrib [B, E, d] fp32 weighted
+    outputs, zeros where unselected; plan) — exactly what `go_cache_step`
+    caches and combines.
+    """
+    B, d = x.shape
+    E = num_experts
+    bn = bn or default_block_rows()
+    sel = selected.reshape(-1)
+    pair_b = jnp.repeat(jnp.arange(B, dtype=jnp.int32), E)
+    pair_e = jnp.tile(jnp.arange(E, dtype=jnp.int32), B)
+    ef = jnp.where(sel, pair_e, E)                       # lane E = drop lane
+    plan = plan_tile_dispatch(ef, E + 1, bn)
+    te = jnp.minimum(plan.tile_expert, E - 1)
+    tv = plan.tile_valid & (plan.tile_expert < E)
+    x_rows = scatter_rows(x[pair_b], plan)
+    scale = jnp.zeros((plan.n_pad, 1), jnp.float32).at[plan.dest].set(
+        jnp.where(sel, g.reshape(-1), 0.0).astype(jnp.float32)[:, None],
+        mode="drop")
+    h = gmm_swiglu(x_rows, bank["wg"], bank["wi"], te, tv, bn=bn,
+                   interpret=interpret)
+    y_rows = gmm_scaled(h, bank["wo"], te, tv, scale, bn=bn,
+                        interpret=interpret)
+    contrib = gather_rows(y_rows, plan).reshape(B, E, d)
+    return contrib, plan
 
 
 def moe_ffn_pallas(x: jax.Array, expert_idx: jax.Array, weights: jax.Array,
-                   bank: dict, num_experts: int, *, bn: int = 128,
-                   interpret: bool = True) -> jax.Array:
+                   bank: dict, num_experts: int, *, bn: int = 0,
+                   interpret: bool | None = None) -> jax.Array:
     """Full MoE FFN through the Pallas path.
 
     x [T, d]; expert_idx [T, k]; weights [T, k] -> y [T, d].
@@ -104,11 +201,6 @@ def moe_ffn_pallas(x: jax.Array, expert_idx: jax.Array, weights: jax.Array,
     ef = expert_idx.reshape(-1).astype(jnp.int32)
     wf = weights.reshape(-1)
     tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
-
-    plan = plan_tile_dispatch(ef, num_experts, bn)
-    x_rows = scatter_rows(x[tok], plan)
-    y_rows = expert_ffn_gmm(x_rows, bank["wg"], bank["wi"], bank["wo"],
-                            plan.tile_expert, bn=bn, interpret=interpret)
-    y_pairs = gather_rows(y_rows, plan).astype(jnp.float32) * wf[:, None]
-    out = jnp.zeros((T, d), jnp.float32).at[tok].add(y_pairs)
-    return out.astype(x.dtype)
+    y, _, _ = moe_ffn_fused(x, tok, ef, wf, bank, num_experts, T, bn=bn,
+                            interpret=interpret)
+    return y.astype(x.dtype)

@@ -19,6 +19,13 @@ def gmm_ref(x: jax.Array, w: jax.Array, tile_expert: jax.Array,
                       wr.astype(jnp.float32)).astype(x.dtype)
 
 
+def gmm_scaled_ref(x: jax.Array, w: jax.Array, tile_expert: jax.Array,
+                   row_scale: jax.Array, bn: int) -> jax.Array:
+    """Fused-combine oracle: y[i] = (x[i] @ w[expert(i)]) * row_scale[i]."""
+    y = gmm_ref(x, w, tile_expert, bn).astype(jnp.float32)
+    return y * row_scale.reshape(-1, 1).astype(jnp.float32)
+
+
 def gmm_swiglu_ref(x: jax.Array, wg: jax.Array, wi: jax.Array,
                    tile_expert: jax.Array, bn: int) -> jax.Array:
     e = row_experts(tile_expert, bn)

@@ -112,9 +112,16 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--backend", choices=["auto", "xla", "pallas"],
+                    default=None,
+                    help="MoE execution backend override (default: config)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.backend is not None and cfg.moe is not None:
+        import dataclasses
+        cfg = cfg.with_overrides(
+            moe=dataclasses.replace(cfg.moe, backend=args.backend))
     key = jax.random.PRNGKey(0)
     params = model_init(key, cfg)
     extras = {}

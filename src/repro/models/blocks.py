@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.core import moe as MOE
 from repro.core.go_cache import go_cache_step
+from repro.kernels import ops as OPS
 from repro.models import attention as ATT
 from repro.models.layers import (gelu_mlp, gelu_mlp_init, mlp, mlp_init,
                                  rmsnorm, rmsnorm_init)
@@ -37,28 +38,42 @@ def attn_block_init(key, cfg, *, use_moe: bool = False, cross: bool = False,
     return p
 
 
-def _ffn_apply(params: dict, x: jax.Array, cfg, group_of_expert) -> tuple:
+def _ffn_apply(params: dict, x: jax.Array, cfg, group_of_expert,
+               group_members=None) -> tuple:
     """Post-attention FFN sublayer (dense MLP or MoE). x [B,S,d]."""
     h = rmsnorm(params["ln2"], x, cfg.norm_eps)
     aux = None
     if "moe" in params:
         B, S, d = h.shape
-        # Per-sequence routing (vmap over batch), two reasons:
+        backend = MOE.resolve_backend(cfg.moe)
+        # XLA backend routes per sequence (vmap over batch), two reasons:
         #  * the sort-based dispatch never crosses the batch dim, so GSPMD
         #    keeps dispatch buffers batch-sharded (a global argsort over
         #    B*S would gather the whole batch onto every device);
         #  * expert-choice selection per sequence is what the GO cache
         #    serves, so train == serve semantics.
+        # The pallas backend keeps ROUTING per sequence (same semantics) but
+        # flattens the FFN pairs of the whole batch into one tile plan, so
+        # the grouped GEMM pays its per-expert tile padding once, not B times.
         if cfg.moe.routing == "expert_choice":
-            y, aux = jax.vmap(
-                lambda xb: MOE.expert_choice_forward(params["moe"], xb, cfg.moe)
-            )(h)
+            if backend == "pallas":
+                y, aux = MOE.expert_choice_forward_batched(
+                    params["moe"], h, cfg.moe)
+            else:
+                y, aux = jax.vmap(
+                    lambda xb: MOE.expert_choice_forward(
+                        params["moe"], xb, cfg.moe))(h)
         elif MOE.ep_available(cfg.moe):
             y, aux = MOE.moe_forward_ep(params["moe"], h, cfg.moe)
+        elif backend == "pallas":
+            y, aux = MOE.moe_forward(params["moe"], h.reshape(B * S, d),
+                                     cfg.moe, group_of_expert, group_members)
+            y = y.reshape(B, S, d)
         else:
             y, aux = jax.vmap(
                 lambda xb: MOE.moe_forward(params["moe"], xb, cfg.moe,
-                                           group_of_expert))(h)
+                                           group_of_expert,
+                                           group_members))(h)
             aux = {"counts": aux["counts"].sum(0),
                    "balance_loss": aux["balance_loss"].mean(),
                    "dropped": aux["dropped"].sum()}
@@ -71,8 +86,9 @@ def _ffn_apply(params: dict, x: jax.Array, cfg, group_of_expert) -> tuple:
 
 
 def attn_block(params: dict, x: jax.Array, *, cfg, positions, window=0,
-               causal: bool = True, group_of_expert=None, kv_source=None,
-               use_rope: bool = True, return_kv: bool = False) -> tuple:
+               causal: bool = True, group_of_expert=None, group_members=None,
+               kv_source=None, use_rope: bool = True,
+               return_kv: bool = False) -> tuple:
     """Full-sequence attention block. Returns (x, aux) with MoE aux or None;
     with return_kv also the post-RoPE (k, v) for KV-cache prefill."""
     h = rmsnorm(params["ln1"], x, cfg.norm_eps)
@@ -82,7 +98,7 @@ def attn_block(params: dict, x: jax.Array, *, cfg, positions, window=0,
     if return_kv:
         a, k, v = a
     x = x + a
-    x, aux = _ffn_apply(params, x, cfg, group_of_expert)
+    x, aux = _ffn_apply(params, x, cfg, group_of_expert, group_members)
     if return_kv:
         return x, aux, k, v
     return x, aux
@@ -102,11 +118,23 @@ def attn_block_decode(params: dict, x_t: jax.Array, cache_k, cache_v, t, *,
         B = h2.shape[0]
         h2f = h2[:, 0]                                   # [B, d]
         if go_cache is not None:
-            # C4: expert-choice decode through the GO cache
-            res = go_cache_step(
-                go_cache, h2f, t, params["moe"]["gate"],
-                lambda xt: MOE.expert_ffn_all(params["moe"], xt))
-            y = res.y + MOE._shared_out(params["moe"], h2f)
+            # C4: expert-choice decode through the GO cache. On the pallas
+            # backend only the SELECTED experts' tiles stream through the
+            # grouped GEMM (~B*k rows); the xla fallback computes all E
+            # expert FFNs per token and masks.
+            moe_p = params["moe"]
+            e = cfg.moe
+            if MOE.resolve_backend(e) == "pallas":
+                res = go_cache_step(
+                    go_cache, h2f, t, moe_p["gate"],
+                    contrib_fn=lambda xt, sel, g: OPS.go_selected_ffn(
+                        xt, sel, g, moe_p["experts"], e.num_experts,
+                        bn=MOE._block_rows(e))[0])
+            else:
+                res = go_cache_step(
+                    go_cache, h2f, t, moe_p["gate"],
+                    lambda xt: MOE.expert_ffn_all(moe_p, xt))
+            y = res.y + MOE._shared_out(moe_p, h2f)
             go_cache = res.cache
             aux = {"selected": res.selected}
         else:

@@ -32,6 +32,7 @@ segments. `cfg.remat` wraps scan bodies in jax.checkpoint.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 
 import jax
@@ -65,11 +66,28 @@ def layer_windows(cfg) -> np.ndarray:
     return np.zeros(L, np.int32)
 
 
+@functools.lru_cache(maxsize=None)
+def _moe_deployment(moe_cfg):
+    """Deployment-time C2 artifacts, computed ONCE per MoE config (host-side
+    numpy) instead of inside every traced forward: the [E] group-id map and
+    the [G, g] member matrix the group-multiplexed paths consume."""
+    groups = default_groups(moe_cfg)
+    return (jnp.asarray(group_of_expert_from_groups(groups), jnp.int32),
+            jnp.asarray(groups, jnp.int32))
+
+
 def expert_groups(cfg) -> jax.Array | None:
     """C2 grouping -> [E] group id per expert (None for non-MoE)."""
     if cfg.moe is None:
         return None
-    return jnp.asarray(group_of_expert_from_groups(default_groups(cfg.moe)))
+    return _moe_deployment(cfg.moe)[0]
+
+
+def expert_group_members(cfg) -> jax.Array | None:
+    """C2 grouping -> [G, g] expert ids per group (None for non-MoE)."""
+    if cfg.moe is None:
+        return None
+    return _moe_deployment(cfg.moe)[1]
 
 
 def _maybe_remat(fn, cfg):
@@ -182,13 +200,14 @@ def model_forward(params: dict, tokens: jax.Array, cfg, extras: dict | None = No
 
 def _fwd_attn(params, x, positions, cfg):
     goe = expert_groups(cfg)
+    gm = expert_group_members(cfg)
     windows = jnp.asarray(layer_windows(cfg))
 
     def body(carry, xs):
         x, bal = carry
         lp, w = xs
         x, aux = B.attn_block(lp, x, cfg=cfg, positions=positions, window=w,
-                              group_of_expert=goe)
+                              group_of_expert=goe, group_members=gm)
         if aux is not None and "balance_loss" in aux:
             bal = bal + jnp.sum(aux["balance_loss"])
         return (x, bal), None
@@ -323,8 +342,20 @@ def chunked_xent(params, x, labels, cfg, chunk: int = 512):
     return loss, cnt
 
 
+def _training_cfg(cfg):
+    """Training runs the differentiable XLA realization: the pallas kernels
+    define no VJP yet (ROADMAP), so backend="auto" must not resolve to pallas
+    under jax.grad. An EXPLICIT backend="pallas" is left untouched (opt-in)."""
+    if cfg.moe is not None and getattr(cfg.moe, "backend", "auto") == "auto":
+        import dataclasses
+        return cfg.with_overrides(
+            moe=dataclasses.replace(cfg.moe, backend="xla"))
+    return cfg
+
+
 def loss_fn(params: dict, batch: dict, cfg):
     """batch: tokens [B,S], labels [B,S] (+ stub extras). -> (loss, metrics)."""
+    cfg = _training_cfg(cfg)
     extras = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
     x, bal = model_forward(params, batch["tokens"], cfg, extras)
     loss_sum, cnt = chunked_xent(params, x, batch["labels"], cfg)
@@ -662,13 +693,15 @@ def prefill(params: dict, tokens: jax.Array, cfg, extras: dict | None = None,
     positions = jnp.arange(S, dtype=jnp.int32)
     windows = jnp.asarray(layer_windows(cfg))
     goe = expert_groups(cfg)
+    gm = expert_group_members(cfg)
     x = params["embed"][tokens]
     has_go = "go" in state
 
     def body(x, xs):
         lp, w = xs
         out = B.attn_block(lp, x, cfg=cfg, positions=positions, window=w,
-                           group_of_expert=goe, return_kv=True)
+                           group_of_expert=goe, group_members=gm,
+                           return_kv=True)
         x, aux, k, v = out
         if has_go:
             # build this layer's GO cache from the expert-choice aux

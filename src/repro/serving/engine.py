@@ -21,6 +21,13 @@ independent.
 Compile surface: the decode step compiles ONCE per (pool width, max_tokens);
 prefill compiles once per distinct prompt length (pad prompts to buckets in
 front of the engine if that matters for your trace).
+
+The MoE execution backend rides in through cfg.moe.backend: with "pallas"
+the batched decode tick runs the selected-experts grouped GEMM (~B*k rows
+per MoE layer instead of B*E dense FFNs — kernels/ops.py:go_selected_ffn)
+and prefill flattens the whole pool's FFN pairs into one tile plan. Streams
+stay bit-identical to the static generate() path because both run the same
+kernels (pinned with backend="pallas" in tests/test_serving.py).
 """
 from __future__ import annotations
 
@@ -164,6 +171,7 @@ class ServingEngine:
     # ------------------------------------------------------------------ stats
 
     def stats(self) -> dict:
+        from repro.core.moe import resolve_backend
         reqs = self.finished.values()
         return {
             "steps": self.step_count,
@@ -172,4 +180,6 @@ class ServingEngine:
             "queued": len(self.scheduler.queue),
             "active": self.pool.num_active(),
             "tokens_out": sum(len(r.tokens) for r in reqs),
+            "moe_backend": (resolve_backend(self.cfg.moe)
+                            if self.cfg.moe is not None else None),
         }

@@ -16,6 +16,9 @@ SWEEP = [
     (256, 512, 384, 8, 64, jnp.float32),
     (512, 1024, 512, 8, 128, jnp.bfloat16),
     (128, 512, 128, 3, 32, jnp.float32),
+    # non-tile-aligned K/F (registry d=48/96-style dims + K > bk non-divisible)
+    (128, 48, 96, 4, 32, jnp.float32),
+    (64, 688, 172, 4, 32, jnp.float32),
 ]
 
 
@@ -61,22 +64,86 @@ def test_go_topk_sweep(B, E, k):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
-def test_tile_plan_properties():
+def _check_plan(ef, E, bn):
+    """Row/tile invariants of plan_tile_dispatch for a given distribution."""
     from repro.kernels.ops import plan_tile_dispatch
-    key = jax.random.PRNGKey(0)
-    ef = jax.random.randint(key, (200,), 0, 8)
-    plan = plan_tile_dispatch(ef, 8, 32)
+    ef = jnp.asarray(ef, jnp.int32)
+    N = ef.shape[0]
+    plan = plan_tile_dispatch(ef, E, bn)
     dest = np.asarray(plan.dest)
+    te = np.asarray(plan.tile_expert)
+    tv = np.asarray(plan.tile_valid)
     # all rows land in bounds, no two pairs share a slot
     assert dest.max() < plan.n_pad
     assert len(np.unique(dest)) == len(dest)
-    # every tile's rows belong to the tile's expert
-    te = np.asarray(plan.tile_expert)
+    # every tile's rows belong to the tile's expert, and that tile is valid
     e_of_row = np.asarray(ef)
     for r, dst in enumerate(dest):
-        assert te[dst // 32] == e_of_row[r]
-    # row_valid marks exactly the occupied slots
-    assert int(np.asarray(plan.row_valid).sum()) == 200
+        assert te[dst // bn] == e_of_row[r]
+        assert tv[dst // bn]
+    # row_valid marks exactly the occupied slots; counts account every pair
+    assert int(np.asarray(plan.row_valid).sum()) == N
+    assert int(np.asarray(plan.counts).sum()) == N
+    # valid tiles cover exactly the tile-padded runs (skipped tiles = padding)
+    padded = (np.asarray(plan.counts) + bn - 1) // bn * bn
+    assert int(tv.sum()) == int(padded.sum() // bn)
+    return plan
+
+
+def test_tile_plan_properties():
+    key = jax.random.PRNGKey(0)
+    ef = jax.random.randint(key, (200,), 0, 8)
+    _check_plan(ef, 8, 32)
+
+
+@pytest.mark.parametrize("case", ["all_one_expert", "empty_experts",
+                                  "single_pair", "last_expert_only"])
+def test_tile_plan_adversarial(case):
+    """Planner invariants under adversarial expert distributions."""
+    E, bn = 8, 32
+    if case == "all_one_expert":
+        ef = np.full(200, 3)
+    elif case == "empty_experts":
+        ef = np.concatenate([np.full(100, 0), np.full(100, 7)])
+    elif case == "single_pair":
+        ef = np.array([5])
+    else:
+        ef = np.full(33, E - 1)
+    plan = _check_plan(ef, E, bn)
+    if case == "all_one_expert":
+        assert int(np.asarray(plan.tile_valid).sum()) == -(-200 // bn)
+
+
+def test_gmm_scaled_matches_ref():
+    """Fused-combine gmm: per-row weights applied in-kernel, fp32 out."""
+    from repro.kernels.moe_gmm import gmm_scaled
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(9), 4)
+    N, K, F, E, bn = 128, 96, 80, 4, 32
+    x = jax.random.normal(k1, (N, K)) * 0.1
+    w = jax.random.normal(k2, (E, K, F)) * 0.05
+    te = jax.random.randint(k3, (N // bn,), 0, E)
+    s = jax.random.normal(k4, (N, 1))
+    y = gmm_scaled(x, w, te, None, s, bn=bn, interpret=True)
+    assert y.dtype == jnp.float32
+    y_ref = ref.gmm_scaled_ref(x, w, te, s, bn)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gmm_tile_valid_skips_compute():
+    """Invalid tiles must produce zero rows (their MXU work is skipped)."""
+    from repro.kernels.moe_gmm import gmm
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    N, K, F, E, bn = 64, 32, 32, 2, 16
+    x = jax.random.normal(k1, (N, K)) * 0.1
+    w = jax.random.normal(k2, (E, K, F)) * 0.05
+    te = jnp.array([0, 1, 0, 1])
+    tv = jnp.array([1, 0, 1, 0])
+    y = gmm(x, w, te, tv, bn=bn, interpret=True)
+    y_full = gmm(x, w, te, None, bn=bn, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y[bn:2 * bn]), 0.0)
+    np.testing.assert_array_equal(np.asarray(y[3 * bn:]), 0.0)
+    np.testing.assert_allclose(np.asarray(y[:bn]), np.asarray(y_full[:bn]))
 
 
 @pytest.mark.parametrize("B,S,H,hd", [(1, 16, 2, 8), (2, 24, 4, 16),
