@@ -8,6 +8,12 @@ Measures, on the SAME weights and routing:
             routed pair streams through the grouped GEMM exactly once).
             Reports us/call and the redundant-FLOP ratio of each path
             (FFN rows computed / routed pairs; 1.0 = zero redundancy).
+  sharded   moe_forward_ep under a ("data", "model") mesh: the per-shard
+            [E_loc, C, d] capacity buffers of backend="xla" vs the per-shard
+            tile plans of backend="pallas" (each shard plans only its local
+            experts; drop parity pinned in tests). Skipped gracefully on
+            single-device hosts — `main()` forces host devices via XLA_FLAGS
+            before jax imports, so the CLI always emits the row on CPU.
   decode    the GO-cache step with the dense fallback (expert_ffn_all: B*E
             FFN rows per step) vs the selected-experts grouped GEMM
             (kernels/ops.py:go_selected_ffn: only pairs the TopKUpdate
@@ -19,6 +25,7 @@ interpret mode — absolute us are a correctness-path baseline there; the
 row/FLOP accounting is platform-independent.
 
 Usage:  PYTHONPATH=src python -m benchmarks.moe_path [--smoke] [--out PATH]
+                                                     [--sharded-devices N]
 """
 from __future__ import annotations
 
@@ -26,6 +33,8 @@ import argparse
 import dataclasses
 import json
 import math
+import os
+import sys
 import time
 
 
@@ -79,6 +88,48 @@ def run(smoke: bool = True, out: str = "BENCH_moe_path.json") -> dict:
         r.expert_idx.reshape(-1).astype(jnp.int32), E, bn)
     rows_pal = int(((plan.counts + bn - 1) // bn * bn).sum())  # tile-padded
 
+    # --- sharded forward: EP shard_map, per-shard buffers vs per-shard plans
+    n_dev = jax.device_count()
+    M = 2 if (n_dev >= 2 and E % 2 == 0) else 0
+    if M:
+        mesh = jax.make_mesh((n_dev // M, M), ("data", "model"))
+        B_ep = 4
+        S = T // B_ep
+        h = x.reshape(B_ep, S, d)
+        f_ep_x = jax.jit(lambda h: MOE.moe_forward_ep(params, h, e_xla))
+        f_ep_p = jax.jit(lambda h: MOE.moe_forward_ep(params, h, e_pal))
+        with mesh:
+            us_ep_x = _timeit(lambda: f_ep_x(h)[0].block_until_ready())
+            us_ep_p = _timeit(lambda: f_ep_p(h)[0].block_until_ready())
+            a_x = f_ep_x(h)[1]
+            a_p = f_ep_p(h)[1]
+        assert int(a_x["dropped"]) == int(a_p["dropped"]), \
+            "sharded xla vs pallas drop sets diverged"
+        # rows: xla fills every shard's [E_loc, C] buffer (B*E*C total);
+        # pallas computes each shard's tile-padded local runs
+        C_ep = max(1, math.ceil(S * k / E * e_xla.capacity_factor))
+        from repro.core.routing import token_choice as tc
+        cnt_ep = np.stack([np.bincount(
+            np.asarray(tc(h[b], params["gate"], k).expert_idx).reshape(-1),
+            minlength=E) for b in range(B_ep)])
+        rows_ep_x = B_ep * E * C_ep
+        rows_ep_p = int(((cnt_ep + bn - 1) // bn * bn).sum())
+        n_pairs_ep = B_ep * S * k
+        sharded = {
+            "mesh": {"data": n_dev // M, "model": M},
+            "us_xla": round(us_ep_x, 1),
+            "us_pallas": round(us_ep_p, 1),
+            "routed_pairs": n_pairs_ep,
+            "ffn_rows_xla": rows_ep_x,
+            "ffn_rows_pallas": rows_ep_p,
+            "redundant_flop_ratio_xla": round(rows_ep_x / n_pairs_ep, 3),
+            "redundant_flop_ratio_pallas": round(rows_ep_p / n_pairs_ep, 3),
+            "dropped": int(a_p["dropped"]),
+        }
+    else:
+        sharded = {"skipped": f"needs >= 2 devices with E % 2 == 0 "
+                              f"(have {n_dev} devices, E={E})"}
+
     # --- GO-cache decode: dense all-experts vs selected-only grouped GEMM
     cache = go_cache_init(B, E, k, d, jnp.float32)
     gate = params["gate"]
@@ -124,6 +175,7 @@ def run(smoke: bool = True, out: str = "BENCH_moe_path.json") -> dict:
             "redundant_flop_ratio_xla": round(rows_xla / N, 3),
             "redundant_flop_ratio_pallas": round(rows_pal / N, 3),
         },
+        "forward_sharded": sharded,
         "decode": {
             "us_step_dense": round(us_dense, 1),
             "us_step_selected": round(us_sel, 1),
@@ -143,13 +195,29 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default="BENCH_moe_path.json")
+    ap.add_argument("--sharded-devices", type=int, default=4,
+                    help="force this many host devices (XLA_FLAGS, set "
+                         "before jax imports) so the sharded-forward row "
+                         "runs on single-device CPU hosts; 0 = don't force")
     args = ap.parse_args()
+    if args.sharded_devices > 1 and "jax" not in sys.modules:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count="
+              f"{args.sharded_devices}").strip()
     rep = run(smoke=args.smoke, out=args.out)
-    f, dck = rep["forward"], rep["decode"]
+    f, sh, dck = rep["forward"], rep["forward_sharded"], rep["decode"]
     print(f"forward: xla {f['us_xla_masked']:.0f}us "
           f"(FLOP ratio {f['redundant_flop_ratio_xla']:.2f}x) vs "
           f"pallas {f['us_pallas']:.0f}us "
           f"(ratio {f['redundant_flop_ratio_pallas']:.2f}x)")
+    if "skipped" in sh:
+        print(f"sharded: skipped — {sh['skipped']}")
+    else:
+        print(f"sharded: mesh {sh['mesh']} xla {sh['us_xla']:.0f}us "
+              f"(ratio {sh['redundant_flop_ratio_xla']:.2f}x) vs "
+              f"pallas {sh['us_pallas']:.0f}us "
+              f"(ratio {sh['redundant_flop_ratio_pallas']:.2f}x)")
     print(f"decode:  dense {dck['us_step_dense']:.0f}us/"
           f"{dck['rows_dense_per_steps']} rows vs selected "
           f"{dck['us_step_selected']:.0f}us/{dck['rows_selected_per_steps']} "

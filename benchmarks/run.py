@@ -6,6 +6,8 @@ its headline derived metric), then the detailed tables.
 """
 from __future__ import annotations
 
+import os
+import sys
 import time
 
 
@@ -17,6 +19,15 @@ def _timed(name, fn):
 
 
 def main() -> None:
+    # Force multi-device CPU BEFORE the first jax import so moe_path's
+    # sharded-forward row is emitted from this entry point too — otherwise
+    # this harness silently overwrites BENCH_moe_path.json with a skipped
+    # row on single-device hosts.
+    if "jax" not in sys.modules:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=4").strip()
+
     from benchmarks import paper_fig4, paper_fig5, paper_table1, roofline
 
     rows = []

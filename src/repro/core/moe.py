@@ -47,14 +47,44 @@ from repro.kernels import ops as OPS
 from repro.models.layers import dense_init, split
 
 
-def resolve_backend(e: MoEConfig) -> str:
-    """Resolve `MoEConfig.backend` to the concrete engine for this host."""
+def resolve_backend(e: MoEConfig, refs=None) -> str:
+    """Resolve `MoEConfig.backend` to the concrete engine for this host.
+
+    Pass the layer inputs/params (any pytree) as `refs` to fail fast when an
+    EXPLICIT backend="pallas" is traced for differentiation: the pallas
+    kernels define no VJP yet, and without this guard the failure surfaces
+    deep inside jax at transpose time as a bare `NotImplementedError` with
+    an EMPTY message (grads flow through the params, so the activations
+    alone are not enough — a layer-level `jax.grad` over params closes over
+    constant activations)."""
     b = getattr(e, "backend", "auto")
     if b == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "xla"
     if b not in ("xla", "pallas"):
         raise ValueError(f"unknown MoE backend: {b!r}")
+    if b == "pallas" and refs is not None and any(
+            _under_autodiff(l) for l in jax.tree.leaves(refs)):
+        raise NotImplementedError(
+            "pallas backend has no backward pass yet; use backend='auto' or "
+            "'xla' for training (loss_fn already pins 'auto' to xla — see "
+            "ROADMAP: custom VJP over gmm/gmm_swiglu)")
     return b
+
+
+def _under_autodiff(x) -> bool:
+    """Best-effort: is `x` being traced for differentiation? Walks the tracer
+    nesting for a JVP tracer (grad/vjp linearization), unwrapping jit/vmap
+    tracers along the way. grad-of-jit retraces are caught at transpose time
+    by jax itself — this only makes the common paths fail early and clearly."""
+    from jax.interpreters import ad
+    t = x
+    for _ in range(16):
+        if not isinstance(t, jax.core.Tracer):
+            return False
+        if isinstance(t, ad.JVPTracer):
+            return True
+        t = getattr(t, "primal", getattr(t, "val", None))
+    return False
 
 
 def _block_rows(e: MoEConfig) -> int:
@@ -149,12 +179,23 @@ class DispatchPlan(NamedTuple):
     counts: jax.Array        # [E] tokens routed per expert (pre-capacity)
 
 
-def _plan_dispatch(x, expert_flat, weights_flat, token_flat, E, C):
+def _expert_positions(expert_flat):
+    """Stable expert-sort of routed pairs + each pair's position within its
+    expert's run — THE capacity-eviction order. Every realization of a
+    capacity drop (buffer eviction in `_plan_dispatch`, zero combine weights
+    in the EP pallas branch) must consume this one definition, or sharded
+    xla-vs-pallas drop parity silently breaks."""
     N = expert_flat.shape[0]
     order = jnp.argsort(expert_flat, stable=True)
     se = expert_flat[order]
     pos = jnp.arange(N, dtype=jnp.int32) - jnp.searchsorted(
         se, se, side="left").astype(jnp.int32)
+    return order, se, pos
+
+
+def _plan_dispatch(x, expert_flat, weights_flat, token_flat, E, C):
+    N = expert_flat.shape[0]
+    order, se, pos = _expert_positions(expert_flat)
     dest_sorted = jnp.where(pos < C, se * C + pos, E * C)
     # O(N) scatter inversion of the sort permutation (was a second argsort)
     dest = jnp.zeros((N,), jnp.int32).at[order].set(dest_sorted)
@@ -181,7 +222,7 @@ def dispatch_forward(params: dict, x: jax.Array, e: MoEConfig,
     backend="pallas" routes through the tile-dispatch grouped GEMM: no
     [E, C, d] capacity buffer and no drops (padding absorbs the worst case),
     combine weights fused in-kernel."""
-    if resolve_backend(e) == "pallas":
+    if resolve_backend(e, (x, params)) == "pallas":
         return _dispatch_forward_pallas(params, x, e)
     T = x.shape[0]
     E, k = e.num_experts, e.top_k
@@ -242,7 +283,7 @@ def group_forward(params: dict, x: jax.Array, e: MoEConfig,
     C_grp = max(1, int(math.ceil(g * C_exp * pool_factor)))
     if members is None:
         members = _members_matrix(group_of_expert, G, g)         # [G, g]
-    if resolve_backend(e) == "pallas":
+    if resolve_backend(e, (x, params)) == "pallas":
         return _group_forward_pallas(params, x, e, group_of_expert, members,
                                      C_grp)
     r = R.token_choice(x, params["gate"], k)
@@ -358,7 +399,7 @@ def _members_matrix(group_of_expert: jax.Array, G: int, g: int) -> jax.Array:
 def expert_choice_forward(params: dict, x: jax.Array, e: MoEConfig) -> tuple:
     """Expert-choice prefill/train: each expert gathers its top-C tokens.
     Returns (y, aux) where aux also carries what the GO cache needs."""
-    if resolve_backend(e) == "pallas":
+    if resolve_backend(e, (x, params)) == "pallas":
         return _expert_choice_forward_pallas(params, x, e)
     T = x.shape[0]
     cap = ec_capacity(T, e)
@@ -475,6 +516,15 @@ def moe_forward_ep(params: dict, h: jax.Array, e: MoEConfig) -> tuple:
     the expert index at deployment so each shard's aggregate load balances
     (straggler mitigation at the MoE layer).
 
+    Both backends run INSIDE the shard body. backend="xla" packs a per-shard
+    [E_loc, C, d] capacity buffer; backend="pallas" builds a PER-SHARD tile
+    plan (plan_tile_dispatch with the shard's expert_offset/num_local window:
+    non-local pairs ride a skipped drop lane) and streams the local pairs
+    through the grouped GEMM. Capacity overflow is decided by ONE rule —
+    position in the expert-stable sorted order, the same order _plan_dispatch
+    evicts in — so both backends drop the SAME pairs (pallas realizes a drop
+    as a zero combine weight, pinned by tests/test_moe_mesh.py).
+
     h [B, S, d] -> (y [B, S, d], aux). Token-choice only; requires
     E % model_axis == 0 (callers fall back to the vmapped path otherwise).
     """
@@ -490,6 +540,8 @@ def moe_forward_ep(params: dict, h: jax.Array, e: MoEConfig) -> tuple:
     B, S, d = h.shape
     dp = dp_spec()
     C = max(1, int(math.ceil(S * k / E * e.capacity_factor)))
+    use_pallas = resolve_backend(e, (h, params)) == "pallas"
+    bn = _block_rows(e)
 
     def body(h_loc, gate, wg, wi, wo):
         i = jax.lax.axis_index("model")
@@ -497,20 +549,31 @@ def moe_forward_ep(params: dict, h: jax.Array, e: MoEConfig) -> tuple:
 
         def per_seq(xb):
             r = R.token_choice(xb, gate, k)
-            ef = r.expert_idx.reshape(-1).astype(jnp.int32) - lo
+            ef = r.expert_idx.reshape(-1).astype(jnp.int32)
             wf = r.weights.reshape(-1)
             tok = jnp.repeat(jnp.arange(S, dtype=jnp.int32), k)
-            local = (ef >= 0) & (ef < E_loc)
-            ef_l = jnp.where(local, ef, E_loc)          # E_loc = drop bucket
-            plan = _plan_dispatch(xb, ef_l, wf, tok, E_loc, C)
-            hdn = jax.nn.silu(jnp.einsum(
-                "ecd,edf->ecf", plan.x_disp, wg)) * jnp.einsum(
-                "ecd,edf->ecf", plan.x_disp, wi)
-            y_disp = jnp.einsum("ecf,efd->ecd", hdn, wo)
-            y = _combine(y_disp, plan, S, jnp.float32)
+            local = (ef >= lo) & (ef < lo + E_loc)
+            ef_l = jnp.where(local, ef - lo, E_loc)     # E_loc = drop bucket
             bal = R.load_balance_loss(r.scores, r.expert_idx, E)
-            cnt = jnp.bincount(ef_l, length=E_loc + 1)[:E_loc]
-            dropped = (local & (plan.dest == E_loc * C)).sum()
+            if use_pallas:
+                # same per-shard capacity rule as the xla buffer below: the
+                # planner's `pos` is the pair's rank within its lane's stable
+                # run (derived from the plan's own sort — no second argsort);
+                # evicted pairs keep their rows, lose their combine weight
+                y, _, plan = OPS.moe_ffn_fused(
+                    xb, tok, ef, wf, {"wg": wg, "wi": wi, "wo": wo}, E, S,
+                    bn=bn, expert_offset=lo, num_local=E_loc, capacity=C)
+                cnt = plan.counts[:E_loc]
+                dropped = (local & (plan.pos >= C)).sum()
+            else:
+                plan = _plan_dispatch(xb, ef_l, wf, tok, E_loc, C)
+                hdn = jax.nn.silu(jnp.einsum(
+                    "ecd,edf->ecf", plan.x_disp, wg)) * jnp.einsum(
+                    "ecd,edf->ecf", plan.x_disp, wi)
+                y_disp = jnp.einsum("ecf,efd->ecd", hdn, wo)
+                y = _combine(y_disp, plan, S, jnp.float32)
+                cnt = jnp.bincount(ef_l, length=E_loc + 1)[:E_loc]
+                dropped = (local & (plan.dest == E_loc * C)).sum()
             return y, bal, cnt, dropped
 
         y, bal, cnt, dropped = jax.vmap(per_seq)(h_loc)

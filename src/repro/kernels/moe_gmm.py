@@ -33,8 +33,14 @@ the static worst-case shape. The planner emits constant weight indices across
 invalid tail tiles, so the pipeline re-uses the staged VMEM buffer instead of
 issuing fresh HBM copies for tiles it will not compute.
 
-`interpret=None` auto-selects from the host platform: Mosaic lowering on TPU,
-interpreter elsewhere (CPU CI). Validated against kernels/ref.py.
+`interpret=None` auto-selects from the LOWERING context, not the host default:
+inside a mesh (`with mesh:` — shard_map bodies, sharded jits) the kernel lowers
+for the mesh's devices, which may differ from `jax.default_backend()` (a forced
+CPU host mesh on a TPU host, or explicit device placement). The resolved value
+is part of the jit cache key — the public entry points resolve it BEFORE the
+jit boundary, so a process that lowers for both platforms (TPU eager + CPU
+mesh tests) compiles both variants instead of replaying whichever traced
+first. Validated against kernels/ref.py.
 """
 from __future__ import annotations
 
@@ -46,9 +52,20 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def lowering_platform() -> str:
+    """The platform the next pallas_call actually lowers for: the active
+    mesh's devices when inside a `with mesh:` context (shard_map / sharded
+    jit tracing happens there), the host default backend otherwise."""
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    if m is not None and not m.empty:
+        return m.devices.flat[0].platform
+    return jax.default_backend()
+
+
 def default_interpret() -> bool:
-    """Interpret unless we can actually lower via Mosaic (i.e. on TPU)."""
-    return jax.default_backend() != "tpu"
+    """Interpret unless we can actually lower via Mosaic (i.e. for TPU)."""
+    return lowering_platform() != "tpu"
 
 
 def _pad_to(a: jax.Array, axis: int, size: int) -> jax.Array:
@@ -135,18 +152,23 @@ def _gmm_swiglu_kernel(te_ref, tv_ref, x_ref, wg_ref, wi_ref, o_ref,
         o_ref[...] = h.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("bn", "bk", "bf", "interpret", "out_dtype"))
 def gmm(x: jax.Array, w: jax.Array, tile_expert: jax.Array,
         tile_valid: jax.Array | None = None, *, bn: int = 128, bk: int = 512,
         bf: int = 128, interpret: bool | None = None,
         out_dtype=None) -> jax.Array:
     """x [N, K] (rows tile-aligned by expert), w [E, K, F],
     tile_expert [n_tiles] int32, tile_valid [n_tiles] optional -> y [N, F]."""
-    N, K = x.shape
-    E, _, F = w.shape
     if interpret is None:
         interpret = default_interpret()
+    return _gmm(x, w, tile_expert, tile_valid, bn=bn, bk=bk, bf=bf,
+                interpret=interpret, out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "bf", "interpret", "out_dtype"))
+def _gmm(x, w, tile_expert, tile_valid, *, bn, bk, bf, interpret, out_dtype):
+    N, K = x.shape
+    E, _, F = w.shape
     bk, bf = min(bk, K), min(bf, F)
     ni, te, tv = _row_tiles(N, bn, tile_expert, tile_valid)
     Kp, Fp = -(-K // bk) * bk, -(-F // bf) * bf
@@ -173,8 +195,6 @@ def gmm(x: jax.Array, w: jax.Array, tile_expert: jax.Array,
     return y[:N, :F]
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("bn", "bk", "bf", "interpret", "out_dtype"))
 def gmm_scaled(x: jax.Array, w: jax.Array, tile_expert: jax.Array,
                tile_valid: jax.Array | None, row_scale: jax.Array, *,
                bn: int = 128, bk: int = 512, bf: int = 128,
@@ -185,10 +205,18 @@ def gmm_scaled(x: jax.Array, w: jax.Array, tile_expert: jax.Array,
     The per-row combine weight is applied against the fp32 accumulator in the
     kernel's epilogue, so the caller can scatter-add the rows straight into the
     token buffer — no separate gather + fp32 multiply pass. row_scale [N, 1]."""
-    N, K = x.shape
-    E, _, F = w.shape
     if interpret is None:
         interpret = default_interpret()
+    return _gmm_scaled(x, w, tile_expert, tile_valid, row_scale, bn=bn, bk=bk,
+                       bf=bf, interpret=interpret, out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "bf", "interpret", "out_dtype"))
+def _gmm_scaled(x, w, tile_expert, tile_valid, row_scale, *, bn, bk, bf,
+                interpret, out_dtype):
+    N, K = x.shape
+    E, _, F = w.shape
     bk, bf = min(bk, K), min(bf, F)
     ni, te, tv = _row_tiles(N, bn, tile_expert, tile_valid)
     Kp, Fp = -(-K // bk) * bk, -(-F // bf) * bf
@@ -217,17 +245,22 @@ def gmm_scaled(x: jax.Array, w: jax.Array, tile_expert: jax.Array,
     return y[:N, :F]
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "bk", "bf", "interpret"))
 def gmm_swiglu(x: jax.Array, wg: jax.Array, wi: jax.Array,
                tile_expert: jax.Array, tile_valid: jax.Array | None = None, *,
                bn: int = 128, bk: int = 512, bf: int = 128,
                interpret: bool | None = None) -> jax.Array:
     """Fused per-expert SwiGLU up-projection: silu(x@wg[e]) * (x@wi[e]).
     One x-tile staging feeds BOTH weight streams (multiplexed operand reuse)."""
-    N, K = x.shape
-    E, _, F = wg.shape
     if interpret is None:
         interpret = default_interpret()
+    return _gmm_swiglu(x, wg, wi, tile_expert, tile_valid, bn=bn, bk=bk,
+                       bf=bf, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "bf", "interpret"))
+def _gmm_swiglu(x, wg, wi, tile_expert, tile_valid, *, bn, bk, bf, interpret):
+    N, K = x.shape
+    E, _, F = wg.shape
     bk, bf = min(bk, K), min(bf, F)
     ni, te, tv = _row_tiles(N, bn, tile_expert, tile_valid)
     Kp, Fp = -(-K // bk) * bk, -(-F // bf) * bf

@@ -31,13 +31,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.moe_gmm import (default_interpret, gmm, gmm_scaled,
-                                   gmm_swiglu)
+                                   gmm_swiglu, lowering_platform)
 
 
 def default_block_rows() -> int:
-    """Row-tile height: MXU-aligned on TPU; small on CPU so the interpreted
-    correctness path does not drown in padding tiles."""
-    return 128 if jax.default_backend() == "tpu" else 8
+    """Row-tile height: MXU-aligned when lowering for TPU; small otherwise so
+    the interpreted correctness path does not drown in padding tiles."""
+    return 128 if lowering_platform() == "tpu" else 8
 
 
 class TilePlan(NamedTuple):
@@ -45,7 +45,11 @@ class TilePlan(NamedTuple):
     tile_expert: jax.Array    # [n_tiles] expert id per row tile
     tile_valid: jax.Array     # [n_tiles] bool — tile carries >=1 real row
     row_valid: jax.Array      # [N_pad] bool — real row vs alignment padding
-    counts: jax.Array         # [E] pairs per expert (pre-capacity)
+    counts: jax.Array         # [lanes] pairs per lane (pre-capacity)
+    pos: jax.Array            # [N] pair's position within its lane's stable
+                              # run (dest - lane offset; no extra sort) — the
+                              # capacity-eviction rank shared with the xla
+                              # dispatch buffer
     n_pad: int                # static padded row count
 
 
@@ -56,12 +60,29 @@ def padded_rows(num_pairs: int, num_experts: int, bn: int) -> int:
     return -(-worst // bn) * bn
 
 
-def plan_tile_dispatch(expert_flat: jax.Array, num_experts: int,
-                       bn: int) -> TilePlan:
+def plan_tile_dispatch(expert_flat: jax.Array, num_experts: int, bn: int, *,
+                       expert_offset: jax.Array | int = 0,
+                       num_local: int = 0) -> TilePlan:
     """expert_flat [N] int32 (one entry per (token, expert) pair) ->
-    tile-aligned layout. All shapes static; pure jnp (jit/pjit-safe)."""
+    tile-aligned layout. All shapes static; pure jnp (jit/pjit-safe).
+
+    With `num_local > 0` the plan covers ONLY the local expert window
+    [expert_offset, expert_offset + num_local): pairs outside it ride a
+    trailing DROP lane whose tiles are planned (static shapes) but marked
+    invalid, so the kernel skips their MXU work. `tile_expert` then indexes
+    the LOCAL weight bank [0, num_local) — this is what lets every EP shard
+    of a `shard_map` body plan tiles for its own expert slice (the offset may
+    be a traced `axis_index`; `num_local` is static so shapes agree across
+    shards). `counts` covers the planned lanes (num_local + 1, drop last).
+    """
+    if num_local:
+        local_idx = expert_flat - expert_offset
+        local = (local_idx >= 0) & (local_idx < num_local)
+        expert_flat = jnp.where(local, local_idx, num_local).astype(jnp.int32)
+        E = num_local + 1                      # lane num_local = drop lane
+    else:
+        E = num_experts
     N = expert_flat.shape[0]
-    E = num_experts
     n_pad = padded_rows(N, E, bn)
 
     counts = jnp.bincount(expert_flat, length=E)                  # [E]
@@ -94,7 +115,16 @@ def plan_tile_dispatch(expert_flat: jax.Array, num_experts: int,
     row_expert = jnp.minimum(row_expert, E - 1)
     row_valid = row_idx < (offsets[row_expert] + counts[row_expert])
 
-    return TilePlan(dest, tile_expert, tile_valid, row_valid, counts, n_pad)
+    if num_local:
+        # drop-lane tiles stay planned (static shapes) but never compute;
+        # clamp their weight index so the pipeline re-uses the staged buffer
+        tile_valid = tile_valid & (tile_expert < num_local)
+        tile_expert = jnp.minimum(tile_expert, num_local - 1)
+        row_valid = row_valid & (row_expert < num_local)
+
+    pos = dest - offsets[expert_flat].astype(jnp.int32)
+    return TilePlan(dest, tile_expert, tile_valid, row_valid, counts, pos,
+                    n_pad)
 
 
 def scatter_rows(x_pairs: jax.Array, plan: TilePlan) -> jax.Array:
@@ -123,7 +153,9 @@ def expert_ffn_gmm(x_rows: jax.Array, wg: jax.Array, wi: jax.Array,
 def moe_ffn_fused(x_src: jax.Array, tok: jax.Array, ef: jax.Array,
                   wf: jax.Array, bank: dict, num_experts: int,
                   num_tokens: int, *, expert_of_lane: jax.Array | None = None,
-                  bn: int = 0, interpret: bool | None = None):
+                  bn: int = 0, interpret: bool | None = None,
+                  expert_offset: jax.Array | int = 0, num_local: int = 0,
+                  capacity: int = 0):
     """Grouped-GEMM MoE FFN over (token, expert) pairs with fused combine.
 
     x_src [T_src, d] source rows; tok [N] source row per pair; ef [N] lane id
@@ -131,12 +163,26 @@ def moe_ffn_fused(x_src: jax.Array, tok: jax.Array, ef: jax.Array,
     maps lanes back to weight indices); wf [N] combine weights (zeroed pairs
     contribute nothing — capacity drops reduce to zero weights).
 
+    With `num_local > 0`, `bank` holds only the LOCAL expert slice and `ef`
+    carries GLOBAL ids: pairs outside [expert_offset, expert_offset +
+    num_local) land in the planner's skipped drop lane and contribute zero
+    rows — the per-shard EP path (each model shard runs this over its own
+    slice and psums the partial outputs).
+
+    With `capacity > 0`, pairs past that position in their lane's stable run
+    (`plan.pos`, the same rank the xla dispatch buffer evicts at) get a ZERO
+    combine weight — capacity drops without a second sort; read the kept
+    mask back off `plan.pos < capacity`.
+
     Returns (y [num_tokens, d] fp32 combined output, y_rows [n_pad, d] fp32
     weighted per-row outputs, plan). The combine weight is applied in-kernel
     (gmm_scaled) and rows are scatter-added directly into the token buffer.
     """
     bn = bn or default_block_rows()
-    plan = plan_tile_dispatch(ef, num_experts, bn)
+    plan = plan_tile_dispatch(ef, num_experts, bn,
+                              expert_offset=expert_offset, num_local=num_local)
+    if capacity:
+        wf = jnp.where(plan.pos < capacity, wf, 0.0)
     te = (plan.tile_expert if expert_of_lane is None
           else expert_of_lane[plan.tile_expert])
     x_rows = scatter_rows(x_src[tok], plan)
@@ -173,17 +219,15 @@ def go_selected_ffn(x: jax.Array, selected: jax.Array, g: jax.Array,
     pair_b = jnp.repeat(jnp.arange(B, dtype=jnp.int32), E)
     pair_e = jnp.tile(jnp.arange(E, dtype=jnp.int32), B)
     ef = jnp.where(sel, pair_e, E)                       # lane E = drop lane
-    plan = plan_tile_dispatch(ef, E + 1, bn)
-    te = jnp.minimum(plan.tile_expert, E - 1)
-    tv = plan.tile_valid & (plan.tile_expert < E)
+    plan = plan_tile_dispatch(ef, E, bn, num_local=E)
     x_rows = scatter_rows(x[pair_b], plan)
     scale = jnp.zeros((plan.n_pad, 1), jnp.float32).at[plan.dest].set(
         jnp.where(sel, g.reshape(-1), 0.0).astype(jnp.float32)[:, None],
         mode="drop")
-    h = gmm_swiglu(x_rows, bank["wg"], bank["wi"], te, tv, bn=bn,
-                   interpret=interpret)
-    y_rows = gmm_scaled(h, bank["wo"], te, tv, scale, bn=bn,
-                        interpret=interpret)
+    h = gmm_swiglu(x_rows, bank["wg"], bank["wi"], plan.tile_expert,
+                   plan.tile_valid, bn=bn, interpret=interpret)
+    y_rows = gmm_scaled(h, bank["wo"], plan.tile_expert, plan.tile_valid,
+                        scale, bn=bn, interpret=interpret)
     contrib = gather_rows(y_rows, plan).reshape(B, E, d)
     return contrib, plan
 

@@ -23,6 +23,10 @@ CPU-runnable with smoke configs:
   # static-batch reference path:
   PYTHONPATH=src python -m repro.launch.serve --arch llama_moe_4_16 --smoke \
       --static --batch 4 --prompt 32 --gen 16
+  # sharded: slot rows over the data axis, decode under a (2, 2) mesh:
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+      python -m repro.launch.serve --arch llama_moe_4_16 --smoke \
+      --requests 8 --slots 4 --mesh-model 2
 """
 from __future__ import annotations
 
@@ -74,13 +78,15 @@ def generate(params, cfg, prompts: jax.Array, gen_tokens: int,
 def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
                      num_slots: int, max_tokens: int = 0,
                      extras: dict | None = None,
-                     arrival_steps: list | None = None) -> dict:
+                     arrival_steps: list | None = None, mesh=None) -> dict:
     """Run a list of prompts through the continuous-batching engine.
+    With `mesh`, slot rows are sharded across the data-parallel replicas and
+    every decode tick runs under the mesh (launch/sharding.py rules).
     Returns per-request token arrays plus engine stats."""
     max_tokens = max_tokens or (
         max(len(p) for p in prompts) + gen_tokens + 1)
     eng = ServingEngine(params, cfg, num_slots=num_slots,
-                        max_tokens=max_tokens, extras=extras)
+                        max_tokens=max_tokens, extras=extras, mesh=mesh)
     ids = []
     for i, p in enumerate(prompts):
         step = arrival_steps[i] if arrival_steps else 0
@@ -115,7 +121,15 @@ def main():
     ap.add_argument("--backend", choices=["auto", "xla", "pallas"],
                     default=None,
                     help="MoE execution backend override (default: config)")
+    ap.add_argument("--mesh-model", type=int, default=0,
+                    help="run the engine under a smoke mesh with this "
+                         "model-axis size (slot rows shard over the rest; "
+                         "set XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first on a single-device host)")
     args = ap.parse_args()
+    if args.static and args.mesh_model:
+        ap.error("--mesh-model shards the engine's slot pool; it has no "
+                 "effect on the static generate() path (drop --static)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.backend is not None and cfg.moe is not None:
@@ -139,6 +153,11 @@ def main():
         print("sample:", np.asarray(res["tokens"][0])[:16])
         return
 
+    mesh = None
+    if args.mesh_model:
+        from repro.launch.mesh import make_smoke_mesh
+        mesh = make_smoke_mesh(model=args.mesh_model)
+
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=args.prompt, dtype=np.int32)
                for _ in range(args.requests)]
@@ -146,11 +165,12 @@ def main():
     arrivals = [2 * i for i in range(args.requests)]
     res = serve_continuous(params, cfg, prompts, args.gen,
                            num_slots=args.slots, extras=extras or None,
-                           arrival_steps=arrivals)
+                           arrival_steps=arrivals, mesh=mesh)
     s = res["stats"]
     print(f"served {s['finished']} requests over {s['steps']} ticks on "
           f"{args.slots} slots in {res['decode_s']:.2f}s "
-          f"({res['tok_per_s']:.1f} tok/s)")
+          f"({res['tok_per_s']:.1f} tok/s)"
+          + (f" [mesh {s['mesh']}]" if s["mesh"] else ""))
     first = res["tokens"][min(res["tokens"])]
     print("sample:", first[:16])
 

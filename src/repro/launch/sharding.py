@@ -231,6 +231,19 @@ def state_shardings(state_shapes, cfg, mesh, batch: int):
             mesh, state_spec(p, x, cfg, mesh, batch)), state_shapes)
 
 
+def serve_state_shardings(cfg, mesh, num_slots: int, max_tokens: int,
+                          extras: dict | None = None):
+    """NamedShardings for the serving engine's pooled decode state: slot rows
+    over the data-parallel axes, KV sequence / GO expert dims over "model"
+    (the same rules `state_spec` applies to the static-batch decode state —
+    the pool IS that state with the batch dim reinterpreted as slots)."""
+    from repro.models.model import init_decode_state
+    shapes = jax.eval_shape(
+        lambda: init_decode_state(cfg, num_slots, max_tokens, extras or {},
+                                  per_slot_t=True))
+    return state_shardings(shapes, cfg, mesh, num_slots)
+
+
 def batch_shardings(batch_shapes, mesh, policy: str = "tp"):
     """Training batch: leading (microbatch) dim replicated, batch dim over DP
     (plus the model axis under the pure-DP policy)."""

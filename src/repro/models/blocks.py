@@ -45,7 +45,7 @@ def _ffn_apply(params: dict, x: jax.Array, cfg, group_of_expert,
     aux = None
     if "moe" in params:
         B, S, d = h.shape
-        backend = MOE.resolve_backend(cfg.moe)
+        backend = MOE.resolve_backend(cfg.moe, (h, params))
         # XLA backend routes per sequence (vmap over batch), two reasons:
         #  * the sort-based dispatch never crosses the batch dim, so GSPMD
         #    keeps dispatch buffers batch-sharded (a global argsort over
@@ -124,7 +124,7 @@ def attn_block_decode(params: dict, x_t: jax.Array, cache_k, cache_v, t, *,
             # expert FFNs per token and masks.
             moe_p = params["moe"]
             e = cfg.moe
-            if MOE.resolve_backend(e) == "pallas":
+            if MOE.resolve_backend(e, (h2f, moe_p)) == "pallas":
                 res = go_cache_step(
                     go_cache, h2f, t, moe_p["gate"],
                     contrib_fn=lambda xt, sel, g: OPS.go_selected_ffn(

@@ -344,9 +344,22 @@ def chunked_xent(params, x, labels, cfg, chunk: int = 512):
 
 def _training_cfg(cfg):
     """Training runs the differentiable XLA realization: the pallas kernels
-    define no VJP yet (ROADMAP), so backend="auto" must not resolve to pallas
-    under jax.grad. An EXPLICIT backend="pallas" is left untouched (opt-in)."""
-    if cfg.moe is not None and getattr(cfg.moe, "backend", "auto") == "auto":
+    define no VJP yet (ROADMAP), so backend="auto" silently pins to xla. An
+    EXPLICIT backend="pallas" fails fast HERE: inside the layer scan the
+    autodiff tracers are invisible (scan bodies are traced to a jaxpr before
+    the JVP rule runs), so the `resolve_backend` guard cannot see the grad
+    trace and the failure would otherwise surface as a bare
+    NotImplementedError from pallas_call at transpose time."""
+    if cfg.moe is None:
+        return cfg
+    b = getattr(cfg.moe, "backend", "auto")
+    if b == "pallas":
+        raise NotImplementedError(
+            "pallas backend has no backward pass yet; use backend='auto' or "
+            "'xla' for training (see ROADMAP: custom VJP over gmm/gmm_swiglu)."
+            " For forward-only evaluation on pallas, call model_forward + "
+            "chunked_xent directly — loss_fn is the training entry point")
+    if b == "auto":
         import dataclasses
         return cfg.with_overrides(
             moe=dataclasses.replace(cfg.moe, backend="xla"))

@@ -28,6 +28,14 @@ per MoE layer instead of B*E dense FFNs — kernels/ops.py:go_selected_ffn)
 and prefill flattens the whole pool's FFN pairs into one tile plan. Streams
 stay bit-identical to the static generate() path because both run the same
 kernels (pinned with backend="pallas" in tests/test_serving.py).
+
+With a `mesh`, the pool state is sharded by `launch/sharding.py` (slot rows
+across the data-parallel replicas, KV sequence / GO expert dims over
+"model") and every decode tick runs inside the mesh context, so GSPMD
+partitions the batched step — including the selected-experts grouped GEMM —
+across the replicas. Admission prefill stays batch-1 (replicated) and is
+splatted into the sharded row; streams remain bit-identical to the
+unsharded engine (pinned in tests/test_moe_mesh.py).
 """
 from __future__ import annotations
 
@@ -64,10 +72,11 @@ class ServingEngine:
 
     def __init__(self, params, cfg, *, num_slots: int = 8,
                  max_tokens: int = 256, max_queue: int = 0,
-                 extras: dict | None = None):
+                 extras: dict | None = None, mesh=None):
         self.params = params
         self.cfg = cfg
-        self.pool = SlotPool(cfg, num_slots, max_tokens, extras)
+        self.mesh = mesh
+        self.pool = SlotPool(cfg, num_slots, max_tokens, extras, mesh=mesh)
         self.scheduler = FIFOScheduler(num_slots, max_tokens, max_queue)
         self.step_count = 0
         self.finished: dict[int, Request] = {}
@@ -114,10 +123,8 @@ class ServingEngine:
             self._admit(free.pop(0), req, done)
 
         if self.pool.any_active():
-            toks, self.pool.state = _decode_step(
-                self.params, self.pool.state,
-                jnp.asarray(self.pool.pending),
-                jnp.asarray(self.pool.active_mask()), self.cfg)
+            toks, state = self._run_decode_step()
+            self.pool.state = self.pool._pin(state)
             toks = np.asarray(toks)
             self.step_count += 1
             for slot, req in enumerate(self.pool.owner):
@@ -145,6 +152,17 @@ class ServingEngine:
         return self.finished
 
     # -------------------------------------------------------------- internals
+
+    def _run_decode_step(self):
+        """One jitted decode tick, inside the mesh context when sharded (the
+        jit cache keys on the ambient mesh, so the sharded and unsharded
+        variants coexist in one process)."""
+        args = (self.params, self.pool.state, jnp.asarray(self.pool.pending),
+                jnp.asarray(self.pool.active_mask()), self.cfg)
+        if self.mesh is None:
+            return _decode_step(*args)
+        with self.mesh:
+            return _decode_step(*args)
 
     def _admit(self, slot: int, req: Request, done: list[Request]) -> None:
         """Prefill a request into `slot` mid-flight: fills that row's KV and
@@ -182,4 +200,5 @@ class ServingEngine:
             "tokens_out": sum(len(r.tokens) for r in reqs),
             "moe_backend": (resolve_backend(self.cfg.moe)
                             if self.cfg.moe is not None else None),
+            "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
         }

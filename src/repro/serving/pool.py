@@ -12,6 +12,13 @@ jax. The GO cache rows ride along with the KV rows: `write_decode_slot`
 splats a single-request prefill (KV + per-layer GO entries) into the row,
 `init_decode_slot` clears it at retirement (scores back to -inf) so a stale
 expert-choice cache can never leak into the next occupant.
+
+With a `mesh`, the pool's tensors are laid out by the rule-based sharder
+(`launch/sharding.py::serve_state_shardings`): slot rows over the
+data-parallel axes, KV sequence / GO expert dims over "model". Slot writes
+and resets land on the sharded arrays in place; after each the state is
+pinned back to the canonical shardings so the jitted decode step never sees
+a drifted layout (sharding drift means silent recompiles).
 """
 from __future__ import annotations
 
@@ -34,10 +41,11 @@ class SlotPool:
     """Fixed-width pool of per-request decode-cache rows."""
 
     def __init__(self, cfg, num_slots: int, max_tokens: int,
-                 extras: dict | None = None):
+                 extras: dict | None = None, mesh=None):
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_tokens = max_tokens
+        self.mesh = mesh
         # Per-request cross-attn memory arrives batch-1 via each prefill and
         # is splatted in by write_decode_slot — the pool itself always inits
         # the default (zero, [num_slots, ...]) memory rows.
@@ -45,11 +53,24 @@ class SlotPool:
                        if k != "memory"}
         self.state = init_decode_state(
             cfg, num_slots, max_tokens, pool_extras, per_slot_t=True)
+        self.shardings = None
+        if mesh is not None:
+            from repro.launch.sharding import serve_state_shardings
+            self.shardings = serve_state_shardings(
+                cfg, mesh, num_slots, max_tokens, pool_extras)
+            self.state = self._pin(self.state)
         # host-side slot metadata
         self.owner: list[Request | None] = [None] * num_slots
         self.pending = np.zeros(num_slots, np.int32)    # next input token
         self.remaining = np.zeros(num_slots, np.int64)  # tokens still owed
         self.admitted_total = 0
+
+    def _pin(self, state: dict) -> dict:
+        """Reshard `state` onto the canonical pool layout (no-op without a
+        mesh)."""
+        if self.shardings is None:
+            return state
+        return jax.device_put(state, self.shardings)
 
     # ---------------------------------------------------------------- queries
 
@@ -72,7 +93,7 @@ class SlotPool:
         """Install a prefilled request into a free row: write its KV + GO
         cache entries and position in place, arm its first decode input."""
         assert self.owner[slot] is None, f"slot {slot} is occupied"
-        self.state = _write_slot(self.state, slot, slot_state)
+        self.state = self._pin(_write_slot(self.state, slot, slot_state))
         self.owner[slot] = req
         self.pending[slot] = first_token
         self.remaining[slot] = req.max_new_tokens - 1   # first token emitted
@@ -84,7 +105,7 @@ class SlotPool:
         finished request. The row is immediately reusable."""
         req = self.owner[slot]
         assert req is not None, f"slot {slot} is already free"
-        self.state = _reset_slot(self.state, slot)
+        self.state = self._pin(_reset_slot(self.state, slot))
         self.owner[slot] = None
         self.pending[slot] = 0
         self.remaining[slot] = 0

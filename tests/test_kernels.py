@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import given, settings, st
 from repro.kernels import ref
 from repro.kernels.go_topk import go_topk_update
 from repro.kernels.moe_gmm import gmm, gmm_swiglu
@@ -144,6 +145,156 @@ def test_gmm_tile_valid_skips_compute():
     np.testing.assert_array_equal(np.asarray(y[bn:2 * bn]), 0.0)
     np.testing.assert_array_equal(np.asarray(y[3 * bn:]), 0.0)
     np.testing.assert_allclose(np.asarray(y[:bn]), np.asarray(y_full[:bn]))
+
+
+# ------------------------------------------------- local-expert tile plans
+
+@pytest.mark.parametrize("lo,E_loc", [(0, 4), (4, 4), (2, 2), (6, 2)])
+def test_tile_plan_local_window(lo, E_loc):
+    """plan_tile_dispatch with expert_offset/num_local: local pairs tile up
+    against the LOCAL lane index, every non-local pair rides the skipped drop
+    lane — the per-shard EP plan."""
+    from repro.kernels.ops import plan_tile_dispatch
+    E, bn = 8, 8
+    key = jax.random.PRNGKey(lo * 10 + E_loc)
+    ef = jax.random.randint(key, (100,), 0, E).astype(jnp.int32)
+    plan = plan_tile_dispatch(ef, E, bn, expert_offset=lo, num_local=E_loc)
+    dest = np.asarray(plan.dest)
+    te = np.asarray(plan.tile_expert)
+    tv = np.asarray(plan.tile_valid)
+    ef_np = np.asarray(ef)
+    local = (ef_np >= lo) & (ef_np < lo + E_loc)
+    assert te.max() < E_loc                    # indexes the LOCAL bank only
+    for r in range(100):
+        tile = dest[r] // bn
+        if local[r]:
+            assert tv[tile] and te[tile] == ef_np[r] - lo
+        else:
+            assert not tv[tile]                # drop lane never computes
+    # counts: planned lanes = local experts + the drop lane
+    cnt = np.asarray(plan.counts)
+    assert cnt.shape == (E_loc + 1,)
+    for j in range(E_loc):
+        assert cnt[j] == int((ef_np == lo + j).sum())
+    assert cnt[E_loc] == int((~local).sum())
+    # row_valid marks exactly the COMPUTED occupied slots
+    assert int(np.asarray(plan.row_valid).sum()) == int(local.sum())
+
+
+def test_moe_ffn_fused_local_window_psums_to_global():
+    """Sharded-plan equivalence without a mesh: running moe_ffn_fused once
+    per local-expert window over the SAME pairs and summing the partial
+    outputs equals the single global plan (what the EP shard body psums)."""
+    from repro.kernels.ops import moe_ffn_fused
+    E, T, d, de, k, bn = 8, 12, 16, 24, 2, 4
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    bank = {
+        "wg": jax.random.normal(ks[0], (E, d, de)) * 0.1,
+        "wi": jax.random.normal(ks[1], (E, d, de)) * 0.1,
+        "wo": jax.random.normal(ks[2], (E, de, d)) * 0.1,
+    }
+    x = jax.random.normal(ks[3], (T, d)) * 0.3
+    ef = jax.random.randint(ks[4], (T * k,), 0, E).astype(jnp.int32)
+    wf = jnp.abs(jax.random.normal(ks[4], (T * k,)))
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    y_full, _, _ = moe_ffn_fused(x, tok, ef, wf, bank, E, T, bn=bn)
+    for M in (2, 4):
+        E_loc = E // M
+        y_sum = 0
+        for i in range(M):
+            loc = jax.tree.map(lambda a: a[i * E_loc:(i + 1) * E_loc], bank)
+            y_i, _, plan = moe_ffn_fused(x, tok, ef, wf, loc, E, T, bn=bn,
+                                         expert_offset=i * E_loc,
+                                         num_local=E_loc)
+            assert int(plan.counts[:E_loc].sum()) == int(
+                ((np.asarray(ef) // E_loc) == i).sum())
+            y_sum = y_sum + y_i
+        np.testing.assert_allclose(np.asarray(y_sum), np.asarray(y_full),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------ go_selected_ffn drop-lane masking
+
+def _go_selected_case(selected, bn):
+    """Drop-lane masking invariant: unselected pairs must come back as EXACT
+    zero rows (no garbage scatter), selected pairs must match the dense
+    oracle — regardless of how selection aligns with the tile boundary."""
+    from repro.kernels.ops import go_selected_ffn
+    B, E = selected.shape
+    d, de = 16, 24
+    ks = jax.random.split(jax.random.PRNGKey(int(selected.sum()) + bn), 5)
+    bank = {
+        "wg": jax.random.normal(ks[0], (E, d, de)) * 0.1,
+        "wi": jax.random.normal(ks[1], (E, d, de)) * 0.1,
+        "wo": jax.random.normal(ks[2], (E, de, d)) * 0.1,
+    }
+    x = jax.random.normal(ks[3], (B, d)) * 0.3
+    g = jax.nn.softmax(jax.random.normal(ks[4], (B, E)), axis=-1)
+    contrib, plan = go_selected_ffn(x, jnp.asarray(selected), g, bank, E,
+                                    bn=bn)
+    got = np.asarray(contrib)
+    # dense oracle: per-pair SwiGLU FFN weighted by g
+    h = jax.nn.silu(jnp.einsum("bd,edf->bef", x, bank["wg"])) * jnp.einsum(
+        "bd,edf->bef", x, bank["wi"])
+    eo = jnp.einsum("bef,efd->bed", h, bank["wo"])
+    want = np.asarray(g[..., None] * eo)
+    np.testing.assert_array_equal(got[~selected], 0.0)
+    np.testing.assert_allclose(got[selected], want[selected],
+                               rtol=1e-5, atol=1e-6)
+    assert int(plan.counts[:E].sum()) == int(selected.sum())
+
+
+@pytest.mark.parametrize("case", ["tail_tile_all_dropped", "none_selected",
+                                  "one_selected", "all_selected_unaligned"])
+def test_go_selected_adversarial_tail(case):
+    """The all-dropped-tail-tile family: the selected-row count is NOT a
+    multiple of bn and every pair of the trailing tile(s) is dropped."""
+    B, E, bn = 3, 4, 8
+    sel = np.zeros((B, E), bool)
+    if case == "tail_tile_all_dropped":
+        # 5 selected rows (5 % 8 != 0); the remaining 7 pairs fill the drop
+        # lane, so its final tile holds ONLY dropped pairs
+        sel[0, :2] = sel[1, :2] = sel[2, 0] = True
+    elif case == "one_selected":
+        sel[1, 2] = True
+    elif case == "all_selected_unaligned":
+        sel[:] = True                        # 12 pairs, 12 % 8 != 0
+    _go_selected_case(sel, bn)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 12 - 1), st.sampled_from([4, 8]))
+def test_go_selected_mask_property(bits, bn):
+    """Property sweep over arbitrary selection masks (incl. the empty and
+    full masks): zeros where unselected, oracle where selected."""
+    sel = np.array([(bits >> i) & 1 for i in range(12)],
+                   bool).reshape(3, 4)
+    _go_selected_case(sel, bn)
+
+
+# ------------------------------------------------- interpret-mode resolution
+
+def test_default_interpret_resolves_from_lowering_context(monkeypatch):
+    """default_interpret keys off the ACTUAL lowering target: the active
+    mesh's devices when inside one, the host default backend otherwise —
+    a forced CPU mesh on a (faked) TPU host must pick the interpreter."""
+    from repro.kernels import moe_gmm
+    assert moe_gmm.default_interpret() is (jax.default_backend() != "tpu")
+    monkeypatch.setattr(moe_gmm.jax, "default_backend", lambda: "tpu")
+    assert moe_gmm.default_interpret() is False      # no mesh: host decides
+    mesh = jax.make_mesh((1, 1), ("data", "model"))  # CPU devices
+    with mesh:
+        assert moe_gmm.default_interpret() is True   # mesh devices decide
+    assert moe_gmm.default_interpret() is False      # context popped
+
+
+def test_default_block_rows_follows_lowering_context(monkeypatch):
+    from repro.kernels import moe_gmm, ops
+    monkeypatch.setattr(moe_gmm.jax, "default_backend", lambda: "tpu")
+    assert ops.default_block_rows() == 128
+    with jax.make_mesh((1, 1), ("data", "model")):
+        assert ops.default_block_rows() == 8         # CPU mesh: small tiles
 
 
 @pytest.mark.parametrize("B,S,H,hd", [(1, 16, 2, 8), (2, 24, 4, 16),
