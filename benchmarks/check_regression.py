@@ -1,0 +1,102 @@
+"""CI bench-regression guard over ``BENCH_moe_path.json``.
+
+Compares a freshly measured report against the committed baseline and fails
+(exit 1) when a DETERMINISTIC efficiency metric regresses. The gated
+metrics — redundant-FLOP ratios, packed-grid tile counts, executed decode
+rows — are pure functions of (bench config, RNG seed), so they are
+bit-identical across hosts; the µs timings are host noise and are never
+gated (CI archives them as artifacts instead).
+
+Gates:
+  * ``redundant_flop_ratio_pallas`` (forward and, when the sharded row ran,
+    forward_sharded) must not exceed the committed value;
+  * the packed grid must stay strictly below the pre-packing padded grid
+    (``grid_tiles_packed < grid_tiles_padded``) for forward AND decode;
+  * the packed grid and the decode plan's executed rows must not grow.
+
+Usage:  python benchmarks/check_regression.py \
+            --baseline BENCH_moe_path.json --fresh /tmp/bench_fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+EPS = 1e-6
+
+
+def check(baseline: dict, fresh: dict) -> list[str]:
+    errs = []
+    gates_run = 0
+
+    def gate_le(path: str, what: str):
+        nonlocal gates_run
+        sect, key = path.split(".")
+        b, f = baseline.get(sect, {}), fresh.get(sect, {})
+        if key not in f:
+            # a missing FRESH key means schema drift silently disarmed the
+            # gate — that is itself a failure, not a skip
+            errs.append(f"{what}: fresh report lacks gated key {path}")
+            return
+        if key not in b:
+            return            # metric newer than the committed baseline
+        gates_run += 1
+        if f[key] > b[key] + EPS:
+            errs.append(f"{what}: {path} regressed "
+                        f"{b[key]} -> {f[key]}")
+
+    for sect in ("forward", "decode"):
+        f = fresh.get(sect, {})
+        if "grid_tiles_packed" in f and \
+                not f["grid_tiles_packed"] < f["grid_tiles_padded"]:
+            errs.append(
+                f"{sect}: packed grid ({f['grid_tiles_packed']}) must stay "
+                f"below the padded grid ({f['grid_tiles_padded']})")
+
+    gate_le("forward.redundant_flop_ratio_pallas", "packed-plan FLOP ratio")
+    gate_le("forward.grid_tiles_packed", "packed-grid occupancy")
+    gate_le("forward.occupied_tiles", "packed-grid occupancy")
+    gate_le("decode.grid_tiles_packed", "decode plan grid")
+    gate_le("decode.rows_selected_per_steps", "decode executed rows")
+
+    b_sh, f_sh = baseline.get("forward_sharded", {}), \
+        fresh.get("forward_sharded", {})
+    if "skipped" not in b_sh and "skipped" not in f_sh:
+        if f_sh.get("redundant_flop_ratio_pallas", 0) > \
+                b_sh.get("redundant_flop_ratio_pallas", float("inf")) + EPS:
+            errs.append(
+                "forward_sharded.redundant_flop_ratio_pallas regressed "
+                f"{b_sh['redundant_flop_ratio_pallas']} -> "
+                f"{f_sh['redundant_flop_ratio_pallas']}")
+    if not errs and gates_run == 0:
+        errs.append("no gate ran — baseline/fresh schema mismatch?")
+    return errs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_moe_path.json",
+                    help="committed reference report")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly measured report to validate")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    errs = check(baseline, fresh)
+    if errs:
+        for e in errs:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        sys.exit(1)
+    print("bench-regression guard: OK "
+          f"(fwd ratio {fresh['forward']['redundant_flop_ratio_pallas']}, "
+          f"grid {fresh['forward']['grid_tiles_packed']}/"
+          f"{fresh['forward']['grid_tiles_padded']}; decode grid "
+          f"{fresh['decode']['grid_tiles_packed']}/"
+          f"{fresh['decode']['grid_tiles_padded']})")
+
+
+if __name__ == "__main__":
+    main()

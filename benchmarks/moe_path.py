@@ -15,9 +15,22 @@ Measures, on the SAME weights and routing:
             single-device hosts — `main()` forces host devices via XLA_FLAGS
             before jax imports, so the CLI always emits the row on CPU.
   decode    the GO-cache step with the dense fallback (expert_ffn_all: B*E
-            FFN rows per step) vs the selected-experts grouped GEMM
-            (kernels/ops.py:go_selected_ffn: only pairs the TopKUpdate
-            selected). Reports us/step and rows computed per step.
+            FFN rows per step) vs the selected-experts path
+            (kernels/ops.py:go_selected_ffn: the static-capacity decode
+            plan with the router's k as occupancy hint). Reports us/step
+            (averaged over the tick sequence, budget-fast and fallback
+            ticks at their real frequency) and the rows the budgeted plan
+            executes. Decode runs at its own serving-shaped width
+            (decode_d/decode_d_expert).
+
+Packed-plan occupancy rows: ``grid_tiles_padded`` is the PRE-packing static
+grid (one padded run per lane plus the planned drop lane),
+``grid_tiles_packed`` the packed plan's static bound (fused lane pairs for
+the forward; E x C_fast slots for decode), ``occupied_tiles`` the tiles that
+actually carried rows; ``planner_us`` isolates the jitted planner itself.
+The bench-regression guard (benchmarks/check_regression.py, run by CI)
+gates the deterministic rows — FLOP ratios, grid tiles, executed decode
+rows — against the committed copy of this file's output.
 
 Emits machine-readable ``BENCH_moe_path.json`` next to the cwd (or --out)
 so CI can track the numbers over time. On CPU the pallas kernels run in
@@ -58,9 +71,11 @@ def run(smoke: bool = True, out: str = "BENCH_moe_path.json") -> dict:
     from repro.kernels.ops import go_selected_ffn, plan_tile_dispatch
 
     if smoke:
-        T, d, E, k, g, de, bn, steps, B = 128, 64, 8, 2, 2, 64, 8, 8, 8
+        T, d, E, k, g, de, bn, steps, B = 128, 64, 8, 2, 2, 64, 8, 8, 16
+        d_dec, de_dec = 128, 128     # decode rows at a serving-shaped width
     else:
         T, d, E, k, g, de, bn, steps, B = 1024, 256, 16, 4, 2, 256, 128, 32, 32
+        d_dec, de_dec = d, de
 
     e_xla = MoEConfig(num_experts=E, top_k=k, d_expert=de, group_size=g,
                       capacity_factor=2.0, backend="xla")
@@ -76,7 +91,8 @@ def run(smoke: bool = True, out: str = "BENCH_moe_path.json") -> dict:
     us_pal = _timeit(lambda: f_pal(x).block_until_ready())
 
     # FFN-row accounting: the xla masked loop runs every group member over
-    # the WHOLE pooled group buffer; pallas computes each pair's tile once.
+    # the WHOLE pooled group buffer; pallas computes each pair's tile once
+    # (a fused pair's straddle tile runs one extra masked pass — counted).
     N = T * k
     G = E // g
     C_exp = max(1, math.ceil(T * k / E * e_xla.capacity_factor))
@@ -84,9 +100,23 @@ def run(smoke: bool = True, out: str = "BENCH_moe_path.json") -> dict:
     rows_xla = g * G * C_grp                     # g member passes x G*C_grp
     from repro.core.routing import token_choice
     r = token_choice(x, params["gate"], k)
-    plan = plan_tile_dispatch(
-        r.expert_idx.reshape(-1).astype(jnp.int32), E, bn)
-    rows_pal = int(((plan.counts + bn - 1) // bn * bn).sum())  # tile-padded
+    ef = r.expert_idx.reshape(-1).astype(jnp.int32)
+    # the SAME group-major fused plan group_forward's pallas branch builds
+    members = MOE._members_matrix(goe, G, g)
+    _, rank_of_expert, fuse = MOE.group_lane_map(members, g)
+    plan = plan_tile_dispatch(rank_of_expert[ef], E, bn, fuse=fuse)
+    tv = np.asarray(plan.tile_valid)
+    straddle = np.asarray(plan.tile_expert2) != np.asarray(plan.tile_expert)
+    rows_pal = int(bn * (tv.sum() + (tv & straddle).sum()))
+    # static grids: pre-packing worst case (one padded run per lane + the
+    # planned drop lane) vs the packed plan's fused bound
+    plan_unfused = plan_tile_dispatch(rank_of_expert[ef], E, bn)
+    grid_padded_fwd = plan_unfused.n_tiles
+    grid_packed_fwd = plan.n_tiles
+    # planner cost, isolated: the packed plan alone, jitted
+    plan_jit = jax.jit(lambda ef: plan_tile_dispatch(ef, E, bn, fuse=fuse))
+    us_plan_fwd = _timeit(
+        lambda: jax.block_until_ready(plan_jit(ef)))
 
     # --- sharded forward: EP shard_map, per-shard buffers vs per-shard plans
     n_dev = jax.device_count()
@@ -131,11 +161,19 @@ def run(smoke: bool = True, out: str = "BENCH_moe_path.json") -> dict:
                               f"(have {n_dev} devices, E={E})"}
 
     # --- GO-cache decode: dense all-experts vs selected-only grouped GEMM
-    cache = go_cache_init(B, E, k, d, jnp.float32)
-    gate = params["gate"]
-    dense_fn = lambda xt: MOE.expert_ffn_all(params, xt)
+    # (the static-capacity decode plan with the router's top_k as the
+    # occupancy hint — what blocks.py wires into the serving engine).
+    # Decode gets its own serving-shaped widths (d_dec/de_dec): at the tiny
+    # forward-smoke width the step is pure dispatch overhead and the row
+    # savings are invisible.
+    e_dec = dataclasses.replace(e_xla, d_expert=de_dec)
+    params_dec = MOE.moe_init(jax.random.PRNGKey(5), d_dec, e_dec,
+                              jnp.float32)
+    cache = go_cache_init(B, E, k, d_dec, jnp.float32)
+    gate = params_dec["gate"]
+    dense_fn = lambda xt: MOE.expert_ffn_all(params_dec, xt)
     sel_fn = lambda xt, sel, gg: go_selected_ffn(
-        xt, sel, gg, params["experts"], E, bn=bn)[0]
+        xt, sel, gg, params_dec["experts"], E, bn=bn, topk_hint=k)[0]
 
     step_dense = jax.jit(lambda c, xt, t: go_cache_step(
         c, xt, t, gate, dense_fn))
@@ -143,29 +181,67 @@ def run(smoke: bool = True, out: str = "BENCH_moe_path.json") -> dict:
         c, xt, t, gate, contrib_fn=sel_fn))
 
     # warm the cache so selection is sparse (empty cache selects everything)
-    xs = jax.random.normal(jax.random.PRNGKey(2), (steps + k, B, d)) * 0.3
+    xs = jax.random.normal(jax.random.PRNGKey(2), (steps + k, B, d_dec)) * 0.3
     for t in range(k):
         cache = step_dense(cache, xs[t], t).cache
 
-    sel_rows = 0
+    # read the budget off the plan go_selected_ffn ACTUALLY builds (the
+    # auto-resolved executor decides how bn rounds it)
+    g0 = jax.nn.softmax(
+        xs[k].astype(jnp.float32) @ gate.astype(jnp.float32), axis=-1)
+    sel0 = step_dense(cache, xs[k], k).selected
+    _, gplan = go_selected_ffn(xs[k], sel0, g0, params_dec["experts"], E,
+                               bn=bn, topk_hint=k)
+    C_fast = gplan.C_fast
+    sel_pairs = 0
+    sel_rows = 0                     # rows the budgeted plan executes
+    fallbacks = 0
     c_d, c_s = cache, cache
     for t in range(k, k + steps):
         res = step_dense(c_d, xs[t], t)
         c_d = res.cache
-        sel_rows += int(res.selected.sum())
-    us_dense = _timeit(
-        lambda: step_dense(cache, xs[k], k).y.block_until_ready())
+        n_sel = int(res.selected.sum())
+        over = int(np.asarray(res.selected).sum(0).max()) > C_fast
+        fallbacks += over
+        sel_pairs += n_sel
+        sel_rows += E * (B if over else C_fast)
     for t in range(k, k + steps):
         c_s = step_sel(c_s, xs[t], t).cache
-    us_sel = _timeit(
-        lambda: step_sel(cache, xs[k], k).y.block_until_ready())
     assert np.allclose(np.asarray(c_d.outputs), np.asarray(c_s.outputs),
                        atol=1e-5), "dense vs selected decode diverged"
+
+    # per-step time averaged over the WHOLE tick sequence, so budget-fast
+    # and fallback ticks weigh in at their real frequency
+    def _loop(stepfn):
+        def go():
+            c = cache
+            for t in range(k, k + steps):
+                c = stepfn(c, xs[t], t).cache
+            jax.block_until_ready(c.outputs)
+        return go
+    us_dense = _timeit(_loop(step_dense), iters=5) / steps
+    us_sel = _timeit(_loop(step_sel), iters=5) / steps
+
+    # decode planner alone: counts + the one top_k that recovers the packed
+    # gather (the persistent plan's only per-tick work), jitted
+    def _decode_plan(sel):
+        selT = sel.T
+        ar = jnp.arange(B, dtype=jnp.int32)
+        keys_ = jnp.where(selT, B - ar[None, :], -1 - ar[None, :])
+        return selT.sum(1), jax.lax.top_k(keys_, C_fast)[1]
+    dplan_jit = jax.jit(_decode_plan)
+    us_plan_dec = _timeit(lambda: jax.block_until_ready(dplan_jit(sel0)))
+
+    # old pre-packing decode grid: every (token, expert) pair planned as a
+    # real row, plus the per-lane padding and the planned drop lane
+    grid_padded_dec = math.ceil((B * E + (E + 1) * bn) / bn)
+    grid_packed_dec = gplan.n_tiles_fast
 
     report = {
         "host_backend": jax.default_backend(),
         "config": {"T": T, "d": d, "E": E, "k": k, "g": g, "d_expert": de,
-                   "bn": bn, "decode_batch": B, "decode_steps": steps},
+                   "bn": bn, "decode_batch": B, "decode_steps": steps,
+                   "decode_d": d_dec, "decode_d_expert": de_dec},
         "forward": {
             "us_xla_masked": round(us_xla, 1),
             "us_pallas": round(us_pal, 1),
@@ -174,6 +250,9 @@ def run(smoke: bool = True, out: str = "BENCH_moe_path.json") -> dict:
             "ffn_rows_pallas": rows_pal,
             "redundant_flop_ratio_xla": round(rows_xla / N, 3),
             "redundant_flop_ratio_pallas": round(rows_pal / N, 3),
+            "grid_tiles_padded": grid_padded_fwd,
+            "grid_tiles_packed": grid_packed_fwd,
+            "occupied_tiles": int(plan.occupied),
         },
         "forward_sharded": sharded,
         "decode": {
@@ -181,8 +260,17 @@ def run(smoke: bool = True, out: str = "BENCH_moe_path.json") -> dict:
             "us_step_selected": round(us_sel, 1),
             "rows_dense_per_steps": steps * B * E,
             "rows_selected_per_steps": sel_rows,
+            "selected_pairs_per_steps": sel_pairs,
             "row_ratio_dense_over_selected": round(
                 steps * B * E / max(1, sel_rows), 2),
+            "grid_tiles_padded": grid_padded_dec,
+            "grid_tiles_packed": grid_packed_dec,
+            "budget_rows_per_lane": C_fast,
+            "budget_fallback_steps": fallbacks,
+        },
+        "planner_us": {
+            "forward_plan": round(us_plan_fwd, 1),
+            "decode_plan": round(us_plan_dec, 1),
         },
     }
     if out:
@@ -194,7 +282,10 @@ def run(smoke: bool = True, out: str = "BENCH_moe_path.json") -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--out", default="BENCH_moe_path.json")
+    ap.add_argument("--out", default="BENCH_moe_path.fresh.json",
+                    help="output path; the default is a gitignored FRESH "
+                         "report — point it at BENCH_moe_path.json only to "
+                         "deliberately re-baseline the CI regression gate")
     ap.add_argument("--sharded-devices", type=int, default=4,
                     help="force this many host devices (XLA_FLAGS, set "
                          "before jax imports) so the sharded-forward row "
@@ -207,10 +298,13 @@ def main() -> None:
               f"{args.sharded_devices}").strip()
     rep = run(smoke=args.smoke, out=args.out)
     f, sh, dck = rep["forward"], rep["forward_sharded"], rep["decode"]
+    pl = rep["planner_us"]
     print(f"forward: xla {f['us_xla_masked']:.0f}us "
           f"(FLOP ratio {f['redundant_flop_ratio_xla']:.2f}x) vs "
           f"pallas {f['us_pallas']:.0f}us "
-          f"(ratio {f['redundant_flop_ratio_pallas']:.2f}x)")
+          f"(ratio {f['redundant_flop_ratio_pallas']:.2f}x, grid "
+          f"{f['grid_tiles_packed']}/{f['grid_tiles_padded']} tiles, "
+          f"{f['occupied_tiles']} occupied)")
     if "skipped" in sh:
         print(f"sharded: skipped — {sh['skipped']}")
     else:
@@ -221,7 +315,11 @@ def main() -> None:
     print(f"decode:  dense {dck['us_step_dense']:.0f}us/"
           f"{dck['rows_dense_per_steps']} rows vs selected "
           f"{dck['us_step_selected']:.0f}us/{dck['rows_selected_per_steps']} "
-          f"rows ({dck['row_ratio_dense_over_selected']:.1f}x fewer)")
+          f"rows ({dck['row_ratio_dense_over_selected']:.1f}x fewer, grid "
+          f"{dck['grid_tiles_packed']}/{dck['grid_tiles_padded']} tiles, "
+          f"{dck['budget_fallback_steps']} fallback ticks)")
+    print(f"planner: forward {pl['forward_plan']:.0f}us, "
+          f"decode {pl['decode_plan']:.0f}us")
     print(f"wrote {args.out}")
 
 

@@ -77,13 +77,28 @@ def main() -> None:
     rows.append((name, us, f"us_per_call={per_call:.0f}"))
 
     # MoE execution-path trajectory: xla-masked vs pallas, dense vs selected
-    # decode (writes BENCH_moe_path.json for CI tracking)
+    # decode. Writes a FRESH report (gitignored) — never the committed
+    # BENCH_moe_path.json baseline that check_regression.py gates CI against
     from benchmarks import moe_path
-    name, us, mp = _timed("moe_path", lambda: moe_path.run(smoke=True))
+    name, us, mp = _timed(
+        "moe_path",
+        lambda: moe_path.run(smoke=True, out="BENCH_moe_path.fresh.json"))
     rows.append((name, us,
                  f"fwd_flop_ratio_xla={mp['forward']['redundant_flop_ratio_xla']:.2f}"
                  f"/pallas={mp['forward']['redundant_flop_ratio_pallas']:.2f},"
                  f"decode_row_x={mp['decode']['row_ratio_dense_over_selected']:.1f}"))
+
+    # continuous-batching throughput on a Poisson trace (writes
+    # BENCH_serve_throughput.json — archived by CI, not gated: wall-clock)
+    from benchmarks import serve_throughput
+    name, us, st = _timed(
+        "serve_throughput",
+        lambda: serve_throughput.run(smoke=True, slot_counts=(1, 4),
+                                     out="BENCH_serve_throughput.json"))
+    best = max(st, key=lambda r: r["tok_per_s"])
+    rows.append((name, us,
+                 f"best_tok_per_s={best['tok_per_s']:.1f}@"
+                 f"{best['slots']}slots,p95_ms={best['p95_ms']:.0f}"))
 
     print("name,us_per_call,derived")
     for n, u, d in rows:

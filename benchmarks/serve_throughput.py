@@ -12,12 +12,17 @@ Compilation is excluded: each slot count warms up prefill + its pool-width
 decode step on a throwaway request before the timed run. Prompts share one
 length so prefill compiles once (the engine docstring covers bucketing).
 
+With --out the per-slot-count rows are also written as machine-readable
+JSON (``BENCH_serve_throughput.json``) for CI artifact tracking; wall-clock
+numbers are host-dependent, so CI archives them instead of gating on them.
+
   PYTHONPATH=src python -m benchmarks.serve_throughput --smoke
   PYTHONPATH=src python benchmarks/serve_throughput.py --smoke --slots 1,4,8
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -68,7 +73,8 @@ def run_trace(params, cfg, *, num_slots: int, max_tokens: int,
 
 def run(arch: str = "llama_moe_4_16", smoke: bool = True,
         slot_counts=(1, 4, 8), num_requests: int = 8, prompt_len: int = 16,
-        gen: int = 8, rate: float = 0.5, seed: int = 0) -> list[dict]:
+        gen: int = 8, rate: float = 0.5, seed: int = 0,
+        out: str = "") -> list[dict]:
     import jax
 
     from repro.configs.registry import get_config
@@ -85,6 +91,15 @@ def run(arch: str = "llama_moe_4_16", smoke: bool = True,
     for s in slot_counts:
         rows.append(run_trace(params, cfg, num_slots=s, max_tokens=max_tokens,
                               arrivals=arrivals, prompts=prompts, gens=gens))
+    if out:
+        with open(out, "w") as f:
+            json.dump({
+                "host_backend": jax.default_backend(),
+                "config": {"arch": arch, "smoke": smoke,
+                           "requests": num_requests, "prompt_len": prompt_len,
+                           "gen": gen, "rate": rate, "seed": seed},
+                "rows": rows,
+            }, f, indent=2)
     return rows
 
 
@@ -103,6 +118,8 @@ def main():
     ap.add_argument("--rate", type=float, default=0.5,
                     help="mean arrivals per engine tick")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="",
+                    help="also write the rows as JSON to this path")
     args = ap.parse_args()
 
     slot_counts = [int(s) for s in args.slots.split(",")]
@@ -112,7 +129,7 @@ def main():
 
     rows = run(args.arch, smoke=args.smoke, slot_counts=slot_counts,
                num_requests=n, prompt_len=p, gen=g, rate=args.rate,
-               seed=args.seed)
+               seed=args.seed, out=args.out)
     print(f"# serve_throughput arch={args.arch} smoke={args.smoke} "
           f"requests={n} prompt={p} gen<={g} rate={args.rate}")
     print("slots,tok_per_s,p50_ms,p95_ms,steps,wall_s,tokens")

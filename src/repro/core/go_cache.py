@@ -123,11 +123,14 @@ def go_cache_step(
     selected = upd.selected                                        # [B, E]
 
     if contrib_fn is not None:
+        # contract: contrib is ALREADY zero where unselected (the planner
+        # elides unselected pairs), so no second masking pass is needed
         contrib = contrib_fn(x_t, selected, g)                     # [B, E, d]
+        y = contrib.sum(axis=1)
     else:
         eo = expert_fn(x_t)                                        # [B, E, d]
         contrib = g[..., None] * eo.astype(jnp.float32)
-    y = jnp.where(selected[..., None], contrib, 0.0).sum(axis=1)
+        y = jnp.where(selected[..., None], contrib, 0.0).sum(axis=1)
 
     if retain_outputs:
         onehot = jax.nn.one_hot(upd.slot, k, dtype=bool)           # [B, E, k]

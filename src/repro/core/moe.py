@@ -35,6 +35,7 @@ workload tracer.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import NamedTuple
 
@@ -343,6 +344,36 @@ def _group_sorted_positions(grp: jax.Array, ef: jax.Array, E: int):
     return order, sg, pos
 
 
+@functools.lru_cache(maxsize=None)
+def _group_fuse_pairs(E: int, g: int) -> tuple:
+    """Pairwise lane-fusion map over the group-major lane ranks: members of
+    one C2 group pair up two at a time (an odd trailing member rides alone),
+    so each pair of under-occupied member runs shares its boundary tile —
+    the roadmap's dynamic lane fusion, static per deployment."""
+    fuse = [0] * E
+    nid = 0
+    for grp in range(E // g):
+        for j in range(0, g, 2):
+            fuse[grp * g + j] = nid
+            if j + 1 < g:
+                fuse[grp * g + j + 1] = nid
+            nid += 1
+    return tuple(fuse)
+
+
+def group_lane_map(members: jax.Array, group_size: int):
+    """ONE definition of the C1 group-major lane layout, shared by the
+    production path (`_group_forward_pallas`) and the benchmark's plan
+    accounting: lane rank r holds expert `lane_of_rank[r]`, and lanes fuse
+    pairwise within their group. Returns (lane_of_rank [E], rank_of_expert
+    [E], fuse tuple [E])."""
+    lane_of_rank = jnp.asarray(members, jnp.int32).reshape(-1)
+    E = lane_of_rank.shape[0]
+    rank_of_expert = jnp.zeros((E,), jnp.int32).at[lane_of_rank].set(
+        jnp.arange(E, dtype=jnp.int32))
+    return lane_of_rank, rank_of_expert, _group_fuse_pairs(E, group_size)
+
+
 def _group_forward_pallas(params: dict, x: jax.Array, e: MoEConfig,
                           group_of_expert: jax.Array, members: jax.Array,
                           C_grp: int) -> tuple:
@@ -352,8 +383,9 @@ def _group_forward_pallas(params: dict, x: jax.Array, e: MoEConfig,
     overflow the pooled group buffer; overflow pairs keep their rows but get a
     ZERO combine weight — numerically identical to a drop, while every
     surviving row streams through the grouped GEMM exactly once (no g x
-    member masking). Tiles are planned in group-major lane order so the
-    multiplexed lane sees its members' runs back to back.
+    member masking). Tiles are planned in group-major lane order with the
+    group's member lanes FUSED pairwise (`_group_fuse_pairs`), so the
+    multiplexed lane sees its members' runs back to back in shared tiles.
     """
     T = x.shape[0]
     E, k, g = e.num_experts, e.top_k, e.group_size
@@ -371,12 +403,10 @@ def _group_forward_pallas(params: dict, x: jax.Array, e: MoEConfig,
     wf = jnp.where(keep, wf, 0.0)
 
     # group-major lane ranks: lane r holds expert members.flatten()[r]
-    lane_of_rank = jnp.asarray(members, jnp.int32).reshape(-1)   # [E]
-    rank_of_expert = jnp.zeros((E,), jnp.int32).at[lane_of_rank].set(
-        jnp.arange(E, dtype=jnp.int32))
+    lane_of_rank, rank_of_expert, fuse = group_lane_map(members, g)
     y, _, plan = OPS.moe_ffn_fused(
         x, tok, rank_of_expert[ef], wf, params["experts"], E, T,
-        expert_of_lane=lane_of_rank, bn=_block_rows(e))
+        expert_of_lane=lane_of_rank, bn=_block_rows(e), fuse=fuse)
     y = y.astype(x.dtype) + _shared_out(params, x)
     aux = {
         "counts": jnp.bincount(ef, length=E),
@@ -396,14 +426,17 @@ def _members_matrix(group_of_expert: jax.Array, G: int, g: int) -> jax.Array:
 
 # ------------------------------------------------------------- expert choice
 
-def expert_choice_forward(params: dict, x: jax.Array, e: MoEConfig) -> tuple:
+def expert_choice_forward(params: dict, x: jax.Array, e: MoEConfig,
+                          valid_len=None) -> tuple:
     """Expert-choice prefill/train: each expert gathers its top-C tokens.
-    Returns (y, aux) where aux also carries what the GO cache needs."""
+    Returns (y, aux) where aux also carries what the GO cache needs.
+    `valid_len` masks right-padded (bucketed-prefill) positions out of the
+    routing, so pads never enter the GO cache."""
     if resolve_backend(e, (x, params)) == "pallas":
-        return _expert_choice_forward_pallas(params, x, e)
+        return _expert_choice_forward_pallas(params, x, e, valid_len)
     T = x.shape[0]
     cap = ec_capacity(T, e)
-    r = R.expert_choice(x, params["gate"], cap)
+    r = R.expert_choice(x, params["gate"], cap, valid_len=valid_len)
     x_disp = x[r.token_idx]                               # [E, C, d] (gather)
     y_disp = _expert_gemm(params["experts"], x_disp)      # [E, C, d]
     w = r.weights                                         # [E, C]
@@ -422,14 +455,14 @@ def expert_choice_forward(params: dict, x: jax.Array, e: MoEConfig) -> tuple:
 
 
 def _expert_choice_forward_pallas(params: dict, x: jax.Array,
-                                  e: MoEConfig) -> tuple:
+                                  e: MoEConfig, valid_len=None) -> tuple:
     """Expert-choice through the grouped GEMM: (expert, slot) pairs are
     already expert-contiguous, so the tile plan is the identity layout and
     every expert's top-C tokens stream through the lane in one run."""
     T, d = x.shape
     cap = ec_capacity(T, e)
     E = e.num_experts
-    r = R.expert_choice(x, params["gate"], cap)
+    r = R.expert_choice(x, params["gate"], cap, valid_len=valid_len)
     ef = jnp.repeat(jnp.arange(E, dtype=jnp.int32), cap)
     tok = r.token_idx.reshape(-1).astype(jnp.int32)
     wf = r.weights.reshape(-1)
@@ -448,7 +481,7 @@ def _expert_choice_forward_pallas(params: dict, x: jax.Array,
 
 
 def expert_choice_forward_batched(params: dict, h: jax.Array,
-                                  e: MoEConfig) -> tuple:
+                                  e: MoEConfig, valid_len=None) -> tuple:
     """Batched expert-choice on the pallas backend: routing stays PER
     SEQUENCE (the GO-cache / train==serve semantics), but the FFN pairs of
     the whole batch flatten into ONE tile plan so the grouped GEMM amortizes
@@ -457,7 +490,8 @@ def expert_choice_forward_batched(params: dict, h: jax.Array,
     B, S, d = h.shape
     cap = ec_capacity(S, e)
     E = e.num_experts
-    r = jax.vmap(lambda xb: R.expert_choice(xb, params["gate"], cap))(h)
+    r = jax.vmap(lambda xb: R.expert_choice(
+        xb, params["gate"], cap, valid_len=valid_len))(h)
     ef = jnp.tile(jnp.repeat(jnp.arange(E, dtype=jnp.int32), cap), B)
     tok = (r.token_idx.astype(jnp.int32)
            + (jnp.arange(B, dtype=jnp.int32) * S)[:, None, None]).reshape(-1)
@@ -562,7 +596,8 @@ def moe_forward_ep(params: dict, h: jax.Array, e: MoEConfig) -> tuple:
                 # evicted pairs keep their rows, lose their combine weight
                 y, _, plan = OPS.moe_ffn_fused(
                     xb, tok, ef, wf, {"wg": wg, "wi": wi, "wo": wo}, E, S,
-                    bn=bn, expert_offset=lo, num_local=E_loc, capacity=C)
+                    bn=bn, expert_offset=lo, num_local=E_loc, capacity=C,
+                    replicate_under_mesh=False)   # shard_map body: local data
                 cnt = plan.counts[:E_loc]
                 dropped = (local & (plan.pos >= C)).sum()
             else:

@@ -36,11 +36,22 @@ def token_choice(x: jax.Array, w_gate: jax.Array, k: int) -> TokenChoiceRouting:
     return TokenChoiceRouting(top_i.astype(jnp.int32), w, s)
 
 
-def expert_choice(x: jax.Array, w_gate: jax.Array, capacity: int) -> ExpertChoiceRouting:
+def expert_choice(x: jax.Array, w_gate: jax.Array, capacity: int,
+                  valid_len=None) -> ExpertChoiceRouting:
     """Zhou et al. expert-choice: G = softmax over experts; each expert takes
-    its top-`capacity` tokens by affinity."""
+    its top-`capacity` tokens by affinity.
+
+    `valid_len` (traced int32 scalar) masks the affinities of positions
+    >= valid_len to zero BEFORE the top-C selection — the bucketed-prefill
+    hook: right-padded prompt slots can never win an expert slot (softmax
+    affinities of real tokens are > 0, so any real token outranks a pad),
+    and a pad chosen only because fewer than C real tokens exist carries a
+    zero combine weight."""
     s = gate_scores(x, w_gate)
     g = jax.nn.softmax(s, axis=-1)                      # [T, E] over experts
+    if valid_len is not None:
+        T = x.shape[0]
+        g = g * (jnp.arange(T) < valid_len)[:, None]
     top_g, top_t = jax.lax.top_k(g.T, capacity)         # [E, C]
     return ExpertChoiceRouting(top_t.astype(jnp.int32), top_g, g)
 

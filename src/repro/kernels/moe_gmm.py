@@ -52,12 +52,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _mesh_lib():
+    from jax._src import mesh as mesh_lib
+    return mesh_lib
+
+
 def lowering_platform() -> str:
     """The platform the next pallas_call actually lowers for: the active
     mesh's devices when inside a `with mesh:` context (shard_map / sharded
     jit tracing happens there), the host default backend otherwise."""
-    from jax._src import mesh as mesh_lib
-    m = mesh_lib.thread_resources.env.physical_mesh
+    m = _mesh_lib().thread_resources.env.physical_mesh
     if m is not None and not m.empty:
         return m.devices.flat[0].platform
     return jax.default_backend()
@@ -66,6 +70,34 @@ def lowering_platform() -> str:
 def default_interpret() -> bool:
     """Interpret unless we can actually lower via Mosaic (i.e. for TPU)."""
     return lowering_platform() != "tpu"
+
+
+def replicate_for_gspmd(*arrays):
+    """Pin arrays to a fully-replicated layout when tracing under a GSPMD
+    mesh (`with mesh:` + jit).
+
+    The grouped-GEMM pipeline — the planner's small scatter/gather chains
+    feeding a pallas_call — has no SPMD partitioning rule; letting the
+    partitioner guess per-op shardings for it is slow (collective chatter on
+    [N]-sized index vectors) and, for the interpret-mode lowering, produces
+    WRONG results on CPU host meshes (sharding-dependent gather/scatter
+    miscompiles — caught by tests/test_moe_mesh.py). Pinning the branch's
+    inputs replicated keeps every downstream op replicated, which matches
+    the unsharded numerics exactly.
+
+    Callers that run inside a shard_map body (manual mesh axes — the EP
+    path, where data is already shard-local) must NOT call this: a sharding
+    constraint has no meaning there (and jax rejects it under check_rep).
+    The distinction is static at every call site, so it is the caller's
+    switch (`moe_ffn_fused(replicate_under_mesh=...)`) rather than a
+    runtime axis-env probe."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    m = _mesh_lib().thread_resources.env.physical_mesh
+    if m is not None and not m.empty:
+        rep = NamedSharding(m, PartitionSpec())
+        arrays = tuple(jax.lax.with_sharding_constraint(a, rep)
+                       for a in arrays)
+    return arrays if len(arrays) > 1 else arrays[0]
 
 
 def _pad_to(a: jax.Array, axis: int, size: int) -> jax.Array:
@@ -128,6 +160,79 @@ def _gmm_scaled_kernel(te_ref, tv_ref, x_ref, w_ref, s_ref, o_ref, acc_ref,
     @pl.when(k == nk - 1)
     def _done():
         o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+# Fused-pair kernel variants: a STRADDLE tile of a fused lane pair carries
+# rows of two experts (primary rows first — the planner guarantees at most
+# one boundary per tile). `sel_ref` is the per-row primary mask; the primary
+# dot masks rows to the primary run, and a second dot over the complement
+# streams the secondary expert's weights (w2_ref, indexed by tile_expert2).
+# Non-straddle tiles (te2 == te) skip the second dot and the row masking, so
+# they cost exactly what the unfused kernels cost.
+
+def _gmm_scaled_fused_kernel(te_ref, te2_ref, tv_ref, x_ref, w_ref, w2_ref,
+                             sel_ref, s_ref, o_ref, acc_ref, *, nk: int):
+    i, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    straddle = te2_ref[i] != te_ref[i]
+
+    @pl.when(tv_ref[i] != 0)
+    def _mac():
+        x = x_ref[...]
+        sel = sel_ref[...].astype(x.dtype)
+        x1 = jnp.where(straddle, x * sel, x)
+        acc_ref[...] += jnp.dot(x1, w_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when((tv_ref[i] != 0) & straddle)
+    def _mac2():
+        x2 = x_ref[...] * (1.0 - sel_ref[...]).astype(x_ref.dtype)
+        acc_ref[...] += jnp.dot(x2, w2_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+def _gmm_swiglu_fused_kernel(te_ref, te2_ref, tv_ref, x_ref, wg_ref, wi_ref,
+                             wg2_ref, wi2_ref, sel_ref, o_ref, accg_ref,
+                             acci_ref, *, nk: int):
+    i, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        acci_ref[...] = jnp.zeros_like(acci_ref)
+
+    straddle = te2_ref[i] != te_ref[i]
+
+    @pl.when(tv_ref[i] != 0)
+    def _mac():
+        x = x_ref[...]
+        sel = sel_ref[...].astype(x.dtype)
+        x1 = jnp.where(straddle, x * sel, x)
+        accg_ref[...] += jnp.dot(x1, wg_ref[0],
+                                 preferred_element_type=jnp.float32)
+        acci_ref[...] += jnp.dot(x1, wi_ref[0],
+                                 preferred_element_type=jnp.float32)
+
+    @pl.when((tv_ref[i] != 0) & straddle)
+    def _mac2():
+        x2 = x_ref[...] * (1.0 - sel_ref[...]).astype(x_ref.dtype)
+        accg_ref[...] += jnp.dot(x2, wg2_ref[0],
+                                 preferred_element_type=jnp.float32)
+        acci_ref[...] += jnp.dot(x2, wi2_ref[0],
+                                 preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        h = jax.nn.silu(accg_ref[...]) * acci_ref[...]
+        o_ref[...] = h.astype(o_ref.dtype)
 
 
 def _gmm_swiglu_kernel(te_ref, tv_ref, x_ref, wg_ref, wi_ref, o_ref,
@@ -197,6 +302,8 @@ def _gmm(x, w, tile_expert, tile_valid, *, bn, bk, bf, interpret, out_dtype):
 
 def gmm_scaled(x: jax.Array, w: jax.Array, tile_expert: jax.Array,
                tile_valid: jax.Array | None, row_scale: jax.Array, *,
+               tile_expert2: jax.Array | None = None,
+               row_sel: jax.Array | None = None,
                bn: int = 128, bk: int = 512, bf: int = 128,
                interpret: bool | None = None,
                out_dtype=jnp.float32) -> jax.Array:
@@ -204,11 +311,20 @@ def gmm_scaled(x: jax.Array, w: jax.Array, tile_expert: jax.Array,
 
     The per-row combine weight is applied against the fp32 accumulator in the
     kernel's epilogue, so the caller can scatter-add the rows straight into the
-    token buffer — no separate gather + fp32 multiply pass. row_scale [N, 1]."""
+    token buffer — no separate gather + fp32 multiply pass. row_scale [N, 1].
+
+    With `tile_expert2`/`row_sel` (fused lane pairs), a straddle tile's rows
+    split between two experts: rows where row_sel==1 hit tile_expert's
+    weights, the complement hits tile_expert2's."""
     if interpret is None:
         interpret = default_interpret()
-    return _gmm_scaled(x, w, tile_expert, tile_valid, row_scale, bn=bn, bk=bk,
-                       bf=bf, interpret=interpret, out_dtype=out_dtype)
+    if tile_expert2 is None:
+        return _gmm_scaled(x, w, tile_expert, tile_valid, row_scale, bn=bn,
+                           bk=bk, bf=bf, interpret=interpret,
+                           out_dtype=out_dtype)
+    return _gmm_scaled_fused(x, w, tile_expert, tile_expert2, tile_valid,
+                             row_scale, row_sel, bn=bn, bk=bk, bf=bf,
+                             interpret=interpret, out_dtype=out_dtype)
 
 
 @functools.partial(jax.jit,
@@ -247,14 +363,103 @@ def _gmm_scaled(x, w, tile_expert, tile_valid, row_scale, *, bn, bk, bf,
 
 def gmm_swiglu(x: jax.Array, wg: jax.Array, wi: jax.Array,
                tile_expert: jax.Array, tile_valid: jax.Array | None = None, *,
+               tile_expert2: jax.Array | None = None,
+               row_sel: jax.Array | None = None,
                bn: int = 128, bk: int = 512, bf: int = 128,
                interpret: bool | None = None) -> jax.Array:
     """Fused per-expert SwiGLU up-projection: silu(x@wg[e]) * (x@wi[e]).
-    One x-tile staging feeds BOTH weight streams (multiplexed operand reuse)."""
+    One x-tile staging feeds BOTH weight streams (multiplexed operand reuse).
+    `tile_expert2`/`row_sel` resolve fused-pair straddle tiles per row."""
     if interpret is None:
         interpret = default_interpret()
-    return _gmm_swiglu(x, wg, wi, tile_expert, tile_valid, bn=bn, bk=bk,
-                       bf=bf, interpret=interpret)
+    if tile_expert2 is None:
+        return _gmm_swiglu(x, wg, wi, tile_expert, tile_valid, bn=bn, bk=bk,
+                           bf=bf, interpret=interpret)
+    return _gmm_swiglu_fused(x, wg, wi, tile_expert, tile_expert2, tile_valid,
+                             row_sel, bn=bn, bk=bk, bf=bf, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "bf", "interpret", "out_dtype"))
+def _gmm_scaled_fused(x, w, tile_expert, tile_expert2, tile_valid, row_scale,
+                      row_sel, *, bn, bk, bf, interpret, out_dtype):
+    N, K = x.shape
+    E, _, F = w.shape
+    bk, bf = min(bk, K), min(bf, F)
+    ni, te, tv = _row_tiles(N, bn, tile_expert, tile_valid)
+    te2 = tile_expert2.astype(jnp.int32)
+    Kp, Fp = -(-K // bk) * bk, -(-F // bf) * bf
+    xp = _pad_to(_pad_to(x, 0, ni * bn), 1, Kp)
+    wp = _pad_to(_pad_to(w, 1, Kp), 2, Fp)
+    sp = _pad_to(row_scale.astype(jnp.float32), 0, ni * bn)
+    selp = _pad_to(row_sel.astype(jnp.float32), 0, ni * bn)
+    nk, nf = Kp // bk, Fp // bf
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(ni, nf, nk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, k, te, te2, tv: (i, k)),
+            pl.BlockSpec((1, bk, bf),
+                         lambda i, j, k, te, te2, tv: (te[i], k, j)),
+            pl.BlockSpec((1, bk, bf),
+                         lambda i, j, k, te, te2, tv: (te2[i], k, j)),
+            pl.BlockSpec((bn, 1), lambda i, j, k, te, te2, tv: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j, k, te, te2, tv: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bf), lambda i, j, k, te, te2, tv: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bn, bf), jnp.float32)],
+    )
+    y = pl.pallas_call(
+        functools.partial(_gmm_scaled_fused_kernel, nk=nk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((ni * bn, Fp), out_dtype),
+        interpret=interpret,
+    )(te, te2, tv, xp, wp, wp, selp, sp)
+    return y[:N, :F]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "bf", "interpret"))
+def _gmm_swiglu_fused(x, wg, wi, tile_expert, tile_expert2, tile_valid,
+                      row_sel, *, bn, bk, bf, interpret):
+    N, K = x.shape
+    E, _, F = wg.shape
+    bk, bf = min(bk, K), min(bf, F)
+    ni, te, tv = _row_tiles(N, bn, tile_expert, tile_valid)
+    te2 = tile_expert2.astype(jnp.int32)
+    Kp, Fp = -(-K // bk) * bk, -(-F // bf) * bf
+    xp = _pad_to(_pad_to(x, 0, ni * bn), 1, Kp)
+    wgp = _pad_to(_pad_to(wg, 1, Kp), 2, Fp)
+    wip = _pad_to(_pad_to(wi, 1, Kp), 2, Fp)
+    selp = _pad_to(row_sel.astype(jnp.float32), 0, ni * bn)
+    nk, nf = Kp // bk, Fp // bf
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(ni, nf, nk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, k, te, te2, tv: (i, k)),
+            pl.BlockSpec((1, bk, bf),
+                         lambda i, j, k, te, te2, tv: (te[i], k, j)),
+            pl.BlockSpec((1, bk, bf),
+                         lambda i, j, k, te, te2, tv: (te[i], k, j)),
+            pl.BlockSpec((1, bk, bf),
+                         lambda i, j, k, te, te2, tv: (te2[i], k, j)),
+            pl.BlockSpec((1, bk, bf),
+                         lambda i, j, k, te, te2, tv: (te2[i], k, j)),
+            pl.BlockSpec((bn, 1), lambda i, j, k, te, te2, tv: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bf), lambda i, j, k, te, te2, tv: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bn, bf), jnp.float32),
+                        pltpu.VMEM((bn, bf), jnp.float32)],
+    )
+    y = pl.pallas_call(
+        functools.partial(_gmm_swiglu_fused_kernel, nk=nk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((ni * bn, Fp), x.dtype),
+        interpret=interpret,
+    )(te, te2, tv, xp, wgp, wip, wgp, wip, selp)
+    return y[:N, :F]
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "bk", "bf", "interpret"))

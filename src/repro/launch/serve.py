@@ -78,20 +78,27 @@ def generate(params, cfg, prompts: jax.Array, gen_tokens: int,
 def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
                      num_slots: int, max_tokens: int = 0,
                      extras: dict | None = None,
-                     arrival_steps: list | None = None, mesh=None) -> dict:
+                     arrival_steps: list | None = None, mesh=None,
+                     temperature: float = 0.0, top_p: float = 1.0,
+                     prompt_buckets: bool = False) -> dict:
     """Run a list of prompts through the continuous-batching engine.
     With `mesh`, slot rows are sharded across the data-parallel replicas and
     every decode tick runs under the mesh (launch/sharding.py rules).
+    `temperature` > 0 samples with top-p nucleus filtering (per-request
+    seeds derive from the request id); `prompt_buckets` pads prompts to
+    power-of-two buckets so prefill compiles once per bucket.
     Returns per-request token arrays plus engine stats."""
     max_tokens = max_tokens or (
         max(len(p) for p in prompts) + gen_tokens + 1)
     eng = ServingEngine(params, cfg, num_slots=num_slots,
-                        max_tokens=max_tokens, extras=extras, mesh=mesh)
+                        max_tokens=max_tokens, extras=extras, mesh=mesh,
+                        prompt_buckets=prompt_buckets)
     ids = []
     for i, p in enumerate(prompts):
         step = arrival_steps[i] if arrival_steps else 0
         ids.append(eng.submit(p, gen_tokens, extras=extras,
-                              arrival_step=step))
+                              arrival_step=step, temperature=temperature,
+                              top_p=top_p))
     t0 = time.time()
     fin = eng.run()
     dt = time.time() - t0
@@ -121,6 +128,13 @@ def main():
     ap.add_argument("--backend", choices=["auto", "xla", "pallas"],
                     default=None,
                     help="MoE execution backend override (default: config)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, the default)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (with --temperature > 0)")
+    ap.add_argument("--buckets", action="store_true",
+                    help="pad prompts to power-of-two buckets (one prefill "
+                         "compile per bucket instead of per length)")
     ap.add_argument("--mesh-model", type=int, default=0,
                     help="run the engine under a smoke mesh with this "
                          "model-axis size (slot rows shard over the rest; "
@@ -165,7 +179,9 @@ def main():
     arrivals = [2 * i for i in range(args.requests)]
     res = serve_continuous(params, cfg, prompts, args.gen,
                            num_slots=args.slots, extras=extras or None,
-                           arrival_steps=arrivals, mesh=mesh)
+                           arrival_steps=arrivals, mesh=mesh,
+                           temperature=args.temperature, top_p=args.top_p,
+                           prompt_buckets=args.buckets)
     s = res["stats"]
     print(f"served {s['finished']} requests over {s['steps']} ticks on "
           f"{args.slots} slots in {res['decode_s']:.2f}s "

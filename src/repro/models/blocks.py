@@ -39,8 +39,15 @@ def attn_block_init(key, cfg, *, use_moe: bool = False, cross: bool = False,
 
 
 def _ffn_apply(params: dict, x: jax.Array, cfg, group_of_expert,
-               group_members=None) -> tuple:
-    """Post-attention FFN sublayer (dense MLP or MoE). x [B,S,d]."""
+               group_members=None, valid_len=None) -> tuple:
+    """Post-attention FFN sublayer (dense MLP or MoE). x [B,S,d].
+
+    `valid_len` (traced int32 scalar, bucketed prefill) masks right-padded
+    positions out of the EXPERT-CHOICE routing — a pad can never win an
+    expert slot, so the GO cache built from this pass holds only real
+    tokens. Token-choice paths ignore it: routing is per token and pads'
+    outputs land only on pad rows (their pairs also rank AFTER every real
+    pair in the capacity order, so real drops are unchanged)."""
     h = rmsnorm(params["ln2"], x, cfg.norm_eps)
     aux = None
     if "moe" in params:
@@ -58,11 +65,11 @@ def _ffn_apply(params: dict, x: jax.Array, cfg, group_of_expert,
         if cfg.moe.routing == "expert_choice":
             if backend == "pallas":
                 y, aux = MOE.expert_choice_forward_batched(
-                    params["moe"], h, cfg.moe)
+                    params["moe"], h, cfg.moe, valid_len=valid_len)
             else:
                 y, aux = jax.vmap(
                     lambda xb: MOE.expert_choice_forward(
-                        params["moe"], xb, cfg.moe))(h)
+                        params["moe"], xb, cfg.moe, valid_len=valid_len))(h)
         elif MOE.ep_available(cfg.moe):
             y, aux = MOE.moe_forward_ep(params["moe"], h, cfg.moe)
         elif backend == "pallas":
@@ -88,7 +95,7 @@ def _ffn_apply(params: dict, x: jax.Array, cfg, group_of_expert,
 def attn_block(params: dict, x: jax.Array, *, cfg, positions, window=0,
                causal: bool = True, group_of_expert=None, group_members=None,
                kv_source=None, use_rope: bool = True,
-               return_kv: bool = False) -> tuple:
+               return_kv: bool = False, valid_len=None) -> tuple:
     """Full-sequence attention block. Returns (x, aux) with MoE aux or None;
     with return_kv also the post-RoPE (k, v) for KV-cache prefill."""
     h = rmsnorm(params["ln1"], x, cfg.norm_eps)
@@ -98,7 +105,8 @@ def attn_block(params: dict, x: jax.Array, *, cfg, positions, window=0,
     if return_kv:
         a, k, v = a
     x = x + a
-    x, aux = _ffn_apply(params, x, cfg, group_of_expert, group_members)
+    x, aux = _ffn_apply(params, x, cfg, group_of_expert, group_members,
+                        valid_len)
     if return_kv:
         return x, aux, k, v
     return x, aux
@@ -129,7 +137,7 @@ def attn_block_decode(params: dict, x_t: jax.Array, cache_k, cache_v, t, *,
                     go_cache, h2f, t, moe_p["gate"],
                     contrib_fn=lambda xt, sel, g: OPS.go_selected_ffn(
                         xt, sel, g, moe_p["experts"], e.num_experts,
-                        bn=MOE._block_rows(e))[0])
+                        bn=MOE._block_rows(e), topk_hint=e.top_k)[0])
             else:
                 res = go_cache_step(
                     go_cache, h2f, t, moe_p["gate"],

@@ -686,9 +686,18 @@ def _dec_zamba(params, x, state, cfg):
 # -------------------------------------------------------------------- prefill
 
 def prefill(params: dict, tokens: jax.Array, cfg, extras: dict | None = None,
-            max_len: int = 0):
+            max_len: int = 0, valid_len=None):
     """Run the full-sequence forward while FILLING the decode state (KV caches,
     GO caches, SSM states). Returns (state, last_token_logits [B, V]).
+
+    `valid_len` (traced int32 scalar) supports BUCKETED prefill: `tokens` is
+    right-padded to a bucket length, but only the first valid_len positions
+    are real. One compile then serves every prompt length in the bucket.
+    Causal attention never lets a real position see a pad; expert-choice
+    routing masks pads out of the top-C selection (so the GO cache holds
+    only real tokens); the returned logits come from position valid_len - 1
+    and the decode position starts there — pad KV rows are overwritten by
+    decode steps before they can ever be attended.
 
     Implemented for the attention families (the serving examples); recurrent
     families can prefill by stepping serve_step (their state is O(1))."""
@@ -697,12 +706,17 @@ def prefill(params: dict, tokens: jax.Array, cfg, extras: dict | None = None,
     max_len = max_len or (2 * S)
     state = init_decode_state(cfg, Bsz, max_len, extras)
     if cfg.block != "attn" or cfg.encoder_layers > 0:
+        assert valid_len is None, \
+            "bucketed prefill is attention-family only (recurrent/enc-dec " \
+            "archs prefill step-by-step — there is no per-length compile to " \
+            "amortize)"
         # step-by-step prefill (exactly equivalent for recurrent/enc-dec archs)
         logits = None
         for i in range(S):
             logits, state = serve_step(params, state, tokens[:, i], cfg)
         return state, logits
 
+    vl = None if valid_len is None else jnp.asarray(valid_len, jnp.int32)
     positions = jnp.arange(S, dtype=jnp.int32)
     windows = jnp.asarray(layer_windows(cfg))
     goe = expert_groups(cfg)
@@ -714,7 +728,7 @@ def prefill(params: dict, tokens: jax.Array, cfg, extras: dict | None = None,
         lp, w = xs
         out = B.attn_block(lp, x, cfg=cfg, positions=positions, window=w,
                            group_of_expert=goe, group_members=gm,
-                           return_kv=True)
+                           return_kv=True, valid_len=vl)
         x, aux, k, v = out
         if has_go:
             # build this layer's GO cache from the expert-choice aux
@@ -726,6 +740,7 @@ def prefill(params: dict, tokens: jax.Array, cfg, extras: dict | None = None,
         return x, (k, v)
 
     if cfg.cross_attn_every > 0:
+        assert valid_len is None, "bucketed prefill: cross-attn archs TODO"
         state, x = _prefill_vlm(params, x, positions, state, cfg)
     else:
         x, ys = jax.lax.scan(body, x, (params["layers"], windows))
@@ -739,8 +754,12 @@ def prefill(params: dict, tokens: jax.Array, cfg, extras: dict | None = None,
             state["go"] = ys[2]
 
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = logits_from_hidden(params, x[:, -1, :], cfg)
-    state["t"] = jnp.asarray(S, jnp.int32)
+    if vl is None:
+        logits = logits_from_hidden(params, x[:, -1, :], cfg)
+        state["t"] = jnp.asarray(S, jnp.int32)
+    else:
+        logits = logits_from_hidden(params, jnp.take(x, vl - 1, axis=1), cfg)
+        state["t"] = vl
     return state, logits
 
 

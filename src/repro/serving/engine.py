@@ -16,17 +16,23 @@ fixed slot array with an active mask:
 Greedy decoding is the default and is bit-identical per request to the
 static-batch `repro.launch.serve.generate` path (tests/test_serving.py):
 the same compiled kernels run in both, and every batched op is row-wise
-independent.
+independent. `submit(..., temperature=, top_p=, seed=)` switches a request
+to temperature/top-p sampling — per-slot PRNG keys live in the pool, the
+sampled step variant compiles only once a sampling request is active, and
+greedy rows inside a sampling pool stay bit-identical.
 
-Compile surface: the decode step compiles ONCE per (pool width, max_tokens);
-prefill compiles once per distinct prompt length (pad prompts to buckets in
-front of the engine if that matters for your trace).
+Compile surface: the decode step compiles ONCE per (pool width, max_tokens)
+and sampling mode; prefill compiles once per distinct prompt length — or
+once per power-of-two BUCKET with `prompt_buckets=True`, which right-pads
+prompts and threads the true length through prefill as a traced valid_len
+(expert-choice routing masks the pads, so the GO cache stays clean).
 
 The MoE execution backend rides in through cfg.moe.backend: with "pallas"
-the batched decode tick runs the selected-experts grouped GEMM (~B*k rows
-per MoE layer instead of B*E dense FFNs — kernels/ops.py:go_selected_ffn)
-and prefill flattens the whole pool's FFN pairs into one tile plan. Streams
-stay bit-identical to the static generate() path because both run the same
+the batched decode tick runs the selected-experts static-capacity decode
+plan (~2*B*k/E rows per expert with an exact overflow fallback, instead of
+B*E dense FFNs — kernels/ops.py:go_selected_ffn) and prefill flattens the
+whole pool's FFN pairs into one packed tile plan. Streams stay
+bit-identical to the static generate() path because both run the same
 kernels (pinned with backend="pallas" in tests/test_serving.py).
 
 With a `mesh`, the pool state is sharded by `launch/sharding.py` (slot rows
@@ -62,8 +68,43 @@ def _decode_step(params, state, tokens, active, cfg):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
 
 
+def _sample_tokens(logits, keys, temps, top_ps):
+    """Per-row temperature/top-p sampling over [B, V] logits; rows with
+    temperature <= 0 take the greedy argmax (bit-identical to the greedy
+    engine). top_p keeps the smallest prefix of the probability-sorted
+    vocabulary whose mass reaches top_p — as top_p -> 0 only the argmax
+    survives, so sampling degenerates to greedy exactly."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def row(lg, key, temp, tp):
+        lg = (lg / jnp.maximum(temp, 1e-6)).astype(jnp.float32)
+        srt, idx = jax.lax.top_k(lg, lg.shape[-1])
+        probs = jax.nn.softmax(srt)
+        keep = (jnp.cumsum(probs) - probs) < tp     # first token always kept
+        filt = jnp.where(keep, srt, -jnp.inf)
+        return idx[jax.random.categorical(key, filt)].astype(jnp.int32)
+
+    sampled = jax.vmap(row)(logits, keys, temps, top_ps)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+@partial(jax.jit, static_argnames="cfg")
+def _decode_step_sampled(params, state, tokens, active, temps, top_ps, keys,
+                         cfg):
+    """Sampling variant of the decode tick: compiled only once at least one
+    active request asks for temperature > 0, so pure-greedy serving never
+    pays the per-row vocab sort."""
+    logits, state = serve_step(params, state, tokens, cfg)
+    state["t"] = jnp.where(active, state["t"], 0)
+    split = jax.vmap(jax.random.split)(keys)        # [B, 2, 2]
+    tok = _sample_tokens(logits, split[:, 0], temps, top_ps)
+    return tok, state, split[:, 1]
+
+
 # prefill compiles once per (prompt length, max_len) and is shared across
-# engine instances — module-level so benchmark sweeps don't recompile it
+# engine instances — module-level so benchmark sweeps don't recompile it.
+# With prompt bucketing the padded length is a power-of-two bucket and the
+# true length rides in as a TRACED valid_len, so one compile per bucket.
 _jit_prefill = jax.jit(prefill, static_argnames=("cfg", "max_len"))
 
 
@@ -72,7 +113,8 @@ class ServingEngine:
 
     def __init__(self, params, cfg, *, num_slots: int = 8,
                  max_tokens: int = 256, max_queue: int = 0,
-                 extras: dict | None = None, mesh=None):
+                 extras: dict | None = None, mesh=None,
+                 prompt_buckets: bool = False):
         self.params = params
         self.cfg = cfg
         self.mesh = mesh
@@ -81,14 +123,28 @@ class ServingEngine:
         self.step_count = 0
         self.finished: dict[int, Request] = {}
         self._ids = itertools.count()
+        # pad prompts up to power-of-two buckets so prefill compiles once
+        # per BUCKET instead of once per distinct prompt length (attention
+        # families only — recurrent archs prefill step-by-step). Dense archs
+        # reproduce the unbucketed streams exactly; MoE capacity constants
+        # derive from the BUCKET length (ec_capacity(bucket) >
+        # ec_capacity(true len)), so MoE streams are deterministic per
+        # bucket but may differ from the unbucketed engine's.
+        self.prompt_buckets = bool(
+            prompt_buckets and cfg.block == "attn"
+            and cfg.encoder_layers == 0 and cfg.cross_attn_every == 0)
+        self.prefill_lengths: set[int] = set()
 
     # ------------------------------------------------------------- submission
 
     def submit(self, prompt, max_new_tokens: int, *, eos_id: int | None = None,
                extras: dict | None = None, arrival_step: int = 0,
-               request_id: int | None = None) -> int:
+               request_id: int | None = None, temperature: float = 0.0,
+               top_p: float = 1.0, seed: int | None = None) -> int:
         """Queue a request. `arrival_step` > current step defers arrival to
-        that engine tick (trace replay). Returns the request id."""
+        that engine tick (trace replay). `temperature` > 0 switches the
+        request's rows to temperature/top-p sampling (greedy rows in the
+        same pool stay bit-identical). Returns the request id."""
         rid = request_id if request_id is not None else next(self._ids)
         req = Request(
             request_id=rid,
@@ -97,9 +153,14 @@ class ServingEngine:
             eos_id=eos_id,
             extras=extras,
             arrival_step=arrival_step,
+            temperature=float(temperature),
+            top_p=float(top_p),
+            seed=seed,
         )
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if not (0.0 < req.top_p <= 1.0):
+            raise ValueError("top_p must be in (0, 1]")
         req.arrival_time = time.monotonic()
         self.scheduler.submit(req, now_step=self.step_count)
         return rid
@@ -156,25 +217,65 @@ class ServingEngine:
     def _run_decode_step(self):
         """One jitted decode tick, inside the mesh context when sharded (the
         jit cache keys on the ambient mesh, so the sharded and unsharded
-        variants coexist in one process)."""
+        variants coexist in one process). Pure-greedy pools run the lean
+        greedy step; a pool with any sampling request runs the sampling
+        variant (greedy rows inside it stay bit-identical)."""
+        sampling = bool((self.pool.temps > 0).any())
         args = (self.params, self.pool.state, jnp.asarray(self.pool.pending),
-                jnp.asarray(self.pool.active_mask()), self.cfg)
+                jnp.asarray(self.pool.active_mask()))
+        if sampling:
+            args += (jnp.asarray(self.pool.temps),
+                     jnp.asarray(self.pool.top_ps),
+                     jnp.asarray(self.pool.keys))
+        fn = _decode_step_sampled if sampling else _decode_step
         if self.mesh is None:
-            return _decode_step(*args)
-        with self.mesh:
-            return _decode_step(*args)
+            out = fn(*args, self.cfg)
+        else:
+            with self.mesh:
+                out = fn(*args, self.cfg)
+        if sampling:
+            toks, state, new_keys = out
+            self.pool.keys = np.array(new_keys, dtype=np.uint32)
+            return toks, state
+        return out
+
+    def _bucketed(self, prompt: np.ndarray):
+        """Pad the prompt up to its power-of-two bucket (capped at the
+        pool's max_tokens); returns (padded [S_b], valid_len or None)."""
+        n = int(prompt.shape[0])
+        b = 8
+        while b < n:
+            b *= 2
+        b = min(b, self.pool.max_tokens)
+        if b <= n:
+            return prompt, None
+        return np.pad(prompt, (0, b - n)), n
 
     def _admit(self, slot: int, req: Request, done: list[Request]) -> None:
         """Prefill a request into `slot` mid-flight: fills that row's KV and
         GO cache entries and emits the request's first token (from the
-        prefill logits — exactly what static generate() emits first)."""
+        prefill logits — exactly what static generate() emits first; sampled
+        from them when the request asks for temperature > 0)."""
+        prompt, valid_len = (self._bucketed(req.prompt) if self.prompt_buckets
+                             else (req.prompt, None))
+        self.prefill_lengths.add(int(prompt.shape[0]))
         slot_state, logits = _jit_prefill(
-            self.params, jnp.asarray(req.prompt, jnp.int32)[None, :],
-            self.cfg, req.extras or {}, self.pool.max_tokens)
-        first = int(jnp.argmax(logits, axis=-1)[0])
+            self.params, jnp.asarray(prompt, jnp.int32)[None, :],
+            self.cfg, req.extras or {}, self.pool.max_tokens,
+            None if valid_len is None else jnp.asarray(valid_len, jnp.int32))
+        key_next = None
+        if req.temperature > 0:
+            seed = req.seed if req.seed is not None else req.request_id
+            k_use, key_next = jax.random.split(jax.random.PRNGKey(seed))
+            first = int(_sample_tokens(
+                logits, k_use[None],
+                jnp.full((1,), req.temperature, jnp.float32),
+                jnp.full((1,), req.top_p, jnp.float32))[0])
+        else:
+            first = int(jnp.argmax(logits, axis=-1)[0])
         req.admit_step = self.step_count
         req.tokens.append(first)
-        self.pool.admit(slot, req, slot_state, first)
+        self.pool.admit(slot, req, slot_state, first, key=key_next)
         if self.pool.remaining[slot] <= 0 or \
                 (req.eos_id is not None and first == req.eos_id):
             self._finish(slot, done)
@@ -201,4 +302,5 @@ class ServingEngine:
             "moe_backend": (resolve_backend(self.cfg.moe)
                             if self.cfg.moe is not None else None),
             "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
+            "prefill_lengths": sorted(self.prefill_lengths),
         }

@@ -64,6 +64,10 @@ class SlotPool:
         self.pending = np.zeros(num_slots, np.int32)    # next input token
         self.remaining = np.zeros(num_slots, np.int64)  # tokens still owed
         self.admitted_total = 0
+        # per-slot sampling state (temperature <= 0 -> greedy row)
+        self.temps = np.zeros(num_slots, np.float32)
+        self.top_ps = np.ones(num_slots, np.float32)
+        self.keys = np.zeros((num_slots, 2), np.uint32)  # PRNG key per slot
 
     def _pin(self, state: dict) -> dict:
         """Reshard `state` onto the canonical pool layout (no-op without a
@@ -89,15 +93,20 @@ class SlotPool:
     # -------------------------------------------------------------- lifecycle
 
     def admit(self, slot: int, req: Request, slot_state: dict,
-              first_token: int) -> None:
+              first_token: int, key=None) -> None:
         """Install a prefilled request into a free row: write its KV + GO
-        cache entries and position in place, arm its first decode input."""
+        cache entries and position in place, arm its first decode input.
+        `key` is the slot's sampling PRNG state (already advanced past the
+        first token) for temperature > 0 requests."""
         assert self.owner[slot] is None, f"slot {slot} is occupied"
         self.state = self._pin(_write_slot(self.state, slot, slot_state))
         self.owner[slot] = req
         self.pending[slot] = first_token
         self.remaining[slot] = req.max_new_tokens - 1   # first token emitted
         self.admitted_total += 1
+        self.temps[slot] = req.temperature
+        self.top_ps[slot] = req.top_p
+        self.keys[slot] = 0 if key is None else np.asarray(key, np.uint32)
         req.slot = slot
 
     def retire(self, slot: int) -> Request:
@@ -109,4 +118,7 @@ class SlotPool:
         self.owner[slot] = None
         self.pending[slot] = 0
         self.remaining[slot] = 0
+        self.temps[slot] = 0.0
+        self.top_ps[slot] = 1.0
+        self.keys[slot] = 0
         return req

@@ -35,6 +35,10 @@ class Request:
     eos_id: int | None = None
     extras: dict | None = None       # per-request cross-attn memory (vlm/audio)
     arrival_step: int = 0            # engine step at which the request arrives
+    # --- sampling (temperature <= 0 -> greedy, the default) ---
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: int | None = None          # None -> derived from request_id
 
     # --- filled in by the engine ---
     arrival_time: float = 0.0        # wall-clock when it joined the queue

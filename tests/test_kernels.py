@@ -152,8 +152,9 @@ def test_gmm_tile_valid_skips_compute():
 @pytest.mark.parametrize("lo,E_loc", [(0, 4), (4, 4), (2, 2), (6, 2)])
 def test_tile_plan_local_window(lo, E_loc):
     """plan_tile_dispatch with expert_offset/num_local: local pairs tile up
-    against the LOCAL lane index, every non-local pair rides the skipped drop
-    lane — the per-shard EP plan."""
+    against the LOCAL lane index; every non-local pair is ELIDED — it takes
+    no buffer row (dest == the n_pad sentinel) and no tile, so the packed
+    buffer scales with the shard's local traffic — the per-shard EP plan."""
     from repro.kernels.ops import plan_tile_dispatch
     E, bn = 8, 8
     key = jax.random.PRNGKey(lo * 10 + E_loc)
@@ -166,19 +167,24 @@ def test_tile_plan_local_window(lo, E_loc):
     local = (ef_np >= lo) & (ef_np < lo + E_loc)
     assert te.max() < E_loc                    # indexes the LOCAL bank only
     for r in range(100):
-        tile = dest[r] // bn
         if local[r]:
+            tile = dest[r] // bn
             assert tv[tile] and te[tile] == ef_np[r] - lo
         else:
-            assert not tv[tile]                # drop lane never computes
-    # counts: planned lanes = local experts + the drop lane
+            assert dest[r] == plan.n_pad       # elided: no row, no tile
+    # local rows are unique; elided pairs all share the sentinel
+    assert len(np.unique(dest[local])) == int(local.sum())
+    # counts: planned lanes = local experts, then the drop-lane tally
     cnt = np.asarray(plan.counts)
     assert cnt.shape == (E_loc + 1,)
     for j in range(E_loc):
         assert cnt[j] == int((ef_np == lo + j).sum())
     assert cnt[E_loc] == int((~local).sum())
-    # row_valid marks exactly the COMPUTED occupied slots
+    # row_valid marks exactly the COMPUTED occupied slots, and the occupied
+    # tile count tracks the per-lane padded runs (nothing planned for drops)
     assert int(np.asarray(plan.row_valid).sum()) == int(local.sum())
+    padded = (cnt[:E_loc] + bn - 1) // bn * bn
+    assert int(np.asarray(plan.occupied)) == int(padded.sum() // bn)
 
 
 def test_moe_ffn_fused_local_window_psums_to_global():

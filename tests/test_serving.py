@@ -171,3 +171,121 @@ def test_engine_rejects_oversized_request():
     eng = ServingEngine(params, cfg, num_slots=1, max_tokens=16)
     with pytest.raises(ValueError):
         eng.submit(np.zeros(12, np.int32), 8)
+
+
+# ------------------------------------------------- temperature/top-p sampling
+
+def test_sampling_top_p_epsilon_equals_greedy():
+    """top_p -> 0 keeps only the argmax in the nucleus, so a sampling
+    request must emit the EXACT greedy stream — pinning the top-p filter
+    end to end through the sampled decode step and the sampled first
+    token."""
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(4)
+    p = rng.integers(0, cfg.vocab_size, size=10, dtype=np.int32)
+    ref = _static_tokens(params, cfg, p, 6)
+
+    eng = ServingEngine(params, cfg, num_slots=1, max_tokens=MAX_TOKENS)
+    rid = eng.submit(p, 6, temperature=1.0, top_p=1e-9, seed=123)
+    fin = eng.run()
+    assert fin[rid].tokens == ref
+
+
+def test_sampling_deterministic_and_mixed_pool():
+    """Sampled requests are reproducible given a seed, and a greedy request
+    sharing the pool with a sampled one still emits its exact greedy
+    stream (row-wise independence of the sampled step)."""
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(5)
+    p0, p1 = (rng.integers(0, cfg.vocab_size, size=10, dtype=np.int32)
+              for _ in range(2))
+    ref_greedy = _static_tokens(params, cfg, p0, 6)
+
+    def run_once():
+        eng = ServingEngine(params, cfg, num_slots=2, max_tokens=MAX_TOKENS)
+        r_g = eng.submit(p0, 6)                                   # greedy
+        r_s = eng.submit(p1, 6, temperature=0.8, top_p=0.9, seed=7)
+        fin = eng.run()
+        return fin[r_g].tokens, fin[r_s].tokens
+
+    g1, s1 = run_once()
+    g2, s2 = run_once()
+    assert g1 == g2 == ref_greedy
+    assert s1 == s2                        # same seed -> same stream
+    assert all(0 <= t < cfg.vocab_size for t in s1)
+
+
+def test_sampling_rejects_bad_top_p():
+    cfg, params = _setup("llama_moe_4_16")
+    eng = ServingEngine(params, cfg, num_slots=1, max_tokens=MAX_TOKENS)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(4, np.int32), 2, temperature=1.0, top_p=0.0)
+
+
+# ------------------------------------------------- prompt-length bucketing
+
+def test_bucketed_prefill_matches_unpadded_dense():
+    """Dense arch (causal attention + rowwise MLP): a right-padded prefill
+    with valid_len must reproduce the unpadded prefill — same last-token
+    logits, same KV rows for the real positions, decode position at the
+    true length."""
+    from repro.models.model import prefill
+    cfg, params = _setup("starcoder2-3b")
+    rng = np.random.default_rng(6)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, size=11,
+                                      dtype=np.int32))[None, :]
+    padded = jnp.pad(prompt, ((0, 0), (0, 5)))            # 11 -> 16 bucket
+    st_ref, lg_ref = prefill(params, prompt, cfg, max_len=MAX_TOKENS)
+    st_b, lg_b = prefill(params, padded, cfg, max_len=MAX_TOKENS,
+                         valid_len=jnp.asarray(11, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_b), np.asarray(lg_ref),
+                               rtol=1e-4, atol=1e-5)
+    assert int(st_b["t"]) == 11
+    np.testing.assert_allclose(
+        np.asarray(st_b["k"][:, :, :11], np.float32),
+        np.asarray(st_ref["k"][:, :, :11], np.float32), rtol=1e-4, atol=1e-5)
+
+
+def test_bucketed_prefill_keeps_pads_out_of_go_cache():
+    """Expert-choice MoE: with valid_len the routing mask must keep padded
+    positions out of the GO cache — every cached token id is a real
+    position (or an empty -1 slot)."""
+    from repro.models.model import prefill
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(7)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, size=9,
+                                      dtype=np.int32))[None, :]
+    padded = jnp.pad(prompt, ((0, 0), (0, 7)))            # 9 -> 16 bucket
+    st, _ = prefill(params, padded, cfg, max_len=MAX_TOKENS,
+                    valid_len=jnp.asarray(9, jnp.int32))
+    tok_ids = np.asarray(st["go"].token_ids)              # [L, B, E, k]
+    scores = np.asarray(st["go"].scores)
+    real = tok_ids[tok_ids >= 0]
+    assert real.size and (real < 9).all(), \
+        f"padded positions leaked into the GO cache: {np.unique(real)}"
+    # pad slots that exist only because C > valid_len carry zero weight
+    assert (scores[(tok_ids >= 9)] <= 0).all()
+
+
+def test_engine_bucketing_caps_prefill_compiles_and_streams():
+    """Engine-level bucketing: mixed prompt lengths collapse onto
+    power-of-two buckets (bounded prefill compile count) and, on a dense
+    arch, every stream still equals the unbucketed engine's."""
+    cfg, params = _setup("starcoder2-3b")
+    rng = np.random.default_rng(8)
+    lens = [5, 6, 7, 9, 12, 13]
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in lens]
+
+    def run(buckets):
+        eng = ServingEngine(params, cfg, num_slots=2, max_tokens=MAX_TOKENS,
+                            prompt_buckets=buckets)
+        ids = [eng.submit(p, 5) for p in prompts]
+        fin = eng.run()
+        return [fin[i].tokens for i in ids], eng
+
+    ref, eng_ref = run(False)
+    got, eng_b = run(True)
+    assert got == ref
+    assert eng_b.stats()["prefill_lengths"] == [8, 16]    # 6 lengths -> 2
+    assert len(eng_ref.stats()["prefill_lengths"]) == len(set(lens))

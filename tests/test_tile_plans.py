@@ -1,0 +1,246 @@
+"""Packed-plan parity and invariants.
+
+The packed planner (drop-lane elision + pairwise lane fusion + counting-sort
+ranks) must keep the EXACT (token, expert) pair sets — and the exact drop
+sets — of the pre-packing planner and of the xla capacity buffers, on every
+routing path. Unsharded coverage lives here; the 2/4-device-mesh parity of
+the same plans (EP shard_map windows, grouped C1 under GSPMD, GO decode,
+sharded engine) is pinned by tests/test_moe_mesh.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import given, settings, st
+from repro.configs.base import MoEConfig
+from repro.core import moe as MOE
+from repro.kernels import ops as OPS
+
+
+def _rank_ref(lane, L):
+    """Numpy oracle: stable rank within lane + counts."""
+    lane = np.asarray(lane)
+    pos = np.zeros(len(lane), np.int32)
+    counts = np.zeros(L, np.int64)
+    for i, l in enumerate(lane):
+        if l < L:
+            pos[i] = counts[l]
+            counts[l] += 1
+    return pos, counts
+
+
+@pytest.mark.parametrize("N,L", [(40, 8), (200, 8), (9001, 8)])
+def test_lane_rank_counting_and_argsort_agree(N, L):
+    """Both ranking realizations (one-hot counting sort for decode-sized
+    inputs, argsort for large N — the switch is N*(L+1) vs 2^16) must
+    produce the SAME stable order as the numpy oracle, so capacity parity
+    cannot depend on which one a path hits."""
+    lane = jax.random.randint(jax.random.PRNGKey(N), (N,), 0, L + 1,
+                              dtype=jnp.int32)     # includes drop sentinel L
+    pos, counts = OPS._lane_rank(lane, L)
+    ref_pos, ref_counts = _rank_ref(lane, L)
+    planned = np.asarray(lane) < L
+    np.testing.assert_array_equal(np.asarray(pos)[planned], ref_pos[planned])
+    np.testing.assert_array_equal(np.asarray(counts), ref_counts)
+
+
+def _fused_plan_invariants(ef, E, bn, fuse):
+    plan = OPS.plan_tile_dispatch(ef, E, bn, fuse=fuse)
+    ef_np = np.asarray(ef)
+    N = len(ef_np)
+    dest = np.asarray(plan.dest)
+    te, te2 = np.asarray(plan.tile_expert), np.asarray(plan.tile_expert2)
+    tv = np.asarray(plan.tile_valid)
+    sel = np.asarray(plan.row_sel)[:, 0]
+    rp = np.asarray(plan.row_pair)
+    # every pair gets a unique packed row; row_pair inverts dest
+    assert len(np.unique(dest)) == N and dest.max() < plan.n_pad
+    np.testing.assert_array_equal(rp[dest], np.arange(N))
+    # each row's lane is the tile's primary (row_sel=1) or secondary lane
+    for r in range(N):
+        t = dest[r] // bn
+        assert tv[t]
+        lane = te[t] if sel[dest[r]] == 1.0 else te2[t]
+        assert lane == ef_np[r], (r, t, te[t], te2[t], sel[dest[r]])
+    # a tile never carries more than two lanes, and only fused pairs do
+    fuse_np = np.asarray(fuse)
+    for t in np.nonzero(tv)[0]:
+        assert fuse_np[te[t]] == fuse_np[te2[t]]
+    # rank within lane is layout-independent (capacity-eviction order)
+    ref_pos, ref_counts = _rank_ref(ef_np, E)
+    np.testing.assert_array_equal(np.asarray(plan.pos), ref_pos)
+    np.testing.assert_array_equal(np.asarray(plan.counts), ref_counts)
+    # the fused static grid undercuts the unfused one
+    unfused = OPS.plan_tile_dispatch(ef, E, bn)
+    assert plan.n_tiles < unfused.n_tiles
+    assert int(plan.occupied) <= int(unfused.occupied)
+    return plan
+
+
+@pytest.mark.parametrize("case", ["uniform", "skewed", "one_lane_empty",
+                                  "pair_fits_one_tile"])
+def test_fused_plan_invariants(case):
+    E, bn = 8, 8
+    fuse = tuple(i // 2 for i in range(E))
+    if case == "uniform":
+        ef = jax.random.randint(jax.random.PRNGKey(0), (96,), 0, E)
+    elif case == "skewed":
+        ef = jnp.asarray(np.concatenate([np.full(50, 2), np.full(3, 3),
+                                         np.full(5, 6), np.full(2, 7)]))
+    elif case == "one_lane_empty":
+        ef = jnp.asarray(np.repeat([0, 2, 4, 6], 7))   # odd lanes empty
+    else:                                              # both runs < one tile
+        ef = jnp.asarray(np.array([0, 0, 1, 1, 1, 5, 4]))
+    plan = _fused_plan_invariants(ef.astype(jnp.int32), E, bn, fuse)
+    if case == "pair_fits_one_tile":
+        # lanes 0+1 (5 rows) share ONE tile; 4+5 share one; => 2 occupied
+        assert int(plan.occupied) == 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([4, 8, 16]))
+def test_fused_plan_property(seed, bn):
+    E = 8
+    rng = np.random.default_rng(seed)
+    N = int(rng.integers(1, 120))
+    ef = jnp.asarray(rng.integers(0, E, size=N), jnp.int32)
+    fuse = tuple(i // 2 for i in range(E))
+    _fused_plan_invariants(ef, E, bn, fuse)
+
+
+def test_fused_ffn_matches_unfused_exactly():
+    """Lane fusion is a LAYOUT change only: masked straddle-tile dots add
+    exact zeros, so fused and unfused moe_ffn_fused agree bit-for-bit on
+    the per-row outputs."""
+    E, T, d, de, k, bn = 8, 24, 16, 24, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    bank = {
+        "wg": jax.random.normal(ks[0], (E, d, de)) * 0.1,
+        "wi": jax.random.normal(ks[1], (E, d, de)) * 0.1,
+        "wo": jax.random.normal(ks[2], (E, de, d)) * 0.1,
+    }
+    x = jax.random.normal(ks[3], (T, d)) * 0.3
+    ef = jax.random.randint(ks[4], (T * k,), 0, E).astype(jnp.int32)
+    wf = jnp.abs(jax.random.normal(ks[4], (T * k,)))
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    y0, rows0, plan0 = OPS.moe_ffn_fused(x, tok, ef, wf, bank, E, T, bn=bn)
+    y1, rows1, plan1 = OPS.moe_ffn_fused(x, tok, ef, wf, bank, E, T, bn=bn,
+                                         fuse=tuple(i // 2 for i in range(E)))
+    np.testing.assert_array_equal(np.asarray(OPS.gather_rows(rows0, plan0)),
+                                  np.asarray(OPS.gather_rows(rows1, plan1)))
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_capacity_drop_set_matches_xla_buffer():
+    """The packed plan's `pos < C` kept-set equals the xla dispatch buffer's
+    eviction set pair for pair (ONE capacity rule, two realizations)."""
+    E, T, k, C = 8, 32, 2, 3
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (T, 16)) * 0.3
+    ef = jax.random.randint(key, (T * k,), 0, E).astype(jnp.int32)
+    wf = jnp.ones((T * k,))
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    xla_plan = MOE._plan_dispatch(x, ef, wf, tok, E, C)
+    kept_xla = np.asarray(xla_plan.dest) != E * C
+    packed = OPS.plan_tile_dispatch(ef, E, 8)
+    kept_packed = np.asarray(packed.pos) < C
+    np.testing.assert_array_equal(kept_packed, kept_xla)
+
+
+@pytest.mark.parametrize("executor", ["xla", "pallas"])
+def test_go_decode_budget_fast_equals_full(executor):
+    """The budgeted decode plan (lax.cond fast path) must equal the full
+    B-row plan exactly, on BOTH executors, including a tick that overflows
+    the budget (the fallback branch)."""
+    B, E, d, de, bn = 8, 8, 16, 24, 4
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    bank = {
+        "wg": jax.random.normal(ks[0], (E, d, de)) * 0.1,
+        "wi": jax.random.normal(ks[1], (E, d, de)) * 0.1,
+        "wo": jax.random.normal(ks[2], (E, de, d)) * 0.1,
+    }
+    x = jax.random.normal(ks[3], (B, d)) * 0.3
+    g = jax.nn.softmax(jax.random.normal(ks[4], (B, E)), axis=-1)
+    sparse = np.zeros((B, E), bool)
+    sparse[np.arange(B), np.arange(B) % E] = True       # within budget
+    overflow = np.zeros((B, E), bool)
+    overflow[:, 0] = True                               # one hot expert: B rows
+    overflow[0, 1] = True
+    for sel in (sparse, overflow):
+        sel = jnp.asarray(sel)
+        full, pf = OPS.go_selected_ffn(x, sel, g, bank, E, bn=bn,
+                                       executor=executor)
+        fast, pb = OPS.go_selected_ffn(x, sel, g, bank, E, bn=bn,
+                                       topk_hint=1, executor=executor)
+        assert pb.C_fast < pb.C_full
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(full),
+                                   rtol=1e-6, atol=1e-7)
+    # the engineered overflow really took the fallback branch
+    _, pb = OPS.go_selected_ffn(x, jnp.asarray(overflow), g, bank, E, bn=bn,
+                                topk_hint=1, executor=executor)
+    assert bool(pb.fallback)
+    _, pb = OPS.go_selected_ffn(x, jnp.asarray(sparse), g, bank, E, bn=bn,
+                                topk_hint=1, executor=executor)
+    assert not bool(pb.fallback)
+
+
+def test_go_decode_executors_agree():
+    """The per-lane einsum executor (interpret hosts) and the pallas tile
+    executor run the SAME static-capacity plan — outputs agree."""
+    B, E, d, de, bn = 5, 4, 16, 24, 4
+    ks = jax.random.split(jax.random.PRNGKey(13), 5)
+    bank = {
+        "wg": jax.random.normal(ks[0], (E, d, de)) * 0.1,
+        "wi": jax.random.normal(ks[1], (E, d, de)) * 0.1,
+        "wo": jax.random.normal(ks[2], (E, de, d)) * 0.1,
+    }
+    x = jax.random.normal(ks[3], (B, d)) * 0.3
+    g = jax.nn.softmax(jax.random.normal(ks[4], (B, E)), axis=-1)
+    sel = jax.random.bernoulli(ks[4], 0.4, (B, E))
+    a, _ = OPS.go_selected_ffn(x, sel, g, bank, E, bn=bn, executor="xla")
+    b, _ = OPS.go_selected_ffn(x, sel, g, bank, E, bn=bn, executor="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_plan_cache_reuses_concrete_plans():
+    """Eager planning over the same concrete routing output is served from
+    the host-side PlanCache; traced planning bypasses it."""
+    OPS._PLAN_CACHE.clear()
+    ef = jnp.asarray(np.array([0, 1, 1, 3, 2, 0], np.int32))
+    p1 = OPS.plan_tile_dispatch(ef, 4, 4)
+    s0 = OPS.plan_cache_stats()
+    p2 = OPS.plan_tile_dispatch(ef, 4, 4)
+    s1 = OPS.plan_cache_stats()
+    assert s1["hits"] == s0["hits"] + 1
+    assert p2 is p1                          # the SAME finished plan object
+    # a different bn is a different plan
+    OPS.plan_tile_dispatch(ef, 4, 8)
+    assert OPS.plan_cache_stats()["misses"] > s1["misses"] - 1
+    # traced calls never touch the cache
+    before = OPS.plan_cache_stats()
+    jax.jit(lambda e: OPS.plan_tile_dispatch(e, 4, 4).dest)(ef)
+    after = OPS.plan_cache_stats()
+    assert after["hits"] == before["hits"]
+
+
+def test_group_forward_fused_drop_parity_all_pool_factors():
+    """C1 pooled-capacity drops with the FUSED group plan: same drop set
+    and outputs as the xla realization across pool pressures."""
+    e = MoEConfig(num_experts=8, top_k=2, d_expert=32, capacity_factor=1.25,
+                  group_size=2)
+    ep = dataclasses.replace(e, backend="pallas", gmm_block_rows=8)
+    from repro.core.grouping import default_groups, group_of_expert_from_groups
+    p = MOE.moe_init(jax.random.PRNGKey(0), 64, e, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (24, 64)) * 0.3
+    goe = jnp.asarray(group_of_expert_from_groups(default_groups(e)))
+    for pool in (0.4, 0.7, 2.0):
+        y_x, a_x = MOE.group_forward(p, x, e, goe, pool_factor=pool)
+        y_p, a_p = MOE.group_forward(p, x, ep, goe, pool_factor=pool)
+        assert int(a_x["dropped"]) == int(a_p["dropped"])
+        np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p),
+                                   rtol=1e-4, atol=1e-5)
