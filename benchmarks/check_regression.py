@@ -1,21 +1,28 @@
-"""CI bench-regression guard over ``BENCH_moe_path.json``.
+"""CI bench-regression guard over ``BENCH_moe_path.json`` (and, with
+--serve-*, the serving report ``BENCH_serve_throughput.json``).
 
 Compares a freshly measured report against the committed baseline and fails
 (exit 1) when a DETERMINISTIC efficiency metric regresses. The gated
 metrics — redundant-FLOP ratios, packed-grid tile counts, executed decode
-rows — are pure functions of (bench config, RNG seed), so they are
-bit-identical across hosts; the µs timings are host noise and are never
-gated (CI archives them as artifacts instead).
+rows, paged-pool occupancy — are pure functions of (bench config, RNG
+seed), so they are bit-identical across hosts; the µs/wall timings are host
+noise and are never gated (CI archives them as artifacts instead).
 
 Gates:
   * ``redundant_flop_ratio_pallas`` (forward and, when the sharded row ran,
     forward_sharded) must not exceed the committed value;
   * the packed grid must stay strictly below the pre-packing padded grid
     (``grid_tiles_packed < grid_tiles_padded``) for forward AND decode;
-  * the packed grid and the decode plan's executed rows must not grow.
+  * the packed grid and the decode plan's executed rows must not grow;
+  * serving (``paged_vs_dense``, deterministic: tick-based trace,
+    length-based retirement): at the same simulated HBM token budget the
+    paged pool must sustain STRICTLY more concurrent streams than the
+    dense pool, and at least as many as the committed baseline.
 
 Usage:  python benchmarks/check_regression.py \
-            --baseline BENCH_moe_path.json --fresh /tmp/bench_fresh.json
+            --baseline BENCH_moe_path.json --fresh /tmp/bench_fresh.json \
+            [--serve-baseline BENCH_serve_throughput.json \
+             --serve-fresh /tmp/bench_serve_fresh.json]
 """
 from __future__ import annotations
 
@@ -74,18 +81,65 @@ def check(baseline: dict, fresh: dict) -> list[str]:
     return errs
 
 
+def check_serve(baseline: dict, fresh: dict) -> list[str]:
+    """Gate the deterministic paged-occupancy rows of the serving report."""
+    errs = []
+    f_pd = fresh.get("paged_vs_dense")
+    if f_pd is None:
+        return ["serve: fresh report lacks the paged_vs_dense section "
+                "(schema drift silently disarmed the occupancy gate)"]
+    d, p = f_pd["dense"]["max_concurrent"], f_pd["paged"]["max_concurrent"]
+    if not p > d:
+        errs.append(
+            f"serve: paged pool must sustain STRICTLY more concurrent "
+            f"streams than dense at the same HBM budget "
+            f"({f_pd['budget_tokens']} tokens): paged {p} vs dense {d}")
+    b_pd = baseline.get("paged_vs_dense")
+    if b_pd is not None:
+        if p < b_pd["paged"]["max_concurrent"]:
+            errs.append(
+                f"serve: paged max_concurrent regressed "
+                f"{b_pd['paged']['max_concurrent']} -> {p}")
+        if d != b_pd["dense"]["max_concurrent"]:
+            errs.append(
+                f"serve: dense max_concurrent drifted "
+                f"{b_pd['dense']['max_concurrent']} -> {d} (the trace is "
+                "deterministic — config/seed changed without a baseline "
+                "refresh?)")
+    return errs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_moe_path.json",
                     help="committed reference report")
     ap.add_argument("--fresh", required=True,
                     help="freshly measured report to validate")
+    ap.add_argument("--serve-baseline", default="",
+                    help="committed BENCH_serve_throughput.json")
+    ap.add_argument("--serve-fresh", default="",
+                    help="freshly measured serving report (enables the "
+                         "paged-occupancy gates)")
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
     errs = check(baseline, fresh)
+    serve_msg = ""
+    if args.serve_fresh:
+        with open(args.serve_fresh) as f:
+            serve_fresh = json.load(f)
+        serve_baseline = {}
+        if args.serve_baseline:
+            with open(args.serve_baseline) as f:
+                serve_baseline = json.load(f)
+        errs += check_serve(serve_baseline, serve_fresh)
+        if not errs:
+            pd = serve_fresh["paged_vs_dense"]
+            serve_msg = (f"; serve occupancy paged "
+                         f"{pd['paged']['max_concurrent']} > dense "
+                         f"{pd['dense']['max_concurrent']} streams")
     if errs:
         for e in errs:
             print(f"REGRESSION: {e}", file=sys.stderr)
@@ -95,7 +149,7 @@ def main() -> None:
           f"grid {fresh['forward']['grid_tiles_packed']}/"
           f"{fresh['forward']['grid_tiles_padded']}; decode grid "
           f"{fresh['decode']['grid_tiles_packed']}/"
-          f"{fresh['decode']['grid_tiles_padded']})")
+          f"{fresh['decode']['grid_tiles_padded']}" + serve_msg + ")")
 
 
 if __name__ == "__main__":

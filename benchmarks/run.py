@@ -88,17 +88,21 @@ def main() -> None:
                  f"/pallas={mp['forward']['redundant_flop_ratio_pallas']:.2f},"
                  f"decode_row_x={mp['decode']['row_ratio_dense_over_selected']:.1f}"))
 
-    # continuous-batching throughput on a Poisson trace (writes
-    # BENCH_serve_throughput.json — archived by CI, not gated: wall-clock)
+    # continuous-batching throughput on a Poisson trace (refreshes the
+    # committed BENCH_serve_throughput.json; the deterministic
+    # paged-occupancy rows are CI-gated, the wall-clock rows archived only)
     from benchmarks import serve_throughput
     name, us, st = _timed(
         "serve_throughput",
         lambda: serve_throughput.run(smoke=True, slot_counts=(1, 4),
                                      out="BENCH_serve_throughput.json"))
-    best = max(st, key=lambda r: r["tok_per_s"])
+    best = max(st["rows"], key=lambda r: r["tok_per_s"])
+    pd = st["paged_vs_dense"]
     rows.append((name, us,
                  f"best_tok_per_s={best['tok_per_s']:.1f}@"
-                 f"{best['slots']}slots,p95_ms={best['p95_ms']:.0f}"))
+                 f"{best['slots']}slots,p95_ms={best['p95_ms']:.0f},"
+                 f"paged_streams={pd['paged']['max_concurrent']}"
+                 f"v{pd['dense']['max_concurrent']}"))
 
     print("name,us_per_call,derived")
     for n, u, d in rows:

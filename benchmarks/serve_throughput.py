@@ -7,14 +7,33 @@ counts and reports, per slot count:
   tok_per_s       generated tokens / wall-clock of the whole trace
   p50_ms / p95_ms request latency (arrival -> final token), wall-clock
   steps           engine ticks to drain the trace
+  max_concurrent  peak simultaneously-active slots (deterministic)
 
-Compilation is excluded: each slot count warms up prefill + its pool-width
-decode step on a throwaway request before the timed run. Prompts share one
-length so prefill compiles once (the engine docstring covers bucketing).
+Two head-to-head sections ride along in the JSON report:
 
-With --out the per-slot-count rows are also written as machine-readable
-JSON (``BENCH_serve_throughput.json``) for CI artifact tracking; wall-clock
-numbers are host-dependent, so CI archives them instead of gating on them.
+  paged_vs_dense   the same trace against a dense pool and a PAGED pool
+                   holding the SAME simulated HBM budget (token capacity).
+                   Dense spends budget/max_tokens slots; paged spends a
+                   page per page_size tokens, so short requests pack — the
+                   paged pool must sustain strictly MORE concurrent streams
+                   (max_concurrent, deterministic, gated by
+                   benchmarks/check_regression.py).
+  chunked_prefill  a long-prompt trace served with one-shot vs chunked
+                   prefill (prefill_chunk tokens/tick): a one-shot long
+                   prefill stalls every in-flight stream for its full wall
+                   time, so the p95 ENGINE-TICK latency (p95_tick_ms — the
+                   inter-token stall a stream experiences) spikes to the
+                   prefill cost; chunking bounds per-tick prefill work to
+                   one chunk, collapsing that tail (wall-clock — archived,
+                   not gated).
+
+Compilation is excluded: each engine variant warms up prefill + its
+pool-width decode step on a throwaway request before the timed run.
+
+With --out the rows are also written as machine-readable JSON
+(``BENCH_serve_throughput.json``); the deterministic occupancy fields are
+CI-gated against the committed baseline, the wall-clock fields are
+archived only.
 
   PYTHONPATH=src python -m benchmarks.serve_throughput --smoke
   PYTHONPATH=src python benchmarks/serve_throughput.py --smoke --slots 1,4,8
@@ -29,52 +48,140 @@ import numpy as np
 
 
 def build_trace(rng, num_requests: int, prompt_len: int, gen: int,
-                rate: float, vocab: int):
-    """Open-loop Poisson trace: arrival tick, prompt, gen length per request."""
+                rate: float, vocab: int, long_every: int = 0,
+                long_prompt_len: int = 0):
+    """Open-loop Poisson trace: arrival tick, prompt, gen length per request.
+    With `long_every` > 0, every long_every-th request carries a
+    `long_prompt_len`-token prompt (the chunked-prefill stressor)."""
     gaps = rng.exponential(1.0 / rate, size=num_requests)
     arrivals = np.floor(np.cumsum(gaps)).astype(int)
     arrivals[0] = 0
-    prompts = [rng.integers(0, vocab, size=prompt_len, dtype=np.int32)
-               for _ in range(num_requests)]
+    lens = [long_prompt_len if long_every and i % long_every == 0
+            else prompt_len for i in range(num_requests)]
+    prompts = [rng.integers(0, vocab, size=n, dtype=np.int32) for n in lens]
     gens = rng.integers(max(1, gen // 2), gen + 1, size=num_requests)
     return arrivals, prompts, gens
 
 
 def run_trace(params, cfg, *, num_slots: int, max_tokens: int,
-              arrivals, prompts, gens) -> dict:
+              arrivals, prompts, gens, **engine_kw) -> dict:
     from repro.serving import ServingEngine
 
-    # warmup: compile prefill + this pool width's decode step off the clock
+    # warmup: compile prefill (every distinct prompt length in the trace)
+    # + this pool width's decode step off the clock
     warm = ServingEngine(params, cfg, num_slots=num_slots,
-                         max_tokens=max_tokens)
-    warm.submit(prompts[0], 2)
+                         max_tokens=max_tokens, **engine_kw)
+    seen = set()
+    for p in prompts:
+        if len(p) not in seen:
+            seen.add(len(p))
+            warm.submit(p, 2)
     warm.run()
 
     eng = ServingEngine(params, cfg, num_slots=num_slots,
-                        max_tokens=max_tokens)
+                        max_tokens=max_tokens, **engine_kw)
     ids = [eng.submit(p, int(g), arrival_step=int(a))
            for p, g, a in zip(prompts, gens, arrivals)]
     t0 = time.monotonic()
-    fin = eng.run()
+    ticks = []                 # wall time per busy engine tick (inter-token
+    while eng.has_work():      # stall seen by streams)
+        busy = eng.pool.any_active()
+        before_chunks = eng.chunk_ticks
+        tt = time.monotonic()
+        eng.step()
+        if busy or eng.chunk_ticks > before_chunks:
+            ticks.append(time.monotonic() - tt)
     dt = time.monotonic() - t0
+    fin = eng.finished
 
     lats = np.array([fin[i].latency_s for i in ids])
     toks = sum(len(fin[i].tokens) for i in ids)
-    return {
+    ticks = np.array(ticks) if ticks else np.zeros(1)
+    row = {
         "slots": num_slots,
         "tok_per_s": toks / dt,
         "p50_ms": float(np.percentile(lats, 50) * 1e3),
         "p95_ms": float(np.percentile(lats, 95) * 1e3),
+        "p95_tick_ms": float(np.percentile(ticks, 95) * 1e3),
+        "max_tick_ms": float(ticks.max() * 1e3),
         "steps": eng.step_count,
         "wall_s": dt,
         "tokens": toks,
+        # engine-tracked peak occupancy (after admissions, before same-tick
+        # retirements — the true concurrent-stream count; deterministic)
+        "max_concurrent": eng.peak_active,
+    }
+    if eng.pool.paged:
+        row["num_pages"] = eng.pool.num_pages
+        row["page_size"] = eng.pool.page_size
+    if eng.chunk_ticks:
+        row["chunk_ticks"] = eng.chunk_ticks
+    return row
+
+
+def paged_vs_dense(params, cfg, rng, *, budget_tokens: int, max_tokens: int,
+                   page_size: int, num_requests: int, prompt_len: int,
+                   gen: int, rate: float) -> dict:
+    """Same trace, same simulated HBM token budget: dense carves the budget
+    into budget/max_tokens fixed slots; paged carves it into pages and lets
+    the allocator pack short requests. max_concurrent is deterministic
+    (tick-based trace, length-based retirement)."""
+    arrivals, prompts, gens = build_trace(
+        rng, num_requests, prompt_len, gen, rate, cfg.vocab_size)
+    dense_slots = max(1, budget_tokens // max_tokens)
+    num_pages = budget_tokens // page_size + 1           # +1: the null page
+    paged_slots = min(3 * dense_slots,
+                      budget_tokens // max(1, prompt_len + gen))
+    trace_kw = dict(max_tokens=max_tokens, arrivals=arrivals,
+                    prompts=prompts, gens=gens)
+    dense = run_trace(params, cfg, num_slots=dense_slots, **trace_kw)
+    paged = run_trace(params, cfg, num_slots=paged_slots, paged=True,
+                      page_size=page_size, num_pages=num_pages, **trace_kw)
+    return {
+        "budget_tokens": budget_tokens,
+        "max_tokens": max_tokens,
+        "page_size": page_size,
+        "trace": {"requests": num_requests, "prompt_len": prompt_len,
+                  "gen": gen, "rate": rate},
+        "dense": dense,
+        "paged": paged,
+    }
+
+
+def chunked_prefill_compare(params, cfg, rng, *, max_tokens: int,
+                            chunk: int, num_requests: int, prompt_len: int,
+                            long_prompt_len: int, gen: int, rate: float,
+                            num_slots: int) -> dict:
+    """Long-prompt Poisson trace served one-shot vs chunked: the chunked
+    engine bounds per-tick prefill work to `chunk` tokens, so in-flight
+    decodes never wait a full long prefill between tokens — the p95
+    engine-tick (inter-token) latency collapses from the one-shot prefill
+    cost down to roughly one chunk of work."""
+    arrivals, prompts, gens = build_trace(
+        rng, num_requests, prompt_len, gen, rate, cfg.vocab_size,
+        long_every=3, long_prompt_len=long_prompt_len)
+    trace_kw = dict(num_slots=num_slots, max_tokens=max_tokens,
+                    arrivals=arrivals, prompts=prompts, gens=gens)
+    one_shot = run_trace(params, cfg, **trace_kw)
+    chunked = run_trace(params, cfg, prefill_chunk=chunk, **trace_kw)
+    return {
+        "chunk": chunk,
+        "trace": {"requests": num_requests, "prompt_len": prompt_len,
+                  "long_prompt_len": long_prompt_len, "long_every": 3,
+                  "gen": gen, "rate": rate, "slots": num_slots},
+        "one_shot": one_shot,
+        "chunked": chunked,
     }
 
 
 def run(arch: str = "llama_moe_4_16", smoke: bool = True,
         slot_counts=(1, 4, 8), num_requests: int = 8, prompt_len: int = 16,
         gen: int = 8, rate: float = 0.5, seed: int = 0,
-        out: str = "") -> list[dict]:
+        paged: bool = False, page_size: int = 16,
+        compare: bool = True, out: str = "") -> dict:
+    """Returns the full report dict ({"rows": [...per-slot-count...],
+    "paged_vs_dense": ..., "chunked_prefill": ...}); with `out` it is also
+    written as JSON."""
     import jax
 
     from repro.configs.registry import get_config
@@ -86,21 +193,42 @@ def run(arch: str = "llama_moe_4_16", smoke: bool = True,
     arrivals, prompts, gens = build_trace(
         rng, num_requests, prompt_len, gen, rate, cfg.vocab_size)
     max_tokens = prompt_len + gen + 1
+    kw = {}
+    if paged:
+        max_tokens += -max_tokens % page_size
+        kw = dict(paged=True, page_size=page_size)
 
     rows = []
     for s in slot_counts:
         rows.append(run_trace(params, cfg, num_slots=s, max_tokens=max_tokens,
-                              arrivals=arrivals, prompts=prompts, gens=gens))
+                              arrivals=arrivals, prompts=prompts, gens=gens,
+                              **kw))
+    report = {
+        "host_backend": jax.default_backend(),
+        "config": {"arch": arch, "smoke": smoke,
+                   "requests": num_requests, "prompt_len": prompt_len,
+                   "gen": gen, "rate": rate, "seed": seed, "paged": paged},
+        "rows": rows,
+    }
+    if compare:
+        # fixed-budget head-to-head: short requests against a generous
+        # max_tokens, arrivals fast enough to saturate the pool
+        report["paged_vs_dense"] = paged_vs_dense(
+            params, cfg, np.random.default_rng(seed),
+            budget_tokens=256 if smoke else 4096,
+            max_tokens=64 if smoke else 256, page_size=16,
+            num_requests=16 if smoke else 64,
+            prompt_len=prompt_len, gen=gen, rate=2.0)
+        report["chunked_prefill"] = chunked_prefill_compare(
+            params, cfg, np.random.default_rng(seed),
+            max_tokens=1024 if smoke else 2048, chunk=64,
+            num_requests=9 if smoke else 33,
+            prompt_len=8, long_prompt_len=960 if smoke else 1920,
+            gen=gen, rate=0.7, num_slots=2 if smoke else 8)
     if out:
         with open(out, "w") as f:
-            json.dump({
-                "host_backend": jax.default_backend(),
-                "config": {"arch": arch, "smoke": smoke,
-                           "requests": num_requests, "prompt_len": prompt_len,
-                           "gen": gen, "rate": rate, "seed": seed},
-                "rows": rows,
-            }, f, indent=2)
-    return rows
+            json.dump(report, f, indent=2)
+    return report
 
 
 def main():
@@ -118,6 +246,11 @@ def main():
     ap.add_argument("--rate", type=float, default=0.5,
                     help="mean arrivals per engine tick")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="run the per-slot-count rows on the paged pool")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--no-compare", action="store_true",
+                    help="skip the paged-vs-dense / chunked-prefill sections")
     ap.add_argument("--out", default="",
                     help="also write the rows as JSON to this path")
     args = ap.parse_args()
@@ -127,15 +260,32 @@ def main():
     p = args.prompt or (16 if args.smoke else 64)
     g = args.gen or (8 if args.smoke else 32)
 
-    rows = run(args.arch, smoke=args.smoke, slot_counts=slot_counts,
-               num_requests=n, prompt_len=p, gen=g, rate=args.rate,
-               seed=args.seed, out=args.out)
+    rep = run(args.arch, smoke=args.smoke, slot_counts=slot_counts,
+              num_requests=n, prompt_len=p, gen=g, rate=args.rate,
+              seed=args.seed, paged=args.paged, page_size=args.page_size,
+              compare=not args.no_compare, out=args.out)
     print(f"# serve_throughput arch={args.arch} smoke={args.smoke} "
-          f"requests={n} prompt={p} gen<={g} rate={args.rate}")
-    print("slots,tok_per_s,p50_ms,p95_ms,steps,wall_s,tokens")
-    for r in rows:
+          f"requests={n} prompt={p} gen<={g} rate={args.rate} "
+          f"paged={args.paged}")
+    print("slots,tok_per_s,p50_ms,p95_ms,steps,wall_s,tokens,max_concurrent")
+    for r in rep["rows"]:
         print(f"{r['slots']},{r['tok_per_s']:.1f},{r['p50_ms']:.0f},"
-              f"{r['p95_ms']:.0f},{r['steps']},{r['wall_s']:.2f},{r['tokens']}")
+              f"{r['p95_ms']:.0f},{r['steps']},{r['wall_s']:.2f},"
+              f"{r['tokens']},{r['max_concurrent']}")
+    if not args.no_compare:
+        pd = rep["paged_vs_dense"]
+        print(f"# paged_vs_dense budget={pd['budget_tokens']}tok: dense "
+              f"{pd['dense']['slots']} slots -> {pd['dense']['max_concurrent']}"
+              f" streams ({pd['dense']['tok_per_s']:.1f} tok/s); paged "
+              f"{pd['paged']['num_pages']} pages -> "
+              f"{pd['paged']['max_concurrent']} streams "
+              f"({pd['paged']['tok_per_s']:.1f} tok/s)")
+        cp = rep["chunked_prefill"]
+        print(f"# chunked_prefill chunk={cp['chunk']}: p95 inter-token "
+              f"stall {cp['one_shot']['p95_tick_ms']:.0f}ms (one-shot, "
+              f"max {cp['one_shot']['max_tick_ms']:.0f}ms) -> "
+              f"{cp['chunked']['p95_tick_ms']:.0f}ms (chunked, max "
+              f"{cp['chunked']['max_tick_ms']:.0f}ms)")
 
 
 if __name__ == "__main__":

@@ -70,13 +70,40 @@ def go_cache_prefill(
     k: int,
 ) -> GOCache:
     """Build the cache from a prefill pass. C (expert-choice capacity) may
-    exceed k; we keep each expert's k best."""
+    exceed k (we keep each expert's k best) or fall short of it (short
+    chunked-prefill chunks — the spare slots stay empty: -inf / -1 / 0)."""
+    C = chosen_scores.shape[-1]
+    if C < k:
+        pad = [(0, 0)] * (chosen_scores.ndim - 1) + [(0, k - C)]
+        chosen_scores = jnp.pad(chosen_scores, pad, constant_values=-jnp.inf)
+        chosen_tokens = jnp.pad(chosen_tokens, pad, constant_values=-1)
+        expert_outputs = jnp.pad(expert_outputs, pad + [(0, 0)])
     top_s, top_slot = jax.lax.top_k(chosen_scores, k)            # [B, E, k]
     tok = jnp.take_along_axis(chosen_tokens, top_slot, axis=-1)
     out = jnp.take_along_axis(
         expert_outputs, top_slot[..., None], axis=2)             # [B, E, k, d]
     del scores, token_ids
     return GOCache(top_s.astype(jnp.float32), tok.astype(jnp.int32), out)
+
+
+def go_cache_merge(old: GOCache, new: GOCache) -> GOCache:
+    """Merge two caches over the same [B, E] grid: per expert, keep the k
+    best-scoring entries of the union. The chunked-prefill hook: each prompt
+    chunk builds its own cache (capacity derives from the chunk length) and
+    folds into the accumulated one, mirroring what TopKUpdate would do if
+    the chunk's tokens arrived one by one. Pass the OLDER cache first —
+    `top_k` keeps the earlier operand on ties, so merge order (and therefore
+    the chunked stream) is deterministic."""
+    k = old.scores.shape[-1]
+    scores = jnp.concatenate([old.scores, new.scores], axis=-1)   # [B, E, 2k]
+    top_s, idx = jax.lax.top_k(scores, k)
+    tok = jnp.take_along_axis(
+        jnp.concatenate([old.token_ids, new.token_ids], axis=-1), idx, axis=-1)
+    out = jnp.take_along_axis(
+        jnp.concatenate(
+            [old.outputs, new.outputs.astype(old.outputs.dtype)], axis=2),
+        idx[..., None], axis=2)
+    return GOCache(top_s, tok, out)
 
 
 class GOStepResult(NamedTuple):

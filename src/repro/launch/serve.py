@@ -27,10 +27,15 @@ CPU-runnable with smoke configs:
   XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
       python -m repro.launch.serve --arch llama_moe_4_16 --smoke \
       --requests 8 --slots 4 --mesh-model 2
+  # paged KV pool + chunked prefill (block tables; long prompts admitted
+  # one page-granular chunk per tick):
+  PYTHONPATH=src python -m repro.launch.serve --arch llama_moe_4_16 --smoke \
+      --requests 8 --slots 4 --paged --page-size 16 --chunk-prefill 16
 """
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import jax
@@ -80,25 +85,40 @@ def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
                      extras: dict | None = None,
                      arrival_steps: list | None = None, mesh=None,
                      temperature: float = 0.0, top_p: float = 1.0,
-                     prompt_buckets: bool = False) -> dict:
+                     prompt_buckets: bool = False, paged: bool = False,
+                     page_size: int = 16, num_pages: int | None = None,
+                     prefill_chunk: int = 0,
+                     priorities: list | None = None) -> dict:
     """Run a list of prompts through the continuous-batching engine.
     With `mesh`, slot rows are sharded across the data-parallel replicas and
     every decode tick runs under the mesh (launch/sharding.py rules).
     `temperature` > 0 samples with top-p nucleus filtering (per-request
     seeds derive from the request id); `prompt_buckets` pads prompts to
-    power-of-two buckets so prefill compiles once per bucket.
+    power-of-two buckets so prefill compiles once per bucket. `paged` swaps
+    the dense slot rows for the block-table page pool (`page_size`,
+    `num_pages` — None keeps the dense token capacity); `prefill_chunk`
+    admits long prompts one chunk per tick; `priorities` orders admission
+    (lower = earlier, FIFO within a level).
     Returns per-request token arrays plus engine stats."""
     max_tokens = max_tokens or (
         max(len(p) for p in prompts) + gen_tokens + 1)
+    # the engine requires max_tokens to be page- and chunk-granular; round
+    # the derived default up so the CLI knobs compose in any combination
+    grain = math.lcm(page_size if paged else 1,
+                     prefill_chunk if prefill_chunk else 1)
+    max_tokens += -max_tokens % grain
     eng = ServingEngine(params, cfg, num_slots=num_slots,
                         max_tokens=max_tokens, extras=extras, mesh=mesh,
-                        prompt_buckets=prompt_buckets)
+                        prompt_buckets=prompt_buckets, paged=paged,
+                        page_size=page_size, num_pages=num_pages,
+                        prefill_chunk=prefill_chunk)
     ids = []
     for i, p in enumerate(prompts):
         step = arrival_steps[i] if arrival_steps else 0
         ids.append(eng.submit(p, gen_tokens, extras=extras,
                               arrival_step=step, temperature=temperature,
-                              top_p=top_p))
+                              top_p=top_p,
+                              priority=priorities[i] if priorities else 0))
     t0 = time.time()
     fin = eng.run()
     dt = time.time() - t0
@@ -135,6 +155,21 @@ def main():
     ap.add_argument("--buckets", action="store_true",
                     help="pad prompts to power-of-two buckets (one prefill "
                          "compile per bucket instead of per length)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV pool: block-table pages instead of dense "
+                         "per-slot rows (attention-family archs)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (with --paged)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool size incl. the null page (0 = match the "
+                         "dense pool's token capacity); smaller values "
+                         "simulate a tighter HBM budget")
+    ap.add_argument("--chunk-prefill", type=int, default=0,
+                    help="admit prompts longer than this one chunk per tick "
+                         "(0 = one-shot prefill); must divide max_tokens")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="admission priority for the submitted requests "
+                         "(lower = admitted first; FIFO within a level)")
     ap.add_argument("--mesh-model", type=int, default=0,
                     help="run the engine under a smoke mesh with this "
                          "model-axis size (slot rows shard over the rest; "
@@ -181,12 +216,19 @@ def main():
                            num_slots=args.slots, extras=extras or None,
                            arrival_steps=arrivals, mesh=mesh,
                            temperature=args.temperature, top_p=args.top_p,
-                           prompt_buckets=args.buckets)
+                           prompt_buckets=args.buckets, paged=args.paged,
+                           page_size=args.page_size,
+                           num_pages=args.num_pages or None,
+                           prefill_chunk=args.chunk_prefill,
+                           priorities=[args.priority] * len(prompts))
     s = res["stats"]
     print(f"served {s['finished']} requests over {s['steps']} ticks on "
           f"{args.slots} slots in {res['decode_s']:.2f}s "
           f"({res['tok_per_s']:.1f} tok/s)"
-          + (f" [mesh {s['mesh']}]" if s["mesh"] else ""))
+          + (f" [mesh {s['mesh']}]" if s["mesh"] else "")
+          + (f" [paged ps={s['page_size']} pages={s['num_pages']}]"
+             if s["paged"] else "")
+          + (f" [chunk ticks {s['chunk_ticks']}]" if s["chunk_ticks"] else ""))
     first = res["tokens"][min(res["tokens"])]
     print("sample:", first[:16])
 

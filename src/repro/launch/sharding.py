@@ -183,6 +183,16 @@ def state_spec(path, leaf, cfg, mesh, batch: int) -> P:
 
     if k0 == "t" or len(shape) == 0:
         return P()
+    if k0 == "block_table":
+        # tiny int32 gather indices — every replica needs every slot's page
+        # map (the decode gather may touch pages living on any replica)
+        return P()
+    if k0 in ("k_pages", "v_pages"):              # [L, NP, ps, h, hd]
+        # paged pool: physical pages over the data-parallel axes, the page
+        # interior over "model" (the same S-dim flash-decoding split as the
+        # dense rule, one page at a time)
+        return P(None, _maybe(mesh, dp, shape[1]),
+                 _maybe(mesh, "model", shape[2]), None, None)
     if k0 in ("k", "v"):
         if len(shape) == 5:                       # [L, B, S, h, hd]
             return P(None, _maybe(mesh, dp, shape[1]),
@@ -232,15 +242,18 @@ def state_shardings(state_shapes, cfg, mesh, batch: int):
 
 
 def serve_state_shardings(cfg, mesh, num_slots: int, max_tokens: int,
-                          extras: dict | None = None):
+                          extras: dict | None = None, paged=None):
     """NamedShardings for the serving engine's pooled decode state: slot rows
     over the data-parallel axes, KV sequence / GO expert dims over "model"
     (the same rules `state_spec` applies to the static-batch decode state —
-    the pool IS that state with the batch dim reinterpreted as slots)."""
+    the pool IS that state with the batch dim reinterpreted as slots).
+    `paged=(num_pages, page_size)` lays out the paged pool instead: page dim
+    over data-parallel, page interior over "model", block tables
+    replicated."""
     from repro.models.model import init_decode_state
     shapes = jax.eval_shape(
         lambda: init_decode_state(cfg, num_slots, max_tokens, extras or {},
-                                  per_slot_t=True))
+                                  per_slot_t=True, paged=paged))
     return state_shardings(shapes, cfg, mesh, num_slots)
 
 

@@ -388,14 +388,27 @@ def _decode_sdpa(q, k, v, mask, softcap_val: float):
 def attn_decode(
     params: dict,
     x_t: jax.Array,               # [B, 1, D] current token
-    cache_k: jax.Array,           # [B, Smax, Hkv, hd]
-    cache_v: jax.Array,
+    cache_k: jax.Array,           # [B, Smax, Hkv, hd] — or, with block_table,
+    cache_v: jax.Array,           #   a shared page pool [NP, ps, Hkv, hd]
     t,                            # traced int32 position: scalar or [B] per-slot
     *,
     cfg,
     window=0,
     use_rope: bool = True,
+    block_table=None,             # [B, P] int32 page ids (paged KV pool)
 ) -> tuple:
+    """Single-token decode against the KV cache.
+
+    With `block_table`, the cache arrays are a PAGED pool shared by every
+    slot: `cache_k[NP, ps, Hkv, hd]` holds fixed-size token pages and
+    `block_table[b, j]` names the physical page backing slot b's j-th
+    logical page (0 = the reserved null page — unallocated, and the write
+    target of retired rows, so its contents are trash by design). The new
+    token is scattered into page `bt[b, t // ps]` at offset `t % ps`, and
+    attention gathers the slot's pages back into the dense [B, P*ps]
+    logical layout — positions beyond `t` (including anything routed to the
+    null page) are masked before the softmax, so the paged step is
+    bit-identical to the dense one."""
     B = x_t.shape[0]
     hd = cfg.resolved_head_dim()
     nq, nkv = cfg.num_heads, cfg.num_kv_heads
@@ -420,16 +433,79 @@ def attn_decode(
         k = apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
 
     rows = jnp.arange(B)
-    cache_k = cache_k.at[rows, t_vec].set(k[:, 0].astype(cache_k.dtype))
-    cache_v = cache_v.at[rows, t_vec].set(v[:, 0].astype(cache_v.dtype))
+    if block_table is None:
+        cache_k = cache_k.at[rows, t_vec].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, t_vec].set(v[:, 0].astype(cache_v.dtype))
+        att_k, att_v = cache_k, cache_v
+        Smax = cache_k.shape[1]
+    else:
+        ps = cache_k.shape[1]
+        page = block_table[rows, t_vec // ps]                       # [B]
+        cache_k = cache_k.at[page, t_vec % ps].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[page, t_vec % ps].set(v[:, 0].astype(cache_v.dtype))
+        P = block_table.shape[1]
+        Smax = P * ps
+        att_k = cache_k[block_table].reshape(B, Smax, nkv, hd)
+        att_v = cache_v[block_table].reshape(B, Smax, nkv, hd)
 
-    Smax = cache_k.shape[1]
     k_pos = jnp.arange(Smax, dtype=jnp.int32)
     mask = k_pos[None, :] <= t_vec[:, None]                         # [B, Smax]
     w = jnp.asarray(window, jnp.int32)
     mask &= jnp.where(w > 0, k_pos[None, :] > t_vec[:, None] - w, True)
-    out = _decode_sdpa(q, cache_k, cache_v, mask, cfg.logit_softcap)
+    out = _decode_sdpa(q, att_k, att_v, mask, cfg.logit_softcap)
     out = out.astype(x_t.dtype).reshape(B, 1, nq * hd) @ params["wo"]
+    return out, cache_k, cache_v
+
+
+def attn_chunk(
+    params: dict,
+    x: jax.Array,                 # [B, Cs, D] one prompt chunk
+    cache_k: jax.Array,           # [B, Smax, Hkv, hd] dense KV cache
+    cache_v: jax.Array,
+    start,                        # traced int32: absolute position of chunk[0]
+    *,
+    cfg,
+    window=0,
+    kv_len=None,                  # traced int32: keys >= kv_len masked
+) -> tuple:
+    """Chunked-prefill attention: append one prompt chunk to a dense KV
+    cache and attend its queries over everything cached so far (earlier
+    chunks + the causal prefix of this one). `start` is traced, so one
+    compile serves every chunk of every prompt; the last (right-padded)
+    chunk rides in with `kv_len = start + valid` so pad keys never score."""
+    B, Cs, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    positions = (jnp.asarray(start, jnp.int32) +
+                 jnp.arange(Cs, dtype=jnp.int32))                  # [Cs]
+
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, Cs, nq, hd)
+    k = k.reshape(B, Cs, nkv, hd)
+    v = v.reshape(B, Cs, nkv, hd)
+
+    from repro.models.layers import rope_angles
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)          # [Cs, hd/2]
+    q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+    k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, positions[0], 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, positions[0], 0, 0))
+
+    Smax = cache_k.shape[1]
+    k_pos = jnp.arange(Smax, dtype=jnp.int32)
+    kvl = jnp.asarray(Smax if kv_len is None else kv_len, jnp.int32)
+    out = sdpa_chunked(
+        q, cache_k, cache_v, positions, k_pos,
+        jnp.asarray(window, jnp.int32), kvl,
+        causal=True, softcap=cfg.logit_softcap)
+    out = out.reshape(B, Cs, nq * hd) @ params["wo"]
     return out, cache_k, cache_v
 
 

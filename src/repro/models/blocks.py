@@ -114,11 +114,15 @@ def attn_block(params: dict, x: jax.Array, *, cfg, positions, window=0,
 
 def attn_block_decode(params: dict, x_t: jax.Array, cache_k, cache_v, t, *,
                       cfg, window=0, group_of_expert=None,
-                      go_cache=None) -> tuple:
-    """One-token decode. x_t [B,1,d]. Returns (x, ck, cv, go_cache, aux)."""
+                      go_cache=None, block_table=None) -> tuple:
+    """One-token decode. x_t [B,1,d]. Returns (x, ck, cv, go_cache, aux).
+    With `block_table`, cache_k/cache_v are the shared paged KV pool
+    (attention.py::attn_decode paged path); the GO cache stays slot-resident
+    either way — it is [E, k]-shaped, not sequence-shaped."""
     h = rmsnorm(params["ln1"], x_t, cfg.norm_eps)
     a, ck, cv = ATT.attn_decode(params["attn"], h, cache_k, cache_v, t,
-                                cfg=cfg, window=window)
+                                cfg=cfg, window=window,
+                                block_table=block_table)
     x = x_t + a
     h2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
     aux = None
@@ -155,6 +159,33 @@ def attn_block_decode(params: dict, x_t: jax.Array, cache_k, cache_v, t, *,
     return x, ck, cv, go_cache, aux
 
 
+def attn_block_chunk(params: dict, x: jax.Array, cache_k, cache_v, start, *,
+                     cfg, window=0, valid_len=None, group_of_expert=None,
+                     group_members=None, go_cache=None) -> tuple:
+    """Chunked-prefill block: append one prompt chunk (x [B,Cs,d] at
+    absolute positions start..start+Cs-1) to the dense KV cache, then run
+    the FFN sublayer over the chunk. For expert-choice MoE the chunk's
+    routing (capacity from the CHUNK length) builds a per-chunk GO cache
+    that merges into the accumulated one — `valid_len` (chunk-relative)
+    masks the last chunk's right-padding out of the routing, so pads never
+    enter the cache. Returns (x, ck, cv, go_cache, aux)."""
+    start = jnp.asarray(start, jnp.int32)
+    vl = jnp.asarray(x.shape[1] if valid_len is None else valid_len, jnp.int32)
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    a, ck, cv = ATT.attn_chunk(params["attn"], h, cache_k, cache_v, start,
+                               cfg=cfg, window=window, kv_len=start + vl)
+    x = x + a
+    x, aux = _ffn_apply(params, x, cfg, group_of_expert, group_members, vl)
+    if go_cache is not None:
+        from repro.core.go_cache import go_cache_merge, go_cache_prefill
+        chunk_go = go_cache_prefill(
+            None, None, aux["weighted_outputs"],
+            aux["chosen_tokens"] + start, aux["chosen_scores"],
+            cfg.moe.top_k)
+        go_cache = go_cache_merge(go_cache, chunk_go)
+    return x, ck, cv, go_cache, aux
+
+
 def cross_block_decode(params: dict, x_t: jax.Array, memory, *, cfg) -> jax.Array:
     """Cross-attention block decode (static memory, no cache growth)."""
     h = rmsnorm(params["ln1"], x_t, cfg.norm_eps)
@@ -182,7 +213,8 @@ def mamba2_block_decode(params: dict, x_t: jax.Array, state, *, cfg) -> tuple:
 
 
 __all__ = [
-    "attn_block_init", "attn_block", "attn_block_decode", "cross_block_decode",
+    "attn_block_init", "attn_block", "attn_block_decode", "attn_block_chunk",
+    "cross_block_decode",
     "mamba2_block_init", "mamba2_block", "mamba2_block_decode",
     "mlstm_block_init", "mlstm_block", "slstm_block_init", "slstm_block",
 ]

@@ -18,7 +18,15 @@ Public API:
   prefill(params, tokens, cfg, extras)                   -> (state, last_logits)
   serve_step(params, state, tokens_t, cfg)               -> (logits, state)
   init_decode_slot(state, slot)                          -> state (slot reset)
-  write_decode_slot(state, slot, src_state)              -> state (slot filled)
+  write_decode_slot(state, slot, src_state[, page_ids])  -> state (slot filled)
+  prefill_chunk(params, state, tokens, cfg, start, vl)   -> (state, logits)
+
+Decode state comes in two layouts: DENSE (per-slot KV rows
+[L, B, max_len, h, hd]) and PAGED (`init_decode_state(paged=(num_pages,
+page_size))` — a shared page pool [L, NP, ps, h, hd] plus a per-slot
+block_table of physical page ids; serving/pool.py owns the host-side page
+allocator). serve_step picks the attention path from the state's keys, so
+both layouts run through the same engine.
 
 Decode positions: `state["t"]` is either a scalar (static batch — every row in
 lock-step, the classic generate() path) or an int32 vector [B] (per-slot —
@@ -385,17 +393,57 @@ def kv_cache_spec(cfg, batch: int, max_len: int):
     return (batch, max_len, cfg.num_kv_heads, hd)
 
 
+def paged_supported(cfg) -> bool:
+    """Paged KV pools cover the plain attention family — the KV cache is the
+    only sequence-shaped decode state there (recurrent families are O(1) per
+    slot, enc-dec/vlm carry per-request memories)."""
+    return (cfg.block == "attn" and cfg.encoder_layers == 0
+            and cfg.cross_attn_every == 0)
+
+
 def init_decode_state(cfg, batch: int, max_len: int,
                       extras: dict | None = None, *,
-                      per_slot_t: bool = False) -> dict:
+                      per_slot_t: bool = False,
+                      paged: tuple[int, int] | None = None) -> dict:
     """Zero-initialized decode state. `extras` may carry the cross-attention
     memory (image/audio embeds already encoded) for vlm/enc-dec archs.
     With per_slot_t, `t` is an int32 vector [batch] so every slot advances
-    independently (the continuous-batching pool layout)."""
+    independently (the continuous-batching pool layout).
+
+    `paged=(num_pages, page_size)` swaps the dense per-slot KV rows for a
+    shared page pool: `k_pages`/`v_pages` [L, num_pages, page_size, h, hd]
+    plus a per-slot `block_table` [batch, max_len // page_size] of physical
+    page ids (0 = the reserved null page). HBM then scales with the pool's
+    page count, not batch x max_len. GO caches stay slot-resident — they
+    are [E, k]-shaped, not sequence-shaped. Attention family only."""
     extras = extras or {}
     dt = jnp.dtype(cfg.dtype)
     st = {"t": jnp.zeros((batch,) if per_slot_t else (), jnp.int32)}
     shp = kv_cache_spec(cfg, batch, max_len)
+    if paged is not None:
+        if not paged_supported(cfg):
+            raise ValueError(
+                "paged decode state is attention-family only "
+                f"(block={cfg.block!r}, encoder_layers={cfg.encoder_layers}, "
+                f"cross_attn_every={cfg.cross_attn_every})")
+        num_pages, ps = paged
+        if max_len % ps:
+            raise ValueError(f"max_len={max_len} must be a multiple of "
+                             f"page_size={ps}")
+        L = cfg.num_layers
+        hd = cfg.resolved_head_dim()
+        st["block_table"] = jnp.zeros((batch, max_len // ps), jnp.int32)
+        st["k_pages"] = jnp.zeros(
+            (L, num_pages, ps, cfg.num_kv_heads, hd), dt)
+        st["v_pages"] = jnp.zeros(
+            (L, num_pages, ps, cfg.num_kv_heads, hd), dt)
+        if cfg.moe is not None and cfg.moe.routing == "expert_choice" \
+                and cfg.moe.go_cache:
+            e = cfg.moe
+            per = go_cache_init(batch, e.num_experts, e.top_k, cfg.d_model, dt)
+            st["go"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (L, *a.shape)), per)
+        return st
 
     if cfg.block == "attn" and cfg.encoder_layers > 0:
         L = cfg.num_layers
@@ -449,12 +497,19 @@ def init_decode_state(cfg, batch: int, max_len: int,
 #   mlstm -> 2 (segment, layer, batch)      memory -> 0
 
 def init_decode_slot(state: dict, slot) -> dict:
-    """Reset pool slot `slot` (traced int32 ok) to the empty decode state."""
+    """Reset pool slot `slot` (traced int32 ok) to the empty decode state.
+    Paged pools only reset the slot's BLOCK TABLE (to the null page) — the
+    physical pages go back to the host allocator's free list and are
+    rewritten before any future occupant can read them, so clearing their
+    contents would be wasted bandwidth. GO rows reset as usual (scores to
+    -inf) on this same free path."""
     st = dict(state)
     if st["t"].ndim == 1:
         st["t"] = st["t"].at[slot].set(0)
     else:
         st["t"] = jnp.zeros((), jnp.int32)
+    if "block_table" in st:
+        st["block_table"] = st["block_table"].at[slot].set(0)
     for key in ("k", "v"):
         if key in st:
             st[key] = st[key].at[:, slot].set(0)
@@ -472,11 +527,29 @@ def init_decode_slot(state: dict, slot) -> dict:
     return st
 
 
-def write_decode_slot(state: dict, slot, src: dict) -> dict:
+def write_decode_slot(state: dict, slot, src: dict, page_ids=None) -> dict:
     """Write a batch-1 decode state `src` (a single-request prefill built with
-    the SAME max_len as the pool) into pool slot `slot`."""
+    the SAME max_len as the pool) into pool slot `slot`.
+
+    Paged pools additionally take `page_ids` [max_len // page_size] int32 —
+    the slot's full block-table row. The dense prefill KV splits into
+    page-size rows and scatters to those physical pages; entries that are 0
+    (null — pages past the request's allocation) dump their rows onto the
+    null trash page, so ONE compile serves every allocation size."""
     st = dict(state)
     st["t"] = st["t"].at[slot].set(jnp.asarray(src["t"], jnp.int32).reshape(()))
+    if "block_table" in st:
+        assert page_ids is not None, "paged pool: pass the slot's page_ids"
+        pid = jnp.asarray(page_ids, jnp.int32)
+        st["block_table"] = st["block_table"].at[slot].set(pid)
+        L, _, ps, h, hd = st["k_pages"].shape
+        P = pid.shape[0]
+        for key, srck in (("k_pages", "k"), ("v_pages", "v")):
+            assert src[srck].shape[2] == P * ps, \
+                f"{srck}: prefill len {src[srck].shape[2]} != pool " \
+                f"max_tokens {P * ps} (prefill must use the pool's max_len)"
+            pages = src[srck][:, 0].reshape(L, P, ps, h, hd)
+            st[key] = st[key].at[:, pid].set(pages.astype(st[key].dtype))
     for key in ("k", "v"):
         if key in st:
             assert st[key].shape[2:] == src[key].shape[2:], \
@@ -535,6 +608,9 @@ def _dec_attn(params, x, state, cfg):
     windows = jnp.asarray(layer_windows(cfg))
     goe = expert_groups(cfg)
     has_go = "go" in state
+    paged = "block_table" in state
+    kk, vk = ("k_pages", "v_pages") if paged else ("k", "v")
+    bt = state["block_table"] if paged else None
 
     # The full KV (and GO) caches ride in the scan CARRY and are updated
     # layer-by-layer with dynamic_update_index — XLA keeps them in place
@@ -549,7 +625,7 @@ def _dec_attn(params, x, state, cfg):
             go) if has_go else None
         x, ck, cv, go_l, _ = B.attn_block_decode(
             lp, x, ck, cv, t, cfg=cfg, window=w, group_of_expert=goe,
-            go_cache=go_l)
+            go_cache=go_l, block_table=bt)
         K = jax.lax.dynamic_update_index_in_dim(K, ck.astype(K.dtype), l, 0)
         V = jax.lax.dynamic_update_index_in_dim(V, cv.astype(V.dtype), l, 0)
         if has_go:
@@ -559,10 +635,10 @@ def _dec_attn(params, x, state, cfg):
         return (x, K, V, go, l + 1), None
 
     go0 = state.get("go")
-    carry0 = (x, state["k"], state["v"], go0, jnp.zeros((), jnp.int32))
+    carry0 = (x, state[kk], state[vk], go0, jnp.zeros((), jnp.int32))
     (x, K, V, go, _), _ = jax.lax.scan(
         body, carry0, (params["layers"], windows))
-    state["k"], state["v"] = K, V
+    state[kk], state[vk] = K, V
     if has_go:
         state["go"] = go
     return x, state
@@ -760,6 +836,73 @@ def prefill(params: dict, tokens: jax.Array, cfg, extras: dict | None = None,
     else:
         logits = logits_from_hidden(params, jnp.take(x, vl - 1, axis=1), cfg)
         state["t"] = vl
+    return state, logits
+
+
+def prefill_chunk(params: dict, state: dict, tokens: jax.Array, cfg,
+                  start, valid_len=None):
+    """Append ONE prompt chunk (tokens [B, Cs] at absolute positions
+    start..start+Cs-1) to a dense decode state mid-prefill. Chained over
+    page-granular chunks this replaces the single long `prefill` pass, so a
+    long prompt never stalls the serving engine for more than one chunk of
+    work per tick.
+
+    `start` and `valid_len` are TRACED int32 scalars: one compile per chunk
+    length serves every chunk of every prompt. The last chunk is
+    right-padded to Cs and rides in with `valid_len` = its real token count
+    — causal attention plus the kv_len mask keep real positions off the
+    pads, and expert-choice routing masks pads out of the chunk's top-C
+    (blocks.py::attn_block_chunk), so the merged GO cache holds only real
+    tokens. Expert-choice capacity derives from the CHUNK length, so MoE
+    streams are deterministic per chunking but may differ from one-shot
+    prefill (the same caveat as prompt bucketing). Dense archs reproduce
+    the one-shot streams.
+
+    Returns (state, logits) where logits come from chunk position
+    valid_len - 1 — only meaningful on the final chunk. state["t"] lands on
+    start + valid_len. Attention family only."""
+    assert paged_supported(cfg), \
+        "chunked prefill is attention-family only (recurrent archs prefill " \
+        "step-by-step; enc-dec/vlm archs are one-shot)"
+    Bsz, Cs = tokens.shape
+    start = jnp.asarray(start, jnp.int32)
+    vl = jnp.asarray(Cs if valid_len is None else valid_len, jnp.int32)
+    windows = jnp.asarray(layer_windows(cfg))
+    goe = expert_groups(cfg)
+    gm = expert_group_members(cfg)
+    x = params["embed"][tokens]
+    has_go = "go" in state
+
+    def body(carry, xs):
+        x, K, V, go, l = carry
+        lp, w = xs
+        ck = jax.lax.dynamic_index_in_dim(K, l, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(V, l, 0, keepdims=False)
+        go_l = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False),
+            go) if has_go else None
+        x, ck, cv, go_l, _ = B.attn_block_chunk(
+            lp, x, ck, cv, start, cfg=cfg, window=w, valid_len=vl,
+            group_of_expert=goe, group_members=gm, go_cache=go_l)
+        K = jax.lax.dynamic_update_index_in_dim(K, ck.astype(K.dtype), l, 0)
+        V = jax.lax.dynamic_update_index_in_dim(V, cv.astype(V.dtype), l, 0)
+        if has_go:
+            go = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), l, 0), go, go_l)
+        return (x, K, V, go, l + 1), None
+
+    carry0 = (x, state["k"], state["v"], state.get("go"),
+              jnp.zeros((), jnp.int32))
+    (x, K, V, go, _), _ = jax.lax.scan(
+        body, carry0, (params["layers"], windows))
+    state = dict(state)
+    state["k"], state["v"] = K, V
+    if has_go:
+        state["go"] = go
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params, jnp.take(x, vl - 1, axis=1), cfg)
+    state["t"] = start + vl
     return state, logits
 
 

@@ -1,11 +1,18 @@
 """Continuous-batching serving over the paper's KV + GO cache pool.
 
-  scheduler  FIFO admission queue + max-slots/max-tokens policy (host-side)
-  pool       fixed-width slot pool owning the pooled decode state
-  engine     jitted masked decode step; admit -> prefill -> decode -> retire
+  scheduler  priority-heap admission (FIFO within a level) +
+             max-slots/max-tokens policy (host-side)
+  paging     host page allocator for the paged KV pool (reservations,
+             lazy grow, null page)
+  pool       fixed-width slot pool owning the pooled decode state —
+             dense per-slot KV rows or the paged block-table pool
+  engine     jitted masked decode step; admit -> prefill (one-shot or
+             chunked) -> decode -> retire
 """
 from repro.serving.engine import ServingEngine
+from repro.serving.paging import PageAllocator
 from repro.serving.pool import SlotPool
 from repro.serving.scheduler import FIFOScheduler, Request
 
-__all__ = ["ServingEngine", "SlotPool", "FIFOScheduler", "Request"]
+__all__ = ["ServingEngine", "SlotPool", "FIFOScheduler", "Request",
+           "PageAllocator"]

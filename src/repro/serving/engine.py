@@ -21,11 +21,29 @@ to temperature/top-p sampling — per-slot PRNG keys live in the pool, the
 sampled step variant compiles only once a sampling request is active, and
 greedy rows inside a sampling pool stay bit-identical.
 
-Compile surface: the decode step compiles ONCE per (pool width, max_tokens)
-and sampling mode; prefill compiles once per distinct prompt length — or
-once per power-of-two BUCKET with `prompt_buckets=True`, which right-pads
-prompts and threads the true length through prefill as a traced valid_len
-(expert-choice routing masks the pads, so the GO cache stays clean).
+PAGED POOL (`paged=True`): the per-slot KV rows become a shared page pool
+with per-slot block tables (serving/pool.py + serving/paging.py). The
+persistent KV residency is then bounded by `num_pages * page_size` tokens
+instead of `num_slots * max_tokens` (the decode gather still materializes
+a transient dense layout per layer — see the pool docstring), so a fixed
+cache budget admits strictly more concurrent
+streams whenever requests need less than max_tokens; admission asks the
+allocator "pages reservable?" instead of only "slot free?". Greedy streams
+stay bit-identical to the dense engine (the gathered pages reproduce the
+dense layout exactly; pinned in tests/test_serving.py). Setting the
+REPRO_FORCE_PAGED env var turns paging on for every engine whose config
+supports it — the CI matrix uses it to run the whole serving suite paged.
+
+CHUNKED PREFILL (`prefill_chunk=N` tokens): prompts longer than N are
+admitted as page-granular chunks, one chunk per engine tick, interleaved
+with the decode ticks of the in-flight slots — a long prompt no longer
+stalls every stream for its full prefill. Dense archs stream identically to
+one-shot prefill; expert-choice MoE routes each chunk at the CHUNK's
+capacity and merges GO caches (go_cache_merge), so its streams are
+deterministic per chunking but may differ from the one-shot engine's (the
+prompt-bucketing caveat). At most one chunk run is in flight, and it holds
+a claimed slot + reserved pages from the start, so completion can never
+deadlock.
 
 The MoE execution backend rides in through cfg.moe.backend: with "pallas"
 the batched decode tick runs the selected-experts static-capacity decode
@@ -37,23 +55,30 @@ kernels (pinned with backend="pallas" in tests/test_serving.py).
 
 With a `mesh`, the pool state is sharded by `launch/sharding.py` (slot rows
 across the data-parallel replicas, KV sequence / GO expert dims over
-"model") and every decode tick runs inside the mesh context, so GSPMD
-partitions the batched step — including the selected-experts grouped GEMM —
-across the replicas. Admission prefill stays batch-1 (replicated) and is
-splatted into the sharded row; streams remain bit-identical to the
-unsharded engine (pinned in tests/test_moe_mesh.py).
+"model"; paged pools shard the page dim over data-parallel and the page
+interior over "model", block tables replicated) and every decode tick runs
+inside the mesh context, so GSPMD partitions the batched step — including
+the selected-experts grouped GEMM — across the replicas. Admission prefill
+stays batch-1 (replicated) and is splatted into the sharded row; streams
+remain bit-identical to the unsharded engine (pinned in
+tests/test_moe_mesh.py).
 """
 from __future__ import annotations
 
 import itertools
+import math
+import os
 import time
+from dataclasses import dataclass
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import prefill, serve_step
+from repro.models.model import (init_decode_state, paged_supported, prefill,
+                                prefill_chunk as _model_prefill_chunk,
+                                serve_step)
 from repro.serving.pool import SlotPool
 from repro.serving.scheduler import FIFOScheduler, Request
 
@@ -106,6 +131,21 @@ def _decode_step_sampled(params, state, tokens, active, temps, top_ps, keys,
 # With prompt bucketing the padded length is a power-of-two bucket and the
 # true length rides in as a TRACED valid_len, so one compile per bucket.
 _jit_prefill = jax.jit(prefill, static_argnames=("cfg", "max_len"))
+# chunk start/valid_len are traced: ONE compile per chunk length serves
+# every chunk of every prompt.
+_jit_prefill_chunk = jax.jit(_model_prefill_chunk, static_argnames="cfg")
+
+
+@dataclass
+class _ChunkJob:
+    """One in-flight chunked prefill: a claimed slot, reserved pages, and a
+    private batch-1 dense decode state that fills one chunk per tick."""
+    req: Request
+    slot: int
+    state: dict
+    prompt: np.ndarray            # right-padded to a chunk multiple
+    pos: int = 0                  # next chunk start
+    logits: object = None         # last chunk's logits
 
 
 class ServingEngine:
@@ -114,15 +154,54 @@ class ServingEngine:
     def __init__(self, params, cfg, *, num_slots: int = 8,
                  max_tokens: int = 256, max_queue: int = 0,
                  extras: dict | None = None, mesh=None,
-                 prompt_buckets: bool = False):
+                 prompt_buckets: bool = False, paged: bool = False,
+                 page_size: int = 16, num_pages: int | None = None,
+                 prefill_chunk: int = 0):
         self.params = params
         self.cfg = cfg
         self.mesh = mesh
-        self.pool = SlotPool(cfg, num_slots, max_tokens, extras, mesh=mesh)
+        force = os.environ.get("REPRO_FORCE_PAGED", "").strip().lower()
+        if not paged and force not in ("", "0", "false", "no") \
+                and paged_supported(cfg):
+            # CI knob: run any supporting engine paged. Snap the page size
+            # to a common divisor of max_tokens (and prefill_chunk, when
+            # chunking is on — chunks must stay page-granular) so arbitrary
+            # test pools stay legal; if no usable divisor exists, leave the
+            # engine dense rather than crash a config that is valid unforced.
+            g = math.gcd(page_size, max_tokens)
+            if prefill_chunk:
+                g = math.gcd(g, prefill_chunk)
+            if g >= 4:
+                paged = True
+                page_size = g
+        self.pool = SlotPool(cfg, num_slots, max_tokens, extras, mesh=mesh,
+                             paged=paged, page_size=page_size,
+                             num_pages=num_pages)
         self.scheduler = FIFOScheduler(num_slots, max_tokens, max_queue)
         self.step_count = 0
         self.finished: dict[int, Request] = {}
         self._ids = itertools.count()
+        if prefill_chunk:
+            if not paged_supported(cfg):
+                raise ValueError("chunked prefill is attention-family only")
+            if max_tokens % prefill_chunk:
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} must divide "
+                    f"max_tokens={max_tokens}")
+            if paged and prefill_chunk % self.pool.page_size:
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} must be page-granular "
+                    f"(page_size={self.pool.page_size})")
+        self.prefill_chunk = int(prefill_chunk)
+        self._chunk_job: _ChunkJob | None = None
+        self.chunk_ticks = 0
+        # peak simultaneously-occupied engine capacity — occupied slots plus
+        # the chunk-run lane — sampled at every admission and again after
+        # the admission loop, BEFORE retirements. This is the
+        # concurrent-stream count the paged-vs-dense benchmark gates on
+        # (sampling after step() would miss streams that decode and retire,
+        # or admit and instantly finish, on the same tick)
+        self.peak_active = 0
         # pad prompts up to power-of-two buckets so prefill compiles once
         # per BUCKET instead of once per distinct prompt length (attention
         # families only — recurrent archs prefill step-by-step). Dense archs
@@ -140,11 +219,13 @@ class ServingEngine:
     def submit(self, prompt, max_new_tokens: int, *, eos_id: int | None = None,
                extras: dict | None = None, arrival_step: int = 0,
                request_id: int | None = None, temperature: float = 0.0,
-               top_p: float = 1.0, seed: int | None = None) -> int:
+               top_p: float = 1.0, seed: int | None = None,
+               priority: int = 0) -> int:
         """Queue a request. `arrival_step` > current step defers arrival to
         that engine tick (trace replay). `temperature` > 0 switches the
         request's rows to temperature/top-p sampling (greedy rows in the
-        same pool stay bit-identical). Returns the request id."""
+        same pool stay bit-identical). `priority` orders admission (lower =
+        earlier; FIFO within a level). Returns the request id."""
         rid = request_id if request_id is not None else next(self._ids)
         req = Request(
             request_id=rid,
@@ -153,6 +234,7 @@ class ServingEngine:
             eos_id=eos_id,
             extras=extras,
             arrival_step=arrival_step,
+            priority=int(priority),
             temperature=float(temperature),
             top_p=float(top_p),
             seed=seed,
@@ -161,6 +243,18 @@ class ServingEngine:
             raise ValueError("max_new_tokens must be >= 1")
         if not (0.0 < req.top_p <= 1.0):
             raise ValueError("top_p must be in (0, 1]")
+        if self.pool.paged:
+            # the paged analogue of the max_tokens check: a request whose
+            # worst case exceeds the whole page pool could NEVER reserve,
+            # so admission would stall the queue forever
+            need = self.pool.pages_needed(req)
+            usable = self.pool.num_pages - 1          # page 0 is the null page
+            if need > usable:
+                raise ValueError(
+                    f"request {rid}: prompt({req.prompt_len}) + "
+                    f"max_new_tokens({req.max_new_tokens}) needs {need} "
+                    f"pages of {self.pool.page_size} tokens, but the pool "
+                    f"only has {usable} usable pages")
         req.arrival_time = time.monotonic()
         self.scheduler.submit(req, now_step=self.step_count)
         return rid
@@ -168,24 +262,38 @@ class ServingEngine:
     # ------------------------------------------------------------------ ticks
 
     def step(self) -> list[Request]:
-        """One engine tick: admit due+queued requests into free slots, then
-        advance every occupied slot one token. Returns requests finished on
-        this tick."""
+        """One engine tick: advance the chunked-prefill job (if any) by one
+        chunk, admit due+queued requests into free slots, then advance every
+        occupied slot one token. Returns requests finished on this tick."""
         done: list[Request] = []
 
         for req in self.scheduler.poll(self.step_count):
             req.arrival_time = time.monotonic()
 
+        if self._chunk_job is not None:
+            self._advance_chunk_job(done)
+
         free = self.pool.free_slots()
+        if self._chunk_job is not None and self._chunk_job.slot in free:
+            free.remove(self._chunk_job.slot)
         while free:
-            req = self.scheduler.next_admission(self.pool.num_active())
+            busy = self.pool.num_active() + \
+                (1 if self._chunk_job is not None else 0)
+            req = self.scheduler.next_admission(busy, can_admit=self._can_admit)
             if req is None:
                 break
+            if self.prefill_chunk and req.prompt_len > self.prefill_chunk:
+                self._start_chunk_job(free.pop(0), req)
+                continue
             self._admit(free.pop(0), req, done)
 
+        self._note_occupancy()
+
         if self.pool.any_active():
+            self.pool.grow_active()
             toks, state = self._run_decode_step()
             self.pool.state = self.pool._pin(state)
+            self.pool.note_decoded()
             toks = np.asarray(toks)
             self.step_count += 1
             for slot, req in enumerate(self.pool.owner):
@@ -198,6 +306,8 @@ class ServingEngine:
                 if self.pool.remaining[slot] <= 0 or \
                         (req.eos_id is not None and tok == req.eos_id):
                     self._finish(slot, done)
+        elif self._chunk_job is not None:
+            self.step_count += 1              # prefill-only tick
         else:
             # idle tick — jump straight to the next trace arrival
             nxt = self.scheduler.next_arrival_step()
@@ -205,14 +315,40 @@ class ServingEngine:
                                   nxt if nxt is not None else 0)
         return done
 
+    def has_work(self) -> bool:
+        """Anything left to do — queued/deferred requests, occupied slots,
+        or an in-flight chunked prefill. The run() drain condition, public
+        so external tick loops (benchmarks) stay in sync with it."""
+        return self.scheduler.has_pending() or self.pool.any_active() \
+            or self._chunk_job is not None
+
     def run(self) -> dict[int, Request]:
-        """Tick until queue, trace and pool drain; returns finished requests
-        keyed by request id (token streams in Request.tokens)."""
-        while self.scheduler.has_pending() or self.pool.any_active():
+        """Tick until queue, trace, chunk run and pool drain; returns
+        finished requests keyed by request id (token streams in
+        Request.tokens)."""
+        while self.has_work():
             self.step()
         return self.finished
 
     # -------------------------------------------------------------- internals
+
+    def _note_occupancy(self) -> None:
+        """Record peak engine occupancy: occupied slots + the in-flight
+        chunk run (it holds a claimed slot and reserved pages)."""
+        self.peak_active = max(
+            self.peak_active,
+            self.pool.num_active() + (1 if self._chunk_job is not None else 0))
+
+    def _can_admit(self, req: Request) -> bool:
+        """Admission gate for the scheduler's head-of-queue: pages must be
+        reservable (paged pool), and a to-be-chunked prompt must wait for
+        the single chunk-run lane. A blocked head blocks the queue —
+        overtaking would break the starvation-freedom the priority heap
+        guarantees."""
+        if self.prefill_chunk and req.prompt_len > self.prefill_chunk \
+                and self._chunk_job is not None:
+            return False
+        return self.pool.can_admit(req)
 
     def _run_decode_step(self):
         """One jitted decode tick, inside the mesh context when sharded (the
@@ -251,6 +387,20 @@ class ServingEngine:
             return prompt, None
         return np.pad(prompt, (0, b - n)), n
 
+    def _first_token(self, req: Request, logits):
+        """The request's first output token from its prefill logits — argmax,
+        or sampled when the request asks for temperature > 0. Returns
+        (token, advanced PRNG key or None)."""
+        if req.temperature > 0:
+            seed = req.seed if req.seed is not None else req.request_id
+            k_use, key_next = jax.random.split(jax.random.PRNGKey(seed))
+            first = int(_sample_tokens(
+                logits, k_use[None],
+                jnp.full((1,), req.temperature, jnp.float32),
+                jnp.full((1,), req.top_p, jnp.float32))[0])
+            return first, key_next
+        return int(jnp.argmax(logits, axis=-1)[0]), None
+
     def _admit(self, slot: int, req: Request, done: list[Request]) -> None:
         """Prefill a request into `slot` mid-flight: fills that row's KV and
         GO cache entries and emits the request's first token (from the
@@ -263,22 +413,55 @@ class ServingEngine:
             self.params, jnp.asarray(prompt, jnp.int32)[None, :],
             self.cfg, req.extras or {}, self.pool.max_tokens,
             None if valid_len is None else jnp.asarray(valid_len, jnp.int32))
-        key_next = None
-        if req.temperature > 0:
-            seed = req.seed if req.seed is not None else req.request_id
-            k_use, key_next = jax.random.split(jax.random.PRNGKey(seed))
-            first = int(_sample_tokens(
-                logits, k_use[None],
-                jnp.full((1,), req.temperature, jnp.float32),
-                jnp.full((1,), req.top_p, jnp.float32))[0])
-        else:
-            first = int(jnp.argmax(logits, axis=-1)[0])
+        self._install(slot, req, slot_state, logits, done)
+
+    def _install(self, slot: int, req: Request, slot_state, logits,
+                 done: list[Request]) -> None:
+        """Shared tail of one-shot and chunked admission: emit the first
+        token, splat the prefilled state into the pool row, handle an
+        immediate EOS/length finish."""
+        first, key_next = self._first_token(req, logits)
         req.admit_step = self.step_count
         req.tokens.append(first)
         self.pool.admit(slot, req, slot_state, first, key=key_next)
+        self._note_occupancy()       # before a possible instant retirement
         if self.pool.remaining[slot] <= 0 or \
                 (req.eos_id is not None and first == req.eos_id):
             self._finish(slot, done)
+
+    # ---------------------------------------------------------- chunk prefill
+
+    def _start_chunk_job(self, slot: int, req: Request) -> None:
+        """Claim `slot` and the request's worst-case pages, then begin
+        filling a private batch-1 dense state one chunk per tick."""
+        Cs = self.prefill_chunk
+        padded = -(-req.prompt_len // Cs) * Cs
+        prompt = np.pad(req.prompt, (0, padded - req.prompt_len))
+        state = init_decode_state(self.cfg, 1, self.pool.max_tokens,
+                                  req.extras or {})
+        self.pool.reserve_pages(req)
+        self._chunk_job = _ChunkJob(req=req, slot=slot, state=state,
+                                    prompt=prompt)
+        self._advance_chunk_job_once()
+
+    def _advance_chunk_job(self, done: list[Request]) -> None:
+        self._advance_chunk_job_once()
+        job = self._chunk_job
+        if job is not None and job.pos >= len(job.prompt):
+            self._chunk_job = None
+            self._install(job.slot, job.req, job.state, job.logits, done)
+
+    def _advance_chunk_job_once(self) -> None:
+        job = self._chunk_job
+        Cs = self.prefill_chunk
+        chunk = job.prompt[job.pos:job.pos + Cs]
+        valid = min(Cs, job.req.prompt_len - job.pos)
+        job.state, job.logits = _jit_prefill_chunk(
+            self.params, job.state, jnp.asarray(chunk, jnp.int32)[None, :],
+            self.cfg, jnp.asarray(job.pos, jnp.int32),
+            jnp.asarray(valid, jnp.int32))
+        job.pos += Cs
+        self.chunk_ticks += 1
 
     def _finish(self, slot: int, done: list[Request]) -> None:
         req = self.pool.retire(slot)
@@ -303,4 +486,11 @@ class ServingEngine:
                             if self.cfg.moe is not None else None),
             "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
             "prefill_lengths": sorted(self.prefill_lengths),
+            "peak_active": self.peak_active,
+            "paged": self.pool.paged,
+            "page_size": self.pool.page_size if self.pool.paged else None,
+            "num_pages": self.pool.num_pages,
+            "pages_in_use": (self.pool.alloc.pages_in_use
+                             if self.pool.paged else None),
+            "chunk_ticks": self.chunk_ticks,
         }

@@ -13,12 +13,30 @@ splats a single-request prefill (KV + per-layer GO entries) into the row,
 `init_decode_slot` clears it at retirement (scores back to -inf) so a stale
 expert-choice cache can never leak into the next occupant.
 
+PAGED mode (`paged=True`) replaces the dense per-slot KV rows with a shared
+page pool: `k_pages`/`v_pages` hold `num_pages` fixed-size token blocks and
+each slot carries a block table of physical page ids (0 = null page). The
+host-side `PageAllocator` (serving/paging.py) reserves each request's
+worst-case page count at admission (deadlock freedom) but hands pages out
+lazily — `grow_active()` assigns one page as a slot's sequence crosses a
+page boundary, right before the decode tick that writes it. The PERSISTENT
+KV residency then caps out at `num_pages * page_size` tokens regardless of
+num_slots x max_tokens, which is what lets the paged engine run strictly
+more concurrent streams than the dense one on the same cache budget. (The
+decode gather still materializes a TRANSIENT dense-layout K/V per layer
+per tick — a residency win, not a bandwidth one; the fused gather-attention
+kernel is a ROADMAP item.) GO rows stay slot-resident (they are
+[E, k]-shaped, not sequence-shaped); their score reset to -inf happens on
+the allocator's free path at retirement.
+
 With a `mesh`, the pool's tensors are laid out by the rule-based sharder
 (`launch/sharding.py::serve_state_shardings`): slot rows over the
-data-parallel axes, KV sequence / GO expert dims over "model". Slot writes
-and resets land on the sharded arrays in place; after each the state is
-pinned back to the canonical shardings so the jitted decode step never sees
-a drifted layout (sharding drift means silent recompiles).
+data-parallel axes, KV sequence / GO expert dims over "model" (paged: the
+page dim over data-parallel, the page interior over "model"; block tables
+replicated). Slot writes and resets land on the sharded arrays in place;
+after each the state is pinned back to the canonical shardings so the
+jitted decode step never sees a drifted layout (sharding drift means silent
+recompiles).
 """
 from __future__ import annotations
 
@@ -27,7 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import (init_decode_slot, init_decode_state,
-                                write_decode_slot)
+                                paged_supported, write_decode_slot)
+from repro.serving.paging import PageAllocator, pages_for_tokens
 from repro.serving.scheduler import Request
 
 # Module-level jits: the slot index is traced, so each op compiles once per
@@ -41,28 +60,66 @@ class SlotPool:
     """Fixed-width pool of per-request decode-cache rows."""
 
     def __init__(self, cfg, num_slots: int, max_tokens: int,
-                 extras: dict | None = None, mesh=None):
+                 extras: dict | None = None, mesh=None, *,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: int | None = None):
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_tokens = max_tokens
         self.mesh = mesh
+        self.paged = bool(paged)
+        self.page_size = page_size
+        self.num_pages = None
+        if self.paged:
+            if not paged_supported(cfg):
+                raise ValueError(
+                    "paged pool is attention-family only "
+                    f"(block={cfg.block!r})")
+            if max_tokens % page_size:
+                raise ValueError(f"max_tokens={max_tokens} must be a "
+                                 f"multiple of page_size={page_size}")
+            # default: same token capacity as the dense pool, plus the null
+            # page — paging then costs nothing and saves whatever requests
+            # don't use. A smaller num_pages SIMULATES a tighter HBM budget.
+            if num_pages is None:
+                num_pages = num_slots * (max_tokens // page_size) + 1
+            if mesh is not None:
+                # the page dim shards over the data-parallel axes
+                # (launch/sharding.py) only when it divides them — round up
+                # so the pool actually SHARDS instead of silently
+                # replicating the whole page store on every dp replica
+                # (which would invert the HBM win the pool exists for)
+                from repro.launch.mesh import axis_size, dp_axes
+                dpn = 1
+                for a in dp_axes(mesh):
+                    dpn *= axis_size(mesh, a)
+                num_pages += -num_pages % dpn
+            self.num_pages = num_pages
+            self.alloc = PageAllocator(num_pages, page_size)
+            # host mirror of the device block tables ([B, P] int32)
+            self.block_table = np.zeros(
+                (num_slots, max_tokens // page_size), np.int32)
+            self._bt_dirty = False
         # Per-request cross-attn memory arrives batch-1 via each prefill and
         # is splatted in by write_decode_slot — the pool itself always inits
         # the default (zero, [num_slots, ...]) memory rows.
         pool_extras = {k: v for k, v in (extras or {}).items()
                        if k != "memory"}
         self.state = init_decode_state(
-            cfg, num_slots, max_tokens, pool_extras, per_slot_t=True)
+            cfg, num_slots, max_tokens, pool_extras, per_slot_t=True,
+            paged=(self.num_pages, page_size) if self.paged else None)
         self.shardings = None
         if mesh is not None:
             from repro.launch.sharding import serve_state_shardings
             self.shardings = serve_state_shardings(
-                cfg, mesh, num_slots, max_tokens, pool_extras)
+                cfg, mesh, num_slots, max_tokens, pool_extras,
+                paged=(self.num_pages, page_size) if self.paged else None)
             self.state = self._pin(self.state)
         # host-side slot metadata
         self.owner: list[Request | None] = [None] * num_slots
         self.pending = np.zeros(num_slots, np.int32)    # next input token
         self.remaining = np.zeros(num_slots, np.int64)  # tokens still owed
+        self.t_host = np.zeros(num_slots, np.int64)     # next decode position
         self.admitted_total = 0
         # per-slot sampling state (temperature <= 0 -> greedy row)
         self.temps = np.zeros(num_slots, np.float32)
@@ -90,34 +147,105 @@ class SlotPool:
     def active_mask(self) -> np.ndarray:
         return np.array([o is not None for o in self.owner], bool)
 
+    def pages_needed(self, req: Request) -> int:
+        """Worst-case page count: every position the request may ever write
+        (prompt + full generation)."""
+        return pages_for_tokens(req.prompt_len + req.max_new_tokens,
+                                self.page_size)
+
+    def can_admit(self, req: Request) -> bool:
+        """The scheduler's admission gate: a dense pool only needs the free
+        slot the engine already found; a paged pool additionally needs the
+        request's worst-case page count to be reservable."""
+        return (not self.paged) or self.alloc.can_reserve(
+            self.pages_needed(req))
+
     # -------------------------------------------------------------- lifecycle
+
+    def reserve_pages(self, req: Request) -> None:
+        """Reserve a request's worst-case pages ahead of admission (chunked
+        prefill claims its budget when the chunk run STARTS, so decode
+        growth can never strand a half-prefilled prompt)."""
+        if self.paged:
+            self.alloc.reserve(req.request_id, self.pages_needed(req))
 
     def admit(self, slot: int, req: Request, slot_state: dict,
               first_token: int, key=None) -> None:
         """Install a prefilled request into a free row: write its KV + GO
         cache entries and position in place, arm its first decode input.
         `key` is the slot's sampling PRNG state (already advanced past the
-        first token) for temperature > 0 requests."""
+        first token) for temperature > 0 requests. Paged pools allocate the
+        pages covering the prompt and the first decode write here; later
+        pages arrive lazily via grow_active()."""
         assert self.owner[slot] is None, f"slot {slot} is occupied"
-        self.state = self._pin(_write_slot(self.state, slot, slot_state))
+        if self.paged:
+            self.reserve_pages(req)      # idempotent after a chunk-run claim
+            n0 = pages_for_tokens(req.prompt_len + 1, self.page_size)
+            ids = self.alloc.alloc(req.request_id, n0)
+            row = np.zeros(self.block_table.shape[1], np.int32)
+            row[:n0] = ids
+            self.block_table[slot] = row
+            self.state = self._pin(_write_slot(
+                self.state, slot, slot_state, jnp.asarray(row)))
+        else:
+            self.state = self._pin(_write_slot(self.state, slot, slot_state))
         self.owner[slot] = req
         self.pending[slot] = first_token
         self.remaining[slot] = req.max_new_tokens - 1   # first token emitted
+        self.t_host[slot] = req.prompt_len
         self.admitted_total += 1
         self.temps[slot] = req.temperature
         self.top_ps[slot] = req.top_p
         self.keys[slot] = 0 if key is None else np.asarray(key, np.uint32)
         req.slot = slot
 
+    def grow_active(self) -> None:
+        """Paged pools: make sure every active slot owns the page its NEXT
+        decode write lands in (position t_host). Reservations guarantee the
+        grow succeeds; call once per engine tick, before the decode step."""
+        if not self.paged:
+            return
+        for slot, req in enumerate(self.owner):
+            if req is None:
+                continue
+            idx = int(self.t_host[slot]) // self.page_size
+            if idx < self.block_table.shape[1] and \
+                    self.block_table[slot, idx] == 0:
+                self.block_table[slot, idx] = self.alloc.grow(req.request_id)
+                self._bt_dirty = True
+        if self._bt_dirty:
+            self._push_block_table()
+
+    def _push_block_table(self) -> None:
+        bt = jnp.asarray(self.block_table)
+        if self.shardings is not None:
+            bt = jax.device_put(bt, self.shardings["block_table"])
+        self.state["block_table"] = bt
+        self._bt_dirty = False
+
+    def note_decoded(self) -> None:
+        """Advance the host mirror of each active slot's position after a
+        decode tick (keeps grow_active off the device)."""
+        for slot, req in enumerate(self.owner):
+            if req is not None:
+                self.t_host[slot] += 1
+
     def retire(self, slot: int) -> Request:
         """Free a row: clear its caches (GO scores to -inf) and return the
-        finished request. The row is immediately reusable."""
+        finished request. The row is immediately reusable. Paged pools
+        return the slot's pages to the allocator on this same path — the
+        page CONTENTS are left as-is (unreachable once the block table is
+        nulled, and rewritten before any future occupant reads them)."""
         req = self.owner[slot]
         assert req is not None, f"slot {slot} is already free"
+        if self.paged:
+            self.alloc.free(req.request_id)
+            self.block_table[slot] = 0
         self.state = self._pin(_reset_slot(self.state, slot))
         self.owner[slot] = None
         self.pending[slot] = 0
         self.remaining[slot] = 0
+        self.t_host[slot] = 0
         self.temps[slot] = 0.0
         self.top_ps[slot] = 1.0
         self.keys[slot] = 0

@@ -1,8 +1,8 @@
 """Admission / retirement scheduling for the continuous-batching engine.
 
 Host-side only (numpy, no jax): the scheduler decides WHICH request enters
-the pool next; the pool/engine decide WHERE (free slot) and do the device
-work. Policy knobs:
+the pool next; the pool/engine decide WHERE (free slot / which pages) and do
+the device work. Policy knobs:
 
   max_slots   pool width — at most this many requests in flight at once
   max_tokens  pool sequence capacity — prompt + generation of every request
@@ -11,15 +11,28 @@ work. Policy knobs:
               not-yet-arrived trace requests; submit raises when the backlog
               is full, the serving analogue of load-shedding
 
+Admission order is a PRIORITY HEAP: requests carry `priority` (int, lower =
+admitted earlier, 0 default) and the heap breaks ties by submission order —
+FIFO within a priority level, so equal-priority requests can never starve
+each other (pinned in tests/test_serving.py). This is the first step toward
+Sieve-style expert-aware admission: a cost model only has to assign
+priorities, the ordering machinery is already here.
+
+Admission can be gated by a `can_admit` predicate (the paged pool's "are
+enough pages reservable?" question). The gate applies to the HEAD of the
+heap only — a blocked head blocks everything behind it rather than letting
+smaller requests overtake, which keeps the order starvation-free.
+
 Requests may carry an `arrival_step`: the trace-replay hook used by the
 staggered-arrival tests and the Poisson-trace throughput benchmark. Such a
 request stays in the `pending` list until the engine's step counter reaches
-its arrival step, then joins the FIFO queue.
+its arrival step, then joins the admission heap (keyed by its SUBMIT order,
+so same-tick arrivals stay FIFO).
 """
 from __future__ import annotations
 
 import heapq
-from collections import deque
+import itertools
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -35,6 +48,7 @@ class Request:
     eos_id: int | None = None
     extras: dict | None = None       # per-request cross-attn memory (vlm/audio)
     arrival_step: int = 0            # engine step at which the request arrives
+    priority: int = 0                # admission class: lower = admitted first
     # --- sampling (temperature <= 0 -> greedy, the default) ---
     temperature: float = 0.0
     top_p: float = 1.0
@@ -58,14 +72,17 @@ class Request:
 
 
 class FIFOScheduler:
-    """FIFO admission queue with the max-slots / max-tokens policy."""
+    """Priority-heap admission (FIFO within a level) with the max-slots /
+    max-tokens policy. The historical name survives because priority 0 is
+    the default — an all-default workload IS a FIFO queue."""
 
     def __init__(self, max_slots: int, max_tokens: int, max_queue: int = 0):
         self.max_slots = max_slots
         self.max_tokens = max_tokens
         self.max_queue = max_queue
-        self.queue: deque[Request] = deque()
+        self.queue: list[tuple[int, int, Request]] = []      # (prio, seq, req)
         self._pending: list[tuple[int, int, Request]] = []   # arrival-step heap
+        self._seq = itertools.count()                        # submit order
 
     # ------------------------------------------------------------- submission
 
@@ -81,30 +98,35 @@ class FIFOScheduler:
         if self.max_queue and backlog >= self.max_queue:
             raise RuntimeError(
                 f"admission queue full (max_queue={self.max_queue})")
+        seq = next(self._seq)
         if req.arrival_step > now_step:
-            heapq.heappush(
-                self._pending, (req.arrival_step, req.request_id, req))
+            heapq.heappush(self._pending, (req.arrival_step, seq, req))
             return
-        self.queue.append(req)
+        heapq.heappush(self.queue, (req.priority, seq, req))
 
     def poll(self, step: int) -> list[Request]:
         """Move trace-replay requests whose arrival step has come into the
-        FIFO queue; returns the newly arrived requests."""
+        admission heap; returns the newly arrived requests."""
         arrived = []
         while self._pending and self._pending[0][0] <= step:
-            _, _, req = heapq.heappop(self._pending)
-            self.queue.append(req)
+            _, seq, req = heapq.heappop(self._pending)
+            heapq.heappush(self.queue, (req.priority, seq, req))
             arrived.append(req)
         return arrived
 
     # -------------------------------------------------------------- admission
 
-    def next_admission(self, num_active: int) -> Request | None:
-        """Pop the next request to admit, or None (empty queue or the pool is
-        already at max_slots)."""
+    def next_admission(self, num_active: int,
+                       can_admit=None) -> Request | None:
+        """Pop the next request to admit, or None (empty heap, the pool is
+        already at max_slots, or `can_admit` rejects the head — e.g. the
+        paged pool cannot reserve its worst-case page count yet)."""
         if not self.queue or num_active >= self.max_slots:
             return None
-        return self.queue.popleft()
+        head = self.queue[0][2]
+        if can_admit is not None and not can_admit(head):
+            return None
+        return heapq.heappop(self.queue)[2]
 
     def has_pending(self) -> bool:
         return bool(self.queue) or bool(self._pending)

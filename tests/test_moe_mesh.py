@@ -166,11 +166,14 @@ def test_go_decode_selected_under_mesh(shape):
 # ------------------------------------------------- sharded serving engine
 
 @needs_mesh
-@pytest.mark.parametrize("backend", ["auto", "pallas"])
-def test_sharded_engine_bit_identical(backend):
+@pytest.mark.parametrize("backend,paged", [("auto", False), ("pallas", False),
+                                           ("auto", True)])
+def test_sharded_engine_bit_identical(backend, paged):
     """Continuous-batching engine with slot rows sharded across DP replicas:
     every stream equals the unsharded engine bit for bit, on both the dense
-    (auto->xla) and the selected-experts pallas decode."""
+    (auto->xla) and the selected-experts pallas decode — and on the PAGED
+    pool, whose page dim shards over data-parallel with the page interior
+    over "model" (launch/sharding.py page-dim rules)."""
     from repro.configs.registry import get_config
     from repro.launch.serve import serve_continuous
     from repro.models.model import model_init
@@ -182,10 +185,12 @@ def test_sharded_engine_bit_identical(backend):
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
                for _ in range(3)]
-    kw = dict(num_slots=2, max_tokens=32, arrival_steps=[0, 1, 3])
+    kw = dict(num_slots=2, max_tokens=32, arrival_steps=[0, 1, 3],
+              paged=paged, page_size=8)
     res0 = serve_continuous(params, cfg, prompts, 5, **kw)
     res1 = serve_continuous(params, cfg, prompts, 5, mesh=_mesh((2, 2)), **kw)
     assert res1["stats"]["mesh"] == {"data": 2, "model": 2}
+    assert res1["stats"]["paged"] == paged
     for rid in res0["tokens"]:
         np.testing.assert_array_equal(res0["tokens"][rid],
                                       res1["tokens"][rid])

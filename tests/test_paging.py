@@ -1,0 +1,131 @@
+"""Property tests for the paged-pool machinery (serving/paging.py + the
+paged SlotPool): arbitrary admit / grow / retire sequences must never leak
+a page, never alias one page to two live requests, and must leave freed
+slots' GO rows at score -inf (the allocator-free-path reset)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import given, settings, st
+
+from repro.serving.paging import PageAllocator, pages_for_tokens
+
+
+# ------------------------------------------------------------- pure allocator
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["admit", "grow", "retire"]),
+                          st.integers(0, 5), st.integers(1, 4)),
+                max_size=60),
+       st.integers(4, 24), st.integers(1, 16))
+def test_allocator_never_leaks_or_aliases(ops, num_pages, page_size):
+    """Drive the allocator with an arbitrary op sequence (invalid ops are
+    skipped the way the engine's admission gate would skip them). After
+    EVERY op: each page is free or owned by exactly one request, page 0 is
+    never handed out, and the page count balances. After freeing everything
+    the full pool is back."""
+    alloc = PageAllocator(num_pages, page_size)
+    live: set[int] = set()
+    for op, rid, n in ops:
+        if op == "admit" and rid not in live:
+            if alloc.can_reserve(n):
+                alloc.reserve(rid, n)
+                # the engine allocates the prompt's pages up front, lazily
+                # grows the rest — model both by allocating a prefix
+                alloc.alloc(rid, max(1, n // 2))
+                live.add(rid)
+        elif op == "grow" and rid in live:
+            if alloc.can_grow(rid):
+                # within the reservation, growth is INFALLIBLE — free >=
+                # outstanding promises is the reserve-time invariant
+                page = alloc.grow(rid)
+                assert page != 0, "null page handed out"
+            else:
+                with pytest.raises(RuntimeError):
+                    alloc.grow(rid)     # cap enforced: no page stealing
+        elif op == "retire" and rid in live:
+            freed = alloc.free(rid)
+            assert 0 not in freed
+            live.remove(rid)
+        alloc.check()                      # no alias, no leak, no page 0
+    for rid in list(live):
+        alloc.free(rid)
+    alloc.check()
+    assert alloc.pages_in_use == 0
+    assert alloc.free_pages == num_pages - 1
+
+
+def test_allocator_reservations_prevent_deadlock():
+    """A reserved-but-unallocated page cannot be promised twice: with 6
+    usable pages, reserving 4 leaves room for 2 — a request needing 3 must
+    be refused even though 5 pages are physically free."""
+    alloc = PageAllocator(7, 8)
+    alloc.reserve(0, 4)
+    alloc.alloc(0, 1)                      # 6 free, 3 still promised to 0
+    assert alloc.can_reserve(2)
+    assert not alloc.can_reserve(4)
+    alloc.reserve(1, 2)
+    # request 0 can always reach its reserved maximum — and not one page more
+    for _ in range(3):
+        alloc.grow(0)
+    assert len(alloc.owned(0)) == 4
+    assert not alloc.can_grow(0)
+    with pytest.raises(RuntimeError):
+        alloc.grow(0)                    # cap: can't steal request 1's pages
+    with pytest.raises(RuntimeError):
+        alloc.reserve(2, 3)
+    alloc.free(0)
+    assert alloc.can_reserve(3)
+
+
+def test_pages_for_tokens():
+    assert pages_for_tokens(1, 8) == 1
+    assert pages_for_tokens(8, 8) == 1
+    assert pages_for_tokens(9, 8) == 2
+    assert pages_for_tokens(24, 8) == 3
+
+
+# --------------------------------------------- pool-level GO-row reset on free
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 2), min_size=1, max_size=10),
+       st.integers(0, 2 ** 31 - 1))
+def test_freed_go_rows_always_return_neg_inf(slots, seed):
+    """Admit/retire a paged pool in an arbitrary slot order (no model — the
+    splatted states are synthetic with FINITE GO scores) and check the free
+    path: after every retire, the slot's GO rows are back at -inf and its
+    block table at the null page; live slots keep their finite scores."""
+    from repro.configs.registry import get_config
+    from repro.models.model import init_decode_state
+    from repro.serving.pool import SlotPool
+    from repro.serving.scheduler import Request
+
+    cfg = get_config("llama_moe_4_16", smoke=True)
+    pool = SlotPool(cfg, 3, 16, paged=True, page_size=8)
+    rng = np.random.default_rng(seed)
+    rid = 0
+    for slot in slots:
+        if pool.owner[slot] is None:               # admit a synthetic request
+            req = Request(
+                request_id=rid,
+                prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                max_new_tokens=4)
+            rid += 1
+            src = init_decode_state(cfg, 1, 16)
+            src["t"] = jnp.asarray(6, jnp.int32)
+            src["go"] = jax.tree.map(
+                lambda a: jnp.ones_like(a) if a.dtype != jnp.int32
+                else jnp.zeros_like(a), src["go"])
+            pool.admit(slot, req, src, first_token=1)
+            assert not bool(
+                jnp.isneginf(pool.state["go"].scores[:, slot]).any())
+        else:                                      # retire = allocator free
+            pool.retire(slot)
+            assert bool(jnp.isneginf(pool.state["go"].scores[:, slot]).all())
+            assert (np.asarray(pool.state["block_table"][slot]) == 0).all()
+        pool.alloc.check()
+    for slot in range(3):                          # drain
+        if pool.owner[slot] is not None:
+            pool.retire(slot)
+    assert pool.alloc.pages_in_use == 0
+    assert bool(jnp.isneginf(pool.state["go"].scores).all())
