@@ -17,7 +17,11 @@ Gates:
   * serving (``paged_vs_dense``, deterministic: tick-based trace,
     length-based retirement): at the same simulated HBM token budget the
     paged pool must sustain STRICTLY more concurrent streams than the
-    dense pool, and at least as many as the committed baseline.
+    dense pool, and at least as many as the committed baseline;
+  * serving (``paged_attn``, deterministic: analytic per-tick page
+    traffic): the Pallas paged-attention kernel's HBM attention bytes
+    must stay strictly below the gather path's, the kernel/gather token
+    streams must match, and the traffic ratio must not regress.
 
 Usage:  python benchmarks/check_regression.py \
             --baseline BENCH_moe_path.json --fresh /tmp/bench_fresh.json \
@@ -82,7 +86,8 @@ def check(baseline: dict, fresh: dict) -> list[str]:
 
 
 def check_serve(baseline: dict, fresh: dict) -> list[str]:
-    """Gate the deterministic paged-occupancy rows of the serving report."""
+    """Gate the deterministic paged-occupancy and paged-attention-traffic
+    rows of the serving report."""
     errs = []
     f_pd = fresh.get("paged_vs_dense")
     if f_pd is None:
@@ -106,6 +111,39 @@ def check_serve(baseline: dict, fresh: dict) -> list[str]:
                 f"{b_pd['dense']['max_concurrent']} -> {d} (the trace is "
                 "deterministic — config/seed changed without a baseline "
                 "refresh?)")
+    errs += check_paged_attn(baseline, fresh)
+    return errs
+
+
+def check_paged_attn(baseline: dict, fresh: dict) -> list[str]:
+    """Gate the paged-attention traffic section: the Pallas kernel's
+    analytic per-tick HBM attention traffic must stay STRICTLY below the
+    gather path's (it scales with live tokens, not num_slots x max_tokens),
+    the kernel/gather token streams must agree, and the traffic ratio must
+    not regress vs the committed baseline. All three are deterministic
+    (analytic bytes over a tick-based trace)."""
+    errs = []
+    f_pa = fresh.get("paged_attn")
+    if f_pa is None:
+        return ["serve: fresh report lacks the paged_attn section "
+                "(schema drift silently disarmed the traffic gate)"]
+    if "skipped" in f_pa:
+        return []             # arch without a paged path — nothing to gate
+    if not f_pa["hbm_kernel_bytes"] < f_pa["hbm_gather_bytes"]:
+        errs.append(
+            f"serve: paged-attention kernel HBM traffic "
+            f"({f_pa['hbm_kernel_bytes']}B) must stay STRICTLY below the "
+            f"gather path's ({f_pa['hbm_gather_bytes']}B) — the kernel no "
+            "longer scales with live tokens")
+    if not f_pa.get("streams_match", False):
+        errs.append("serve: kernel and gather engines produced different "
+                    "token streams on the paged_attn trace")
+    b_pa = baseline.get("paged_attn")
+    if b_pa is not None and "skipped" not in b_pa:
+        if f_pa["traffic_ratio"] > b_pa["traffic_ratio"] + EPS:
+            errs.append(
+                f"serve: paged_attn traffic_ratio regressed "
+                f"{b_pa['traffic_ratio']} -> {f_pa['traffic_ratio']}")
     return errs
 
 
@@ -140,6 +178,12 @@ def main() -> None:
             serve_msg = (f"; serve occupancy paged "
                          f"{pd['paged']['max_concurrent']} > dense "
                          f"{pd['dense']['max_concurrent']} streams")
+            pa = serve_fresh.get("paged_attn", {})
+            if "hbm_kernel_bytes" in pa:
+                serve_msg += (f"; paged_attn traffic ratio "
+                              f"{pa['traffic_ratio']:.3f} (kernel "
+                              f"{pa['hbm_kernel_bytes']}B < gather "
+                              f"{pa['hbm_gather_bytes']}B)")
     if errs:
         for e in errs:
             print(f"REGRESSION: {e}", file=sys.stderr)

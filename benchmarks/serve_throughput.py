@@ -26,6 +26,11 @@ Two head-to-head sections ride along in the JSON report:
                    prefill cost; chunking bounds per-tick prefill work to
                    one chunk, collapsing that tail (wall-clock — archived,
                    not gated).
+  paged_attn       the same paged trace under cfg.paged_attn="kernel" vs
+                   "gather": analytic per-decode-tick HBM attention
+                   traffic (deterministic — gated: kernel bytes strictly
+                   below gather bytes, ratio must not regress, token
+                   streams must match), plus archived wall clocks.
 
 Compilation is excluded: each engine variant warms up prefill + its
 pool-width decode step on a throwaway request before the timed run.
@@ -174,6 +179,82 @@ def chunked_prefill_compare(params, cfg, rng, *, max_tokens: int,
     }
 
 
+def paged_attn_compare(params, cfg, rng, *, num_slots: int, max_tokens: int,
+                       page_size: int, num_requests: int, prompt_len: int,
+                       gen: int, rate: float) -> dict:
+    """Per-tick HBM attention traffic on one paged trace, kernel vs gather.
+
+    The gather path re-materializes EVERY slot's full block table each
+    decode tick, so its attention traffic scales with num_slots x
+    max_tokens regardless of how short the live sequences are. The Pallas
+    kernel (kernels/paged_attn.py) walks the block table and stages only
+    each active row's live pages — floor(t/ps)+1 — so traffic scales with
+    the live token count. Both byte counts are ANALYTIC
+    (paged_attn.decode_tick_pages over the deterministic tick schedule:
+    tick-based trace, length-based retirement — bit-identical across
+    hosts) and CI-gated; the wall clocks of the two engine runs are
+    archived only (the kernel runs in interpret mode off-TPU). The two
+    engines' token streams must agree exactly — also gated."""
+    from repro.kernels.paged_attn import decode_tick_pages, page_bytes
+    from repro.serving import ServingEngine
+
+    arrivals, prompts, gens = build_trace(
+        rng, num_requests, prompt_len, gen, rate, cfg.vocab_size)
+    pages_per_slot = max_tokens // page_size
+    num_pages = num_slots * pages_per_slot + 1        # +1: the null page
+
+    def run_mode(mode: str):
+        c = cfg.with_overrides(paged_attn=mode)
+        kw = dict(num_slots=num_slots, max_tokens=max_tokens, paged=True,
+                  page_size=page_size, num_pages=num_pages)
+        warm = ServingEngine(params, c, **kw)
+        warm.submit(prompts[0], 2)
+        warm.run()
+        eng = ServingEngine(params, c, **kw)
+        ids = [eng.submit(p, int(g), arrival_step=int(a))
+               for p, g, a in zip(prompts, gens, arrivals)]
+        live_pages = total_pages = decode_ticks = 0
+        t0 = time.monotonic()
+        while eng.has_work():
+            if eng.pool.any_active():       # a decode step runs this tick
+                decode_ticks += 1
+                lp, tp = decode_tick_pages(
+                    np.asarray(eng.pool.state["t"]), eng.pool.active_mask(),
+                    page_size, num_slots, pages_per_slot)
+                live_pages += lp
+                total_pages += tp
+            eng.step()
+        dt = time.monotonic() - t0
+        stream = tuple(tuple(int(t) for t in eng.finished[i].tokens)
+                       for i in ids)
+        return {"decode_ticks": decode_ticks, "live_pages": live_pages,
+                "total_pages": total_pages, "wall_s": dt}, stream
+
+    kernel, ks = run_mode("kernel")
+    gather, gs = run_mode("gather")
+    # the page tallies are a pure function of the tick schedule — both runs
+    # must see the same one, or the modes scheduled differently
+    assert (kernel["live_pages"], kernel["total_pages"]) == \
+        (gather["live_pages"], gather["total_pages"]), \
+        "kernel/gather engines diverged on the tick schedule"
+    pb = page_bytes(cfg, page_size)                   # per page, per layer
+    hbm_kernel = kernel["live_pages"] * pb * cfg.num_layers
+    hbm_gather = gather["total_pages"] * pb * cfg.num_layers
+    return {
+        "trace": {"requests": num_requests, "prompt_len": prompt_len,
+                  "gen": gen, "rate": rate, "slots": num_slots},
+        "max_tokens": max_tokens,
+        "page_size": page_size,
+        "page_kv_bytes_per_layer": pb,
+        "hbm_kernel_bytes": int(hbm_kernel),
+        "hbm_gather_bytes": int(hbm_gather),
+        "traffic_ratio": hbm_kernel / hbm_gather,
+        "streams_match": ks == gs,
+        "kernel": kernel,
+        "gather": gather,
+    }
+
+
 def run(arch: str = "llama_moe_4_16", smoke: bool = True,
         slot_counts=(1, 4, 8), num_requests: int = 8, prompt_len: int = 16,
         gen: int = 8, rate: float = 0.5, seed: int = 0,
@@ -225,6 +306,16 @@ def run(arch: str = "llama_moe_4_16", smoke: bool = True,
             num_requests=9 if smoke else 33,
             prompt_len=8, long_prompt_len=960 if smoke else 1920,
             gen=gen, rate=0.7, num_slots=2 if smoke else 8)
+        from repro.models.model import paged_supported
+        if paged_supported(cfg):
+            # tiny trace: off-TPU the kernel engine runs in interpret mode
+            report["paged_attn"] = paged_attn_compare(
+                params, cfg, np.random.default_rng(seed),
+                num_slots=3, max_tokens=32 if smoke else 64, page_size=8,
+                num_requests=6 if smoke else 12, prompt_len=8,
+                gen=6, rate=1.0)
+        else:
+            report["paged_attn"] = {"skipped": "arch has no paged path"}
     if out:
         with open(out, "w") as f:
             json.dump(report, f, indent=2)
@@ -286,6 +377,15 @@ def main():
               f"max {cp['one_shot']['max_tick_ms']:.0f}ms) -> "
               f"{cp['chunked']['p95_tick_ms']:.0f}ms (chunked, max "
               f"{cp['chunked']['max_tick_ms']:.0f}ms)")
+        pa = rep.get("paged_attn", {})
+        if "skipped" not in pa:
+            print(f"# paged_attn ps={pa['page_size']} "
+                  f"max_tokens={pa['max_tokens']}: per-trace attention HBM "
+                  f"{pa['hbm_kernel_bytes'] / 1e6:.2f}MB (kernel, live "
+                  f"pages) vs {pa['hbm_gather_bytes'] / 1e6:.2f}MB (gather, "
+                  f"every slot's full table) — ratio "
+                  f"{pa['traffic_ratio']:.3f}, streams_match="
+                  f"{pa['streams_match']}")
 
 
 if __name__ == "__main__":

@@ -61,6 +61,15 @@ class ModelConfig:
     local_global_ratio: int = 0       # gemma3: N local layers per 1 global
     logit_softcap: float = 0.0
 
+    # --- serving: paged-attention realization ---
+    # "kernel" walks the block table in Pallas (kernels/paged_attn.py):
+    # per-tick HBM traffic scales with live tokens. "gather" re-materializes
+    # the dense [B, max_tokens] layout per layer per tick (bit-exact vs the
+    # dense pool, the escape hatch). "auto" resolves per lowering platform:
+    # kernel on TPU (Mosaic), gather elsewhere — CPU CI opts into the kernel
+    # explicitly (REPRO_FORCE_PAGED_KERNEL / with_overrides).
+    paged_attn: str = "auto"          # "auto" | "kernel" | "gather"
+
     # ssm / hybrid details
     ssm_state: int = 0                # mamba2 state size (zamba2: 64)
     ssm_chunk: int = 128              # SSD chunk length

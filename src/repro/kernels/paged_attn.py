@@ -1,0 +1,346 @@
+"""Fused paged-attention — decode (and chunked-prefill) attention that walks
+the block table in-kernel instead of gathering pages back into the dense
+[B, max_tokens] layout per layer per tick.
+
+PIM mapping: the paper caches decode state near the compute instead of
+re-materializing it (the GO cache's "cache, don't recompute" discipline);
+this kernel is the attention-side sibling. The dense gather reads EVERY
+page slot of every block table each tick — bandwidth scales with
+`max_tokens`. Here the grid walks (batch row, logical page) with the block
+table scalar-prefetched, so each step stages exactly ONE physical page into
+VMEM; pages past the row's position `t` (always mapped to the null page 0)
+skip their FLOPs via `pl.when` AND resolve to the constant block index 0,
+so the pipeline re-uses the staged null-page buffer instead of issuing
+fresh HBM copies — per-tick traffic scales with LIVE tokens.
+
+Kernels:
+  paged_attn_decode(q, k_pages, v_pages, block_table, t)   -> [B, Hq, hd]
+      one query per row, online softmax over the row's pages; reproduces
+      models/attention.py::_decode_sdpa over the gathered layout (masking
+      `k_pos <= t` + sliding window, GQA head broadcast, logit softcap) to
+      within fp accumulation-order differences (online vs one-shot softmax).
+  paged_attn_chunk(q, k_pages, v_pages, block_table, start, kv_len)
+      chunked prefill: a [B, Cs] query chunk attends over the prefix's
+      pages (causal within the chunk) without re-materializing the dense
+      layout per chunk.
+
+Masking rules (matching the gather path exactly):
+  decode   k_pos <= t,              and k_pos > t - window     (window > 0)
+  chunk    k_pos <  kv_len,  k_pos <= q_pos,  k_pos > q_pos - window
+
+Null pages need no special-casing for CORRECTNESS — every position they
+back is already masked by the rules above (block tables only map live
+positions to real pages) — but they are where the bandwidth win comes
+from: a dead page's block index is 0, constant across the tail of the row,
+so only compute-live pages cost HBM traffic.
+
+`interpret=None` auto-selects from the lowering context exactly like
+kernels/moe_gmm.py (pallas lowers via Mosaic only on TPU; CPU CI runs the
+same kernel body in interpret mode), and the resolved value is part of the
+jit cache key. Under a GSPMD mesh the inputs are pinned replicated
+(`replicate_for_gspmd`) — pallas_call has no SPMD partitioning rule, and
+the interpret lowering miscompiles on sharded CPU host meshes (the
+moe_gmm.py precedent); a shard_mapped page-parallel variant is the ROADMAP
+follow-up for real multi-chip TPU.
+
+`resolve_mode(cfg)` is the path selector consumed by models/attention.py
+and launch/sharding.py: cfg.paged_attn "kernel" / "gather" are explicit,
+"auto" picks the kernel wherever Mosaic can lower it (TPU) and the gather
+fallback elsewhere — CPU CI opts into the kernel explicitly (the
+REPRO_FORCE_PAGED_KERNEL lane) or per-test via cfg overrides.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.moe_gmm import (default_interpret, lowering_platform,
+                                   replicate_for_gspmd)
+
+NEG_INF = -1e30
+
+
+def resolve_mode(cfg) -> str:
+    """The paged-attention realization for `cfg`: "kernel" (this module) or
+    "gather" (attention.py's dense re-materialization). cfg.paged_attn
+    "auto" resolves per lowering platform, like the MoE backend."""
+    mode = getattr(cfg, "paged_attn", "auto")
+    if mode == "auto":
+        return "kernel" if lowering_platform() == "tpu" else "gather"
+    if mode not in ("kernel", "gather"):
+        raise ValueError(
+            f"cfg.paged_attn={mode!r} (want 'auto', 'kernel' or 'gather')")
+    return mode
+
+
+# --------------------------------------------------------------------- decode
+
+def _decode_kernel(bt_ref, tv_ref, wv_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, ps: int, num_pages: int,
+                   softcap: float, scale: float):
+    """Grid (b, j): batch row b, logical page j (j innermost — the online-
+    softmax reduction axis). Scalar-prefetched refs: block table [B, P],
+    positions [B], window [1]."""
+    b, j = pl.program_id(0), pl.program_id(1)
+    t = tv_ref[b]
+    w = wv_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    base = j * ps
+    # live <=> the page holds at least one attendable position: some
+    # k_pos in [base, base+ps-1] with k_pos <= t (and inside the window).
+    # Dead pages (always block-table index 0, the null page) skip ALL work.
+    live = base <= t
+    live = jnp.logical_and(
+        live, jnp.where(w > 0, base + ps - 1 > t - w, True))
+
+    @pl.when(live)
+    def _attend():
+        q = q_ref[0]                                   # [Hq, hd]
+        k = k_ref[0]                                   # [ps, Hkv, hd]
+        v = v_ref[0]
+        Hkv, G = m_ref.shape
+        hd = q.shape[-1]
+        qg = q.reshape(Hkv, G, hd)
+        s = jnp.einsum("hgd,phd->hgp", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, ps), 2)
+        msk = k_pos <= t
+        msk = jnp.logical_and(msk, jnp.where(w > 0, k_pos > t - w, True))
+        s = jnp.where(msk, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+            "hgp,phd->hgd", p.astype(v.dtype), v,
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == num_pages - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        out = acc_ref[...] / l[..., None]               # [Hkv, G, hd]
+        o_ref[0] = out.reshape(o_ref.shape[1], o_ref.shape[2])
+
+
+def paged_attn_decode(q, k_pages, v_pages, block_table, t, *, window=0,
+                      softcap: float = 0.0,
+                      interpret: bool | None = None) -> jax.Array:
+    """Single-token paged decode attention.
+
+    q [B, Hq, hd] (post-RoPE); k_pages/v_pages [NP, ps, Hkv, hd] (one
+    layer's pool, the new token already scattered in); block_table [B, P]
+    int32; t scalar or [B] int32 (current position per row); window a
+    traced int32 scalar (0 = global). Returns fp32 [B, Hq, hd] — the
+    pre-`wo` attention output, matching _decode_sdpa's epilogue dtype."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, Hq, hd = q.shape
+    Hkv = k_pages.shape[2]
+    if Hq % Hkv:
+        raise ValueError(f"num_heads={Hq} must be a multiple of "
+                         f"num_kv_heads={Hkv}")
+    t_vec = jnp.broadcast_to(jnp.asarray(t, jnp.int32).reshape(-1), (B,))
+    return _paged_attn_decode(q, k_pages, v_pages, block_table, t_vec,
+                              jnp.asarray(window, jnp.int32),
+                              softcap=float(softcap), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def _paged_attn_decode(q, k_pages, v_pages, block_table, t_vec, window, *,
+                       softcap, interpret):
+    B, Hq, hd = q.shape
+    NP, ps, Hkv, _ = k_pages.shape
+    P = block_table.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / (hd ** 0.5)
+    bt = block_table.astype(jnp.int32)
+    tv = t_vec.astype(jnp.int32)
+    wv = window.astype(jnp.int32).reshape(1)
+    q, k_pages, v_pages, bt, tv, wv = replicate_for_gspmd(
+        q, k_pages, v_pages, bt, tv, wv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, Hq, hd), lambda b, j, bt, tv, wv: (b, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, hd),
+                         lambda b, j, bt, tv, wv: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, hd),
+                         lambda b, j, bt, tv, wv: (bt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, hd), lambda b, j, bt, tv, wv: (b, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((Hkv, G), jnp.float32),
+                        pltpu.VMEM((Hkv, G), jnp.float32),
+                        pltpu.VMEM((Hkv, G, hd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, ps=ps, num_pages=P,
+                          softcap=softcap, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), jnp.float32),
+        interpret=interpret,
+    )(bt, tv, wv, q, k_pages, v_pages)
+
+
+# -------------------------------------------------------------- chunk prefill
+
+def _chunk_kernel(bt_ref, sv_ref, kl_ref, wv_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, ps: int, num_pages: int,
+                  softcap: float, scale: float):
+    """Grid (b, j): one [Cs]-query chunk per batch row against the row's
+    pages. Scalar-prefetched: block table [B, P], start [1], kv_len [1],
+    window [1]."""
+    b, j = pl.program_id(0), pl.program_id(1)
+    start = sv_ref[0]
+    kvl = kl_ref[0]
+    w = wv_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    base = j * ps
+    # queries sit at start..start+Cs-1 < kv_len; a page is live iff it can
+    # hold a key some query attends: k_pos < kv_len and (window) k_pos
+    # reaches past the EARLIEST query's window start.
+    live = base < kvl
+    live = jnp.logical_and(
+        live, jnp.where(w > 0, base + ps - 1 > start - w, True))
+
+    @pl.when(live)
+    def _attend():
+        q = q_ref[0]                                   # [Cs, Hq, hd]
+        k = k_ref[0]                                   # [ps, Hkv, hd]
+        v = v_ref[0]
+        Cs, Hkv, G = m_ref.shape
+        hd = q.shape[-1]
+        qg = q.reshape(Cs, Hkv, G, hd)
+        s = jnp.einsum("chgd,phd->chgp", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = base + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, 1, ps), 3)               # [1,1,1,ps]
+        q_pos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (Cs, 1, 1, 1), 0)               # [Cs,1,1,1]
+        msk = jnp.logical_and(k_pos < kvl, k_pos <= q_pos)
+        msk = jnp.logical_and(msk, jnp.where(w > 0, k_pos > q_pos - w, True))
+        s = jnp.where(msk, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+            "chgp,phd->chgd", p.astype(v.dtype), v,
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == num_pages - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        out = acc_ref[...] / l[..., None]               # [Cs, Hkv, G, hd]
+        o_ref[0] = out.reshape(o_ref.shape[1], o_ref.shape[2], o_ref.shape[3])
+
+
+def paged_attn_chunk(q, k_pages, v_pages, block_table, start, kv_len, *,
+                     window=0, softcap: float = 0.0,
+                     interpret: bool | None = None) -> jax.Array:
+    """Chunked-prefill attention over a paged pool.
+
+    q [B, Cs, Hq, hd] (post-RoPE, the chunk's K/V already scattered into
+    the pool's pages); block_table [B, P]; start / kv_len traced int32
+    scalars (chunk-absolute start, total valid key count — pads in the
+    last chunk carry q_pos >= kv_len and are discarded by the caller).
+    Returns fp32 [B, Cs, Hq, hd]."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, Cs, Hq, hd = q.shape
+    Hkv = k_pages.shape[2]
+    if Hq % Hkv:
+        raise ValueError(f"num_heads={Hq} must be a multiple of "
+                         f"num_kv_heads={Hkv}")
+    return _paged_attn_chunk(q, k_pages, v_pages, block_table,
+                             jnp.asarray(start, jnp.int32),
+                             jnp.asarray(kv_len, jnp.int32),
+                             jnp.asarray(window, jnp.int32),
+                             softcap=float(softcap), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def _paged_attn_chunk(q, k_pages, v_pages, block_table, start, kv_len,
+                      window, *, softcap, interpret):
+    B, Cs, Hq, hd = q.shape
+    NP, ps, Hkv, _ = k_pages.shape
+    P = block_table.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / (hd ** 0.5)
+    bt = block_table.astype(jnp.int32)
+    sv = start.astype(jnp.int32).reshape(1)
+    kl = kv_len.astype(jnp.int32).reshape(1)
+    wv = window.astype(jnp.int32).reshape(1)
+    q, k_pages, v_pages, bt, sv, kl, wv = replicate_for_gspmd(
+        q, k_pages, v_pages, bt, sv, kl, wv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, Cs, Hq, hd),
+                         lambda b, j, bt, sv, kl, wv: (b, 0, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, hd),
+                         lambda b, j, bt, sv, kl, wv: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, hd),
+                         lambda b, j, bt, sv, kl, wv: (bt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Cs, Hq, hd),
+                               lambda b, j, bt, sv, kl, wv: (b, 0, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((Cs, Hkv, G), jnp.float32),
+                        pltpu.VMEM((Cs, Hkv, G), jnp.float32),
+                        pltpu.VMEM((Cs, Hkv, G, hd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_chunk_kernel, ps=ps, num_pages=P,
+                          softcap=softcap, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Cs, Hq, hd), jnp.float32),
+        interpret=interpret,
+    )(bt, sv, kl, wv, q, k_pages, v_pages)
+
+
+# ------------------------------------------------------------ traffic model
+
+def page_bytes(cfg, page_size: int) -> int:
+    """HBM bytes one physical page costs to stage (K + V), per layer."""
+    hd = cfg.resolved_head_dim()
+    item = jnp.dtype(cfg.dtype).itemsize
+    return 2 * page_size * cfg.num_kv_heads * hd * item
+
+
+def decode_tick_pages(t_host, active, page_size: int, num_slots: int,
+                      pages_per_slot: int) -> tuple[int, int]:
+    """Deterministic per-tick page-traffic model for one decode tick:
+    (kernel_pages, gather_pages). The kernel stages each active row's live
+    pages — floor(t/ps)+1 — while the gather re-materializes every block
+    table entry of every slot. Pure host arithmetic; what the
+    serve_throughput `paged_attn` section (and its regression gate) uses."""
+    live = sum(int(t_host[i]) // page_size + 1
+               for i in range(num_slots) if active[i])
+    return live, num_slots * pages_per_slot

@@ -188,7 +188,15 @@ def state_spec(path, leaf, cfg, mesh, batch: int) -> P:
         # map (the decode gather may touch pages living on any replica)
         return P()
     if k0 in ("k_pages", "v_pages"):              # [L, NP, ps, h, hd]
-        # paged pool: physical pages over the data-parallel axes, the page
+        from repro.kernels.paged_attn import resolve_mode
+        if resolve_mode(cfg) == "kernel":
+            # Pallas paged-attention kernel: each grid step stages one WHOLE
+            # page into VMEM, so the page interior must stay contiguous —
+            # pages over the data-parallel axes, kv heads over "model" (the
+            # Megatron head split the kernel's GQA grouping preserves)
+            return P(None, _maybe(mesh, dp, shape[1]), None,
+                     _maybe(mesh, "model", shape[3]), None)
+        # gather path: physical pages over the data-parallel axes, the page
         # interior over "model" (the same S-dim flash-decoding split as the
         # dense rule, one page at a time)
         return P(None, _maybe(mesh, dp, shape[1]),

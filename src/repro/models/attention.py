@@ -408,7 +408,13 @@ def attn_decode(
     attention gathers the slot's pages back into the dense [B, P*ps]
     logical layout — positions beyond `t` (including anything routed to the
     null page) are masked before the softmax, so the paged step is
-    bit-identical to the dense one."""
+    bit-identical to the dense one.
+
+    Which paged realization runs is cfg.paged_attn (resolved by
+    kernels/paged_attn.py::resolve_mode): "kernel" walks the block table
+    inside a Pallas grid — per-tick HBM traffic scales with each row's LIVE
+    pages instead of max_tokens — while "gather" keeps the dense
+    re-materialization below (the bit-exact escape hatch)."""
     B = x_t.shape[0]
     hd = cfg.resolved_head_dim()
     nq, nkv = cfg.num_heads, cfg.num_kv_heads
@@ -443,6 +449,14 @@ def attn_decode(
         page = block_table[rows, t_vec // ps]                       # [B]
         cache_k = cache_k.at[page, t_vec % ps].set(k[:, 0].astype(cache_k.dtype))
         cache_v = cache_v.at[page, t_vec % ps].set(v[:, 0].astype(cache_v.dtype))
+        from repro.kernels import paged_attn as PAGED
+        if PAGED.resolve_mode(cfg) == "kernel":
+            out = PAGED.paged_attn_decode(
+                q[:, 0], cache_k, cache_v, block_table, t_vec,
+                window=jnp.asarray(window, jnp.int32),
+                softcap=cfg.logit_softcap)[:, None]          # [B,1,Hq,hd] f32
+            out = out.astype(x_t.dtype).reshape(B, 1, nq * hd) @ params["wo"]
+            return out, cache_k, cache_v
         P = block_table.shape[1]
         Smax = P * ps
         att_k = cache_k[block_table].reshape(B, Smax, nkv, hd)
@@ -460,19 +474,28 @@ def attn_decode(
 def attn_chunk(
     params: dict,
     x: jax.Array,                 # [B, Cs, D] one prompt chunk
-    cache_k: jax.Array,           # [B, Smax, Hkv, hd] dense KV cache
-    cache_v: jax.Array,
+    cache_k: jax.Array,           # [B, Smax, Hkv, hd] dense KV cache — or,
+    cache_v: jax.Array,           #   with block_table, a pool [NP,ps,Hkv,hd]
     start,                        # traced int32: absolute position of chunk[0]
     *,
     cfg,
     window=0,
     kv_len=None,                  # traced int32: keys >= kv_len masked
+    block_table=None,             # [B, P] int32 page ids (paged KV pool)
 ) -> tuple:
     """Chunked-prefill attention: append one prompt chunk to a dense KV
     cache and attend its queries over everything cached so far (earlier
     chunks + the causal prefix of this one). `start` is traced, so one
     compile serves every chunk of every prompt; the last (right-padded)
-    chunk rides in with `kv_len = start + valid` so pad keys never score."""
+    chunk rides in with `kv_len = start + valid` so pad keys never score.
+
+    With `block_table` the caches are a shared page pool: the chunk's K/V
+    scatter into the pages backing positions start..start+Cs-1 (pad
+    positions past the row's allocation map to the null page 0 — their
+    writes are unreachable and their keys sit past kv_len anyway), and
+    attention runs over the prefix's pages — in-kernel (cfg.paged_attn
+    "kernel") or via a transient dense gather (the fallback, bit-exact vs
+    the dense chunk path since masked stale pages contribute exactly 0)."""
     B, Cs, _ = x.shape
     hd = cfg.resolved_head_dim()
     nq, nkv = cfg.num_heads, cfg.num_kv_heads
@@ -493,16 +516,39 @@ def attn_chunk(
     q = apply_rope(q, cos[:, None, :], sin[:, None, :])
     k = apply_rope(k, cos[:, None, :], sin[:, None, :])
 
-    cache_k = jax.lax.dynamic_update_slice(
-        cache_k, k.astype(cache_k.dtype), (0, positions[0], 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(
-        cache_v, v.astype(cache_v.dtype), (0, positions[0], 0, 0))
+    if block_table is None:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, positions[0], 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, positions[0], 0, 0))
+        att_k, att_v = cache_k, cache_v
+        Smax = cache_k.shape[1]
+    else:
+        ps = cache_k.shape[1]
+        rows = jnp.arange(B)
+        pages = block_table[rows[:, None], positions[None, :] // ps]  # [B,Cs]
+        cache_k = cache_k.at[pages, positions[None, :] % ps].set(
+            k.astype(cache_k.dtype))
+        cache_v = cache_v.at[pages, positions[None, :] % ps].set(
+            v.astype(cache_v.dtype))
+        P = block_table.shape[1]
+        Smax = P * ps
+        from repro.kernels import paged_attn as PAGED
+        if PAGED.resolve_mode(cfg) == "kernel":
+            kvl = jnp.asarray(Smax if kv_len is None else kv_len, jnp.int32)
+            out = PAGED.paged_attn_chunk(
+                q, cache_k, cache_v, block_table, positions[0], kvl,
+                window=jnp.asarray(window, jnp.int32),
+                softcap=cfg.logit_softcap)                 # [B,Cs,Hq,hd] f32
+            out = out.astype(x.dtype).reshape(B, Cs, nq * hd) @ params["wo"]
+            return out, cache_k, cache_v
+        att_k = cache_k[block_table].reshape(B, Smax, nkv, hd)
+        att_v = cache_v[block_table].reshape(B, Smax, nkv, hd)
 
-    Smax = cache_k.shape[1]
     k_pos = jnp.arange(Smax, dtype=jnp.int32)
     kvl = jnp.asarray(Smax if kv_len is None else kv_len, jnp.int32)
     out = sdpa_chunked(
-        q, cache_k, cache_v, positions, k_pos,
+        q, att_k, att_v, positions, k_pos,
         jnp.asarray(window, jnp.int32), kvl,
         causal=True, softcap=cfg.logit_softcap)
     out = out.reshape(B, Cs, nq * hd) @ params["wo"]

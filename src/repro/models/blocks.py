@@ -161,19 +161,22 @@ def attn_block_decode(params: dict, x_t: jax.Array, cache_k, cache_v, t, *,
 
 def attn_block_chunk(params: dict, x: jax.Array, cache_k, cache_v, start, *,
                      cfg, window=0, valid_len=None, group_of_expert=None,
-                     group_members=None, go_cache=None) -> tuple:
+                     group_members=None, go_cache=None,
+                     block_table=None) -> tuple:
     """Chunked-prefill block: append one prompt chunk (x [B,Cs,d] at
-    absolute positions start..start+Cs-1) to the dense KV cache, then run
-    the FFN sublayer over the chunk. For expert-choice MoE the chunk's
-    routing (capacity from the CHUNK length) builds a per-chunk GO cache
-    that merges into the accumulated one — `valid_len` (chunk-relative)
-    masks the last chunk's right-padding out of the routing, so pads never
-    enter the cache. Returns (x, ck, cv, go_cache, aux)."""
+    absolute positions start..start+Cs-1) to the KV cache — dense, or with
+    `block_table` the shared paged pool — then run the FFN sublayer over
+    the chunk. For expert-choice MoE the chunk's routing (capacity from the
+    CHUNK length) builds a per-chunk GO cache that merges into the
+    accumulated one — `valid_len` (chunk-relative) masks the last chunk's
+    right-padding out of the routing, so pads never enter the cache.
+    Returns (x, ck, cv, go_cache, aux)."""
     start = jnp.asarray(start, jnp.int32)
     vl = jnp.asarray(x.shape[1] if valid_len is None else valid_len, jnp.int32)
     h = rmsnorm(params["ln1"], x, cfg.norm_eps)
     a, ck, cv = ATT.attn_chunk(params["attn"], h, cache_k, cache_v, start,
-                               cfg=cfg, window=window, kv_len=start + vl)
+                               cfg=cfg, window=window, kv_len=start + vl,
+                               block_table=block_table)
     x = x + a
     x, aux = _ffn_apply(params, x, cfg, group_of_expert, group_members, vl)
     if go_cache is not None:

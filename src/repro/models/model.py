@@ -545,6 +545,10 @@ def write_decode_slot(state: dict, slot, src: dict, page_ids=None) -> dict:
         L, _, ps, h, hd = st["k_pages"].shape
         P = pid.shape[0]
         for key, srck in (("k_pages", "k"), ("v_pages", "v")):
+            if srck not in src:
+                # paged-native chunk prefill: the chunk run already scattered
+                # its KV into the pool's pages — nothing to splat here
+                continue
             assert src[srck].shape[2] == P * ps, \
                 f"{srck}: prefill len {src[srck].shape[2]} != pool " \
                 f"max_tokens {P * ps} (prefill must use the pool's max_len)"
@@ -860,7 +864,14 @@ def prefill_chunk(params: dict, state: dict, tokens: jax.Array, cfg,
 
     Returns (state, logits) where logits come from chunk position
     valid_len - 1 — only meaningful on the final chunk. state["t"] lands on
-    start + valid_len. Attention family only."""
+    start + valid_len. Attention family only.
+
+    A PAGED state (carries "block_table"/"k_pages"/"v_pages" instead of
+    dense "k"/"v" rows — the engine threads the pool's page store through a
+    batch-1 view) prefills directly into the pool's pages: each chunk
+    scatters its KV to the pages backing its positions and attends over the
+    prefix's pages (attention.py::attn_chunk paged path), so chunked
+    prefill never materializes a dense [1, max_tokens] KV copy."""
     assert paged_supported(cfg), \
         "chunked prefill is attention-family only (recurrent archs prefill " \
         "step-by-step; enc-dec/vlm archs are one-shot)"
@@ -872,6 +883,9 @@ def prefill_chunk(params: dict, state: dict, tokens: jax.Array, cfg,
     gm = expert_group_members(cfg)
     x = params["embed"][tokens]
     has_go = "go" in state
+    paged = "block_table" in state
+    kk, vk = ("k_pages", "v_pages") if paged else ("k", "v")
+    bt = state["block_table"] if paged else None
 
     def body(carry, xs):
         x, K, V, go, l = carry
@@ -883,7 +897,8 @@ def prefill_chunk(params: dict, state: dict, tokens: jax.Array, cfg,
             go) if has_go else None
         x, ck, cv, go_l, _ = B.attn_block_chunk(
             lp, x, ck, cv, start, cfg=cfg, window=w, valid_len=vl,
-            group_of_expert=goe, group_members=gm, go_cache=go_l)
+            group_of_expert=goe, group_members=gm, go_cache=go_l,
+            block_table=bt)
         K = jax.lax.dynamic_update_index_in_dim(K, ck.astype(K.dtype), l, 0)
         V = jax.lax.dynamic_update_index_in_dim(V, cv.astype(V.dtype), l, 0)
         if has_go:
@@ -892,12 +907,12 @@ def prefill_chunk(params: dict, state: dict, tokens: jax.Array, cfg,
                     full, new.astype(full.dtype), l, 0), go, go_l)
         return (x, K, V, go, l + 1), None
 
-    carry0 = (x, state["k"], state["v"], state.get("go"),
+    carry0 = (x, state[kk], state[vk], state.get("go"),
               jnp.zeros((), jnp.int32))
     (x, K, V, go, _), _ = jax.lax.scan(
         body, carry0, (params["layers"], windows))
     state = dict(state)
-    state["k"], state["v"] = K, V
+    state[kk], state[vk] = K, V
     if has_go:
         state["go"] = go
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)

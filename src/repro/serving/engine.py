@@ -136,16 +136,25 @@ _jit_prefill = jax.jit(prefill, static_argnames=("cfg", "max_len"))
 _jit_prefill_chunk = jax.jit(_model_prefill_chunk, static_argnames="cfg")
 
 
+def _env_on(name: str) -> bool:
+    return os.environ.get(name, "").strip().lower() not in \
+        ("", "0", "false", "no")
+
+
 @dataclass
 class _ChunkJob:
     """One in-flight chunked prefill: a claimed slot, reserved pages, and a
-    private batch-1 dense decode state that fills one chunk per tick."""
+    private batch-1 decode state that fills one chunk per tick. Dense pools
+    carry private KV rows in `state`; paged pools instead carry the claimed
+    block-table row (`page_row`) and thread the pool's page store through
+    each chunk run — the prefill scatters straight into the pool's pages."""
     req: Request
     slot: int
     state: dict
     prompt: np.ndarray            # right-padded to a chunk multiple
     pos: int = 0                  # next chunk start
     logits: object = None         # last chunk's logits
+    page_row: np.ndarray | None = None
 
 
 class ServingEngine:
@@ -158,11 +167,10 @@ class ServingEngine:
                  page_size: int = 16, num_pages: int | None = None,
                  prefill_chunk: int = 0):
         self.params = params
-        self.cfg = cfg
         self.mesh = mesh
-        force = os.environ.get("REPRO_FORCE_PAGED", "").strip().lower()
-        if not paged and force not in ("", "0", "false", "no") \
-                and paged_supported(cfg):
+        force = _env_on("REPRO_FORCE_PAGED") or \
+            _env_on("REPRO_FORCE_PAGED_KERNEL")
+        if not paged and force and paged_supported(cfg):
             # CI knob: run any supporting engine paged. Snap the page size
             # to a common divisor of max_tokens (and prefill_chunk, when
             # chunking is on — chunks must stay page-granular) so arbitrary
@@ -174,6 +182,17 @@ class ServingEngine:
             if g >= 4:
                 paged = True
                 page_size = g
+        # Paged-attention realization knobs resolve into cfg HERE, before
+        # anything jit-keyed on cfg is built: cfg is the static compile key,
+        # so env reads at trace time would silently split/miss caches.
+        # REPRO_FORCE_PAGED_KERNEL is the CI lane (paged pool + Pallas
+        # kernel everywhere); REPRO_PAGED_GATHER is the escape hatch back to
+        # the dense-gather path and wins when both are set.
+        if _env_on("REPRO_FORCE_PAGED_KERNEL") and paged_supported(cfg):
+            cfg = cfg.with_overrides(paged_attn="kernel")
+        if _env_on("REPRO_PAGED_GATHER"):
+            cfg = cfg.with_overrides(paged_attn="gather")
+        self.cfg = cfg
         self.pool = SlotPool(cfg, num_slots, max_tokens, extras, mesh=mesh,
                              paged=paged, page_size=page_size,
                              num_pages=num_pages)
@@ -416,14 +435,16 @@ class ServingEngine:
         self._install(slot, req, slot_state, logits, done)
 
     def _install(self, slot: int, req: Request, slot_state, logits,
-                 done: list[Request]) -> None:
+                 done: list[Request], page_row=None) -> None:
         """Shared tail of one-shot and chunked admission: emit the first
         token, splat the prefilled state into the pool row, handle an
-        immediate EOS/length finish."""
+        immediate EOS/length finish. `page_row` marks a paged chunk run
+        whose pages are already claimed and filled."""
         first, key_next = self._first_token(req, logits)
         req.admit_step = self.step_count
         req.tokens.append(first)
-        self.pool.admit(slot, req, slot_state, first, key=key_next)
+        self.pool.admit(slot, req, slot_state, first, key=key_next,
+                        page_row=page_row)
         self._note_occupancy()       # before a possible instant retirement
         if self.pool.remaining[slot] <= 0 or \
                 (req.eos_id is not None and first == req.eos_id):
@@ -433,15 +454,29 @@ class ServingEngine:
 
     def _start_chunk_job(self, slot: int, req: Request) -> None:
         """Claim `slot` and the request's worst-case pages, then begin
-        filling a private batch-1 dense state one chunk per tick."""
+        filling one chunk per tick. Dense pools fill a private batch-1
+        state; paged pools claim the request's pages up front
+        (claim_chunk_pages) and prefill straight into the pool's page store
+        — no dense [1, max_tokens] KV copy ever exists."""
         Cs = self.prefill_chunk
         padded = -(-req.prompt_len // Cs) * Cs
         prompt = np.pad(req.prompt, (0, padded - req.prompt_len))
-        state = init_decode_state(self.cfg, 1, self.pool.max_tokens,
-                                  req.extras or {})
-        self.pool.reserve_pages(req)
+        page_row = None
+        if self.pool.paged:
+            page_row = self.pool.claim_chunk_pages(req)
+            # batch-1 paged view: position/GO/block-table only — the page
+            # store itself is threaded in from the pool at each chunk tick
+            state = init_decode_state(self.cfg, 1, self.pool.max_tokens,
+                                      req.extras or {},
+                                      paged=(1, self.pool.page_size))
+            del state["k_pages"], state["v_pages"]
+            state["block_table"] = jnp.asarray(page_row, jnp.int32)[None, :]
+        else:
+            state = init_decode_state(self.cfg, 1, self.pool.max_tokens,
+                                      req.extras or {})
+            self.pool.reserve_pages(req)
         self._chunk_job = _ChunkJob(req=req, slot=slot, state=state,
-                                    prompt=prompt)
+                                    prompt=prompt, page_row=page_row)
         self._advance_chunk_job_once()
 
     def _advance_chunk_job(self, done: list[Request]) -> None:
@@ -449,17 +484,34 @@ class ServingEngine:
         job = self._chunk_job
         if job is not None and job.pos >= len(job.prompt):
             self._chunk_job = None
-            self._install(job.slot, job.req, job.state, job.logits, done)
+            self._install(job.slot, job.req, job.state, job.logits, done,
+                          page_row=job.page_row)
 
     def _advance_chunk_job_once(self) -> None:
         job = self._chunk_job
         Cs = self.prefill_chunk
         chunk = job.prompt[job.pos:job.pos + Cs]
         valid = min(Cs, job.req.prompt_len - job.pos)
-        job.state, job.logits = _jit_prefill_chunk(
-            self.params, job.state, jnp.asarray(chunk, jnp.int32)[None, :],
-            self.cfg, jnp.asarray(job.pos, jnp.int32),
-            jnp.asarray(valid, jnp.int32))
+        paged = job.page_row is not None
+        if paged:
+            # thread the pool's page store through the chunk run: the chunk
+            # scatters its KV into the job's claimed pages (disjoint from
+            # every active slot's), interleaved decode ticks touch only
+            # other pages, so ownership transfers cleanly back each tick
+            job.state["k_pages"] = self.pool.state["k_pages"]
+            job.state["v_pages"] = self.pool.state["v_pages"]
+        args = (self.params, job.state,
+                jnp.asarray(chunk, jnp.int32)[None, :], self.cfg,
+                jnp.asarray(job.pos, jnp.int32), jnp.asarray(valid, jnp.int32))
+        if paged and self.mesh is not None:
+            with self.mesh:
+                job.state, job.logits = _jit_prefill_chunk(*args)
+        else:
+            job.state, job.logits = _jit_prefill_chunk(*args)
+        if paged:
+            self.pool.state["k_pages"] = job.state.pop("k_pages")
+            self.pool.state["v_pages"] = job.state.pop("v_pages")
+            self.pool.state = self.pool._pin(self.pool.state)
         job.pos += Cs
         self.chunk_ticks += 1
 

@@ -26,11 +26,20 @@ from __future__ import annotations
 class PageAllocator:
     """Fixed-pool free-list allocator with worst-case reservations."""
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int,
+                 max_tokens: int | None = None):
         if num_pages < 2:
             raise ValueError("need at least 2 pages (page 0 is the null page)")
         if page_size < 1:
             raise ValueError("page_size must be >= 1")
+        if max_tokens is not None and max_tokens % page_size:
+            # fail fast: a ragged last page would make every worst-case
+            # reservation (ceil((prompt + max_new) / page_size)) silently
+            # over- or under-count — deadlock freedom rests on those counts
+            raise ValueError(
+                f"max_tokens={max_tokens} is not a multiple of "
+                f"page_size={page_size}: the worst-case page reservation "
+                "would miscount the last partial page")
         self.num_pages = num_pages
         self.page_size = page_size
         # LIFO free list (page 1 handed out first — keeps smoke traces easy

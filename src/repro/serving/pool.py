@@ -23,17 +23,19 @@ page boundary, right before the decode tick that writes it. The PERSISTENT
 KV residency then caps out at `num_pages * page_size` tokens regardless of
 num_slots x max_tokens, which is what lets the paged engine run strictly
 more concurrent streams than the dense one on the same cache budget. (The
-decode gather still materializes a TRANSIENT dense-layout K/V per layer
-per tick — a residency win, not a bandwidth one; the fused gather-attention
-kernel is a ROADMAP item.) GO rows stay slot-resident (they are
+BANDWIDTH win rides on top: the Pallas paged-attention kernel,
+kernels/paged_attn.py, walks the block table directly so per-tick traffic
+scales with live pages; the gather fallback re-materializes a TRANSIENT
+dense-layout K/V per layer per tick.) GO rows stay slot-resident (they are
 [E, k]-shaped, not sequence-shaped); their score reset to -inf happens on
 the allocator's free path at retirement.
 
 With a `mesh`, the pool's tensors are laid out by the rule-based sharder
 (`launch/sharding.py::serve_state_shardings`): slot rows over the
 data-parallel axes, KV sequence / GO expert dims over "model" (paged: the
-page dim over data-parallel, the page interior over "model"; block tables
-replicated). Slot writes and resets land on the sharded arrays in place;
+page dim over data-parallel, then the page interior over "model" on the
+gather path or kv heads over "model" on the kernel path — the kernel
+stages whole pages; block tables replicated). Slot writes and resets land on the sharded arrays in place;
 after each the state is pinned back to the canonical shardings so the
 jitted decode step never sees a drifted layout (sharding drift means silent
 recompiles).
@@ -95,7 +97,8 @@ class SlotPool:
                     dpn *= axis_size(mesh, a)
                 num_pages += -num_pages % dpn
             self.num_pages = num_pages
-            self.alloc = PageAllocator(num_pages, page_size)
+            self.alloc = PageAllocator(num_pages, page_size,
+                                       max_tokens=max_tokens)
             # host mirror of the device block tables ([B, P] int32)
             self.block_table = np.zeros(
                 (num_slots, max_tokens // page_size), np.int32)
@@ -169,21 +172,41 @@ class SlotPool:
         if self.paged:
             self.alloc.reserve(req.request_id, self.pages_needed(req))
 
+    def claim_chunk_pages(self, req: Request) -> np.ndarray:
+        """Chunk-run page claim: reserve the request's worst case AND
+        allocate the pages covering prompt + first decode write up front,
+        so every prefill chunk scatters straight into the pool's pages.
+        Returns the request's full block-table row (pass it back through
+        `admit(page_row=)` when the run completes)."""
+        assert self.paged, "chunk-run page claims are paged-pool only"
+        self.reserve_pages(req)
+        n0 = pages_for_tokens(req.prompt_len + 1, self.page_size)
+        ids = self.alloc.alloc(req.request_id, n0)
+        row = np.zeros(self.block_table.shape[1], np.int32)
+        row[:n0] = ids
+        return row
+
     def admit(self, slot: int, req: Request, slot_state: dict,
-              first_token: int, key=None) -> None:
+              first_token: int, key=None, *, page_row=None) -> None:
         """Install a prefilled request into a free row: write its KV + GO
         cache entries and position in place, arm its first decode input.
         `key` is the slot's sampling PRNG state (already advanced past the
         first token) for temperature > 0 requests. Paged pools allocate the
         pages covering the prompt and the first decode write here; later
-        pages arrive lazily via grow_active()."""
+        pages arrive lazily via grow_active(). A chunked-prefill run that
+        already claimed its pages (claim_chunk_pages) passes its block-table
+        row via `page_row` — its KV sits in the pool's pages, so the write
+        splats only position/GO state."""
         assert self.owner[slot] is None, f"slot {slot} is occupied"
         if self.paged:
-            self.reserve_pages(req)      # idempotent after a chunk-run claim
-            n0 = pages_for_tokens(req.prompt_len + 1, self.page_size)
-            ids = self.alloc.alloc(req.request_id, n0)
-            row = np.zeros(self.block_table.shape[1], np.int32)
-            row[:n0] = ids
+            if page_row is None:
+                self.reserve_pages(req)
+                n0 = pages_for_tokens(req.prompt_len + 1, self.page_size)
+                ids = self.alloc.alloc(req.request_id, n0)
+                row = np.zeros(self.block_table.shape[1], np.int32)
+                row[:n0] = ids
+            else:
+                row = np.asarray(page_row, np.int32)
             self.block_table[slot] = row
             self.state = self._pin(_write_slot(
                 self.state, slot, slot_state, jnp.asarray(row)))

@@ -1,10 +1,14 @@
-"""GO cache (C4): decode step vs naive full-recompute oracle."""
+"""GO cache (C4): decode step vs naive full-recompute oracle, plus the
+chunked-prefill merge property — any chunk split reproduces the one-shot
+expert-choice cache exactly, ties included."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+from conftest import given, settings, st
 
 from repro.core import moe as MOE
 from repro.core.go_cache import (GOCache, go_cache_bytes, go_cache_init,
+                                 go_cache_merge, go_cache_prefill,
                                  go_cache_step)
 
 
@@ -70,6 +74,53 @@ def test_at_most_one_slot_changes_per_expert_per_step():
         changed = (res.cache.scores != cache.scores).sum(axis=-1)  # [1, E]
         assert int(changed.max()) <= 1
         cache = res.cache
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_go_cache_merge_reproduces_one_shot(data):
+    """Property: splitting a prompt into ARBITRARY chunks, building each
+    chunk's cache (per-chunk expert-choice top-min(len, k)) and folding
+    old-first through go_cache_merge reproduces the one-shot prefill cache
+    EXACTLY — scores, token ids AND stored order. Scores draw from a
+    4-value set so capacity ties are common: the stable-top_k tie-break
+    (earlier operand wins on merge, lower index wins in-chunk) must agree
+    with the one-shot lower-global-index order, or chunked streams would
+    depend on the chunking."""
+    E, d = 3, 4
+    T = data.draw(st.integers(1, 20), label="T")
+    k = data.draw(st.integers(1, 4), label="k")
+    flat = data.draw(st.lists(st.integers(0, 3), min_size=T * E,
+                              max_size=T * E), label="scores")
+    scores = np.asarray(flat, np.float32).reshape(T, E) / 3.0
+    ncuts = data.draw(st.integers(0, min(4, T - 1)), label="ncuts")
+    cuts = sorted(data.draw(
+        st.lists(st.integers(1, T - 1), min_size=ncuts, max_size=ncuts,
+                 unique=True), label="cuts")) if ncuts else []
+    bounds = [0] + cuts + [T]
+    # deterministic per-(token, expert) outputs, like the weighted expert
+    # outputs the real prefill feeds in
+    outs = jnp.asarray(
+        np.random.default_rng(0).normal(size=(T, E, d)), jnp.float32)
+
+    def chunk_cache(lo, hi, cap):
+        cap = min(cap, hi - lo)
+        s = jnp.asarray(scores[lo:hi].T)[None]                # [1, E, n]
+        cs, ci = jax.lax.top_k(s, cap)                        # [1, E, cap]
+        ct = ci[0] + lo                                       # global ids
+        eo = outs[ct, jnp.arange(E)[:, None]][None]           # [1, E, cap, d]
+        return go_cache_prefill(None, None, eo, ct[None], cs, k)
+
+    one = chunk_cache(0, T, T)
+    acc = go_cache_init(1, E, k, d, jnp.float32)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        acc = go_cache_merge(acc, chunk_cache(lo, hi, k))
+    np.testing.assert_array_equal(np.asarray(one.scores),
+                                  np.asarray(acc.scores))
+    np.testing.assert_array_equal(np.asarray(one.token_ids),
+                                  np.asarray(acc.token_ids))
+    np.testing.assert_array_equal(np.asarray(one.outputs),
+                                  np.asarray(acc.outputs))
 
 
 def test_cache_size_static():

@@ -85,6 +85,29 @@ def test_pages_for_tokens():
     assert pages_for_tokens(24, 8) == 3
 
 
+def test_allocator_rejects_ragged_max_tokens():
+    """Regression: max_tokens not a multiple of page_size must fail FAST at
+    construction — a ragged last page would make every worst-case
+    reservation silently over- or under-count, and deadlock freedom rests
+    on those counts. The pool and engine surface the same error."""
+    with pytest.raises(ValueError, match="multiple of"):
+        PageAllocator(8, 8, max_tokens=20)
+    PageAllocator(8, 8, max_tokens=24)        # exact multiple is fine
+    PageAllocator(8, 8)                       # legacy: no capacity given
+
+    from repro.configs.registry import get_config
+    from repro.serving.pool import SlotPool
+    cfg = get_config("llama_moe_4_16", smoke=True)
+    with pytest.raises(ValueError, match="multiple of"):
+        SlotPool(cfg, 2, 20, paged=True, page_size=8)
+    from repro.serving import ServingEngine
+    from repro.models.model import model_init
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="multiple of"):
+        ServingEngine(params, cfg, num_slots=1, max_tokens=20,
+                      paged=True, page_size=8)
+
+
 # --------------------------------------------- pool-level GO-row reset on free
 
 @settings(max_examples=15, deadline=None)
