@@ -21,7 +21,14 @@ Gates:
   * serving (``paged_attn``, deterministic: analytic per-tick page
     traffic): the Pallas paged-attention kernel's HBM attention bytes
     must stay strictly below the gather path's, the kernel/gather token
-    streams must match, and the traffic ratio must not regress.
+    streams must match, and the traffic ratio must not regress;
+  * serving (``preemption``, deterministic: tick turnarounds on a
+    mixed-priority page-starved trace): at least one preemption must
+    fire, the preempting and blocking engines must produce bit-identical
+    token streams (eviction/resume is invisible in the output), the
+    high-priority p95 turnaround in engine ticks must stay strictly
+    below admission blocking, and neither it nor the preemption count
+    may drift against the committed baseline.
 
 Usage:  python benchmarks/check_regression.py \
             --baseline BENCH_moe_path.json --fresh /tmp/bench_fresh.json \
@@ -112,6 +119,7 @@ def check_serve(baseline: dict, fresh: dict) -> list[str]:
                 "deterministic — config/seed changed without a baseline "
                 "refresh?)")
     errs += check_paged_attn(baseline, fresh)
+    errs += check_preemption(baseline, fresh)
     return errs
 
 
@@ -144,6 +152,49 @@ def check_paged_attn(baseline: dict, fresh: dict) -> list[str]:
             errs.append(
                 f"serve: paged_attn traffic_ratio regressed "
                 f"{b_pa['traffic_ratio']} -> {f_pa['traffic_ratio']}")
+    return errs
+
+
+def check_preemption(baseline: dict, fresh: dict) -> list[str]:
+    """Gate the page-pressure preemption section: preemption must actually
+    fire on the starved trace, must be invisible in the token streams
+    (bit-identical to admission blocking), and must strictly improve the
+    high-priority p95 turnaround — all deterministic (tick-based trace,
+    greedy decode, length-based retirement)."""
+    errs = []
+    f_pe = fresh.get("preemption")
+    if f_pe is None:
+        return ["serve: fresh report lacks the preemption section "
+                "(schema drift silently disarmed the preemption gate)"]
+    if "skipped" in f_pe:
+        return []             # arch without a paged path — nothing to gate
+    if f_pe["preempt"]["preemptions"] < 1:
+        errs.append("serve: the page-starved preemption trace fired 0 "
+                    "preemptions — the eviction path went dead")
+    if not f_pe.get("streams_match", False):
+        errs.append("serve: preempting and blocking engines produced "
+                    "different token streams — eviction/resume is no "
+                    "longer bit-identical")
+    hi_p, hi_b = f_pe["preempt"]["hi_p95_turnaround_ticks"], \
+        f_pe["blocking"]["hi_p95_turnaround_ticks"]
+    if not hi_p < hi_b:
+        errs.append(
+            f"serve: preemption must strictly improve the high-priority "
+            f"p95 turnaround: preempt {hi_p} ticks vs blocking {hi_b}")
+    b_pe = baseline.get("preemption")
+    if b_pe is not None and "skipped" not in b_pe:
+        if hi_p > b_pe["preempt"]["hi_p95_turnaround_ticks"]:
+            errs.append(
+                f"serve: preemption hi-class p95 turnaround regressed "
+                f"{b_pe['preempt']['hi_p95_turnaround_ticks']} -> {hi_p} "
+                "ticks")
+        if f_pe["preempt"]["preemptions"] != b_pe["preempt"]["preemptions"]:
+            errs.append(
+                f"serve: preemption count drifted "
+                f"{b_pe['preempt']['preemptions']} -> "
+                f"{f_pe['preempt']['preemptions']} (the trace is "
+                "deterministic — config/seed changed without a baseline "
+                "refresh?)")
     return errs
 
 
@@ -184,6 +235,14 @@ def main() -> None:
                               f"{pa['traffic_ratio']:.3f} (kernel "
                               f"{pa['hbm_kernel_bytes']}B < gather "
                               f"{pa['hbm_gather_bytes']}B)")
+            pe = serve_fresh.get("preemption", {})
+            if "preempt" in pe:
+                serve_msg += (
+                    f"; preemption hi-p95 "
+                    f"{pe['preempt']['hi_p95_turnaround_ticks']} < "
+                    f"{pe['blocking']['hi_p95_turnaround_ticks']} ticks "
+                    f"({pe['preempt']['preemptions']} evictions, "
+                    f"streams_match={pe['streams_match']})")
     if errs:
         for e in errs:
             print(f"REGRESSION: {e}", file=sys.stderr)

@@ -88,7 +88,10 @@ def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
                      prompt_buckets: bool = False, paged: bool = False,
                      page_size: int = 16, num_pages: int | None = None,
                      prefill_chunk: int = 0,
-                     priorities: list | None = None) -> dict:
+                     priorities: list | None = None,
+                     preemption: bool = False, chaos=None,
+                     deadline_s: float | None = None,
+                     max_wall_s: float | None = None) -> dict:
     """Run a list of prompts through the continuous-batching engine.
     With `mesh`, slot rows are sharded across the data-parallel replicas and
     every decode tick runs under the mesh (launch/sharding.py rules).
@@ -98,7 +101,12 @@ def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
     the dense slot rows for the block-table page pool (`page_size`,
     `num_pages` — None keeps the dense token capacity); `prefill_chunk`
     admits long prompts one chunk per tick; `priorities` orders admission
-    (lower = earlier, FIFO within a level).
+    (lower = earlier, FIFO within a level). `preemption` lets a blocked
+    higher-priority admission evict lower-priority streams (paged pools;
+    evicted streams resume bit-identically); `chaos` injects seeded faults
+    (serving/chaos.py); `deadline_s`/`max_wall_s` bound every request's
+    wall clock (TIMEOUT past them). Requests that end in a non-DONE
+    terminal status surface their partial streams.
     Returns per-request token arrays plus engine stats."""
     max_tokens = max_tokens or (
         max(len(p) for p in prompts) + gen_tokens + 1)
@@ -111,14 +119,16 @@ def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
                         max_tokens=max_tokens, extras=extras, mesh=mesh,
                         prompt_buckets=prompt_buckets, paged=paged,
                         page_size=page_size, num_pages=num_pages,
-                        prefill_chunk=prefill_chunk)
+                        prefill_chunk=prefill_chunk, preemption=preemption,
+                        chaos=chaos)
     ids = []
     for i, p in enumerate(prompts):
         step = arrival_steps[i] if arrival_steps else 0
         ids.append(eng.submit(p, gen_tokens, extras=extras,
                               arrival_step=step, temperature=temperature,
                               top_p=top_p,
-                              priority=priorities[i] if priorities else 0))
+                              priority=priorities[i] if priorities else 0,
+                              deadline_s=deadline_s, max_wall_s=max_wall_s))
     t0 = time.time()
     fin = eng.run()
     dt = time.time() - t0
@@ -170,6 +180,21 @@ def main():
     ap.add_argument("--priority", type=int, default=0,
                     help="admission priority for the submitted requests "
                          "(lower = admitted first; FIFO within a level)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="let blocked higher-priority admissions evict "
+                         "lower-priority streams (paged pools; evicted "
+                         "streams resume bit-identically)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request wall budget from submission "
+                         "(0 = unbounded; exceeded -> status TIMEOUT)")
+    ap.add_argument("--max-wall-s", type=float, default=0.0,
+                    help="per-request wall budget from first admission "
+                         "(0 = unbounded; exceeded -> status TIMEOUT)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="seeded fault injection: transient tick failures, "
+                         "admission pressure, forced preemptions "
+                         "(serving/chaos.py; like REPRO_CHAOS=1)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--mesh-model", type=int, default=0,
                     help="run the engine under a smoke mesh with this "
                          "model-axis size (slot rows shard over the rest; "
@@ -212,6 +237,11 @@ def main():
                for _ in range(args.requests)]
     # staggered arrivals: one new request every other engine tick
     arrivals = [2 * i for i in range(args.requests)]
+    chaos = None
+    if args.chaos:
+        from repro.serving import Chaos
+        chaos = Chaos(seed=args.chaos_seed, tick_fail=0.05, pressure=0.05,
+                      preempt=0.05)
     res = serve_continuous(params, cfg, prompts, args.gen,
                            num_slots=args.slots, extras=extras or None,
                            arrival_steps=arrivals, mesh=mesh,
@@ -220,7 +250,10 @@ def main():
                            page_size=args.page_size,
                            num_pages=args.num_pages or None,
                            prefill_chunk=args.chunk_prefill,
-                           priorities=[args.priority] * len(prompts))
+                           priorities=[args.priority] * len(prompts),
+                           preemption=args.preemption, chaos=chaos,
+                           deadline_s=args.deadline_s or None,
+                           max_wall_s=args.max_wall_s or None)
     s = res["stats"]
     print(f"served {s['finished']} requests over {s['steps']} ticks on "
           f"{args.slots} slots in {res['decode_s']:.2f}s "
@@ -229,6 +262,9 @@ def main():
           + (f" [paged ps={s['page_size']} pages={s['num_pages']}]"
              if s["paged"] else "")
           + (f" [chunk ticks {s['chunk_ticks']}]" if s["chunk_ticks"] else ""))
+    print(f"statuses: {s['statuses']}  preemptions: {s['preemptions']} "
+          f"(resumes {s['resumes']})  tick retries: {s['tick_retries']}"
+          + (f"  chaos: {s['chaos']}" if s["chaos"] else ""))
     first = res["tokens"][min(res["tokens"])]
     print("sample:", first[:16])
 

@@ -39,11 +39,19 @@ class StepStats:
 
 
 class StepSupervisor:
+    """Shared by the training loop AND the serving engine's decode tick
+    (serving/engine.py): both steps are deterministic given their inputs,
+    so retrying with the same inputs is always safe. `retry_on` narrows or
+    widens the transient-error classes (RestartRequired is never retried —
+    it IS the give-up signal)."""
+
     def __init__(self, max_retries: int = 2, straggler_factor: float = 3.0,
-                 on_straggler=None):
+                 on_straggler=None,
+                 retry_on: tuple = (RuntimeError, ValueError)):
         self.max_retries = max_retries
         self.straggler_factor = straggler_factor
         self.on_straggler = on_straggler
+        self.retry_on = tuple(retry_on)
         self.stats = StepStats()
 
     def run(self, step_fn, *args, step: int = -1, **kw):
@@ -55,7 +63,9 @@ class StepSupervisor:
                 out = step_fn(*args, **kw)
                 out = _block(out)
                 break
-            except (RuntimeError, ValueError) as e:
+            except self.retry_on as e:
+                if isinstance(e, RestartRequired):
+                    raise
                 attempt += 1
                 self.stats.retries += 1
                 if attempt > self.max_retries:

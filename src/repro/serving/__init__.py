@@ -7,12 +7,18 @@
   pool       fixed-width slot pool owning the pooled decode state —
              dense per-slot KV rows or the paged block-table pool
   engine     jitted masked decode step; admit -> prefill (one-shot or
-             chunked) -> decode -> retire
+             chunked) -> decode -> retire; request-lifecycle fault domain
+             (deadlines, cancel, preemption/resume, NaN quarantine)
+  chaos      seeded fault injector (REPRO_CHAOS lane)
 """
+from repro.serving.chaos import Chaos, ChaosError
 from repro.serving.engine import ServingEngine
 from repro.serving.paging import PageAllocator
 from repro.serving.pool import SlotPool
-from repro.serving.scheduler import FIFOScheduler, Request
+from repro.serving.scheduler import (FIFOScheduler, QueueFull, Request,
+                                     RequestStatus, RequestTooLarge,
+                                     TERMINAL_STATUSES)
 
 __all__ = ["ServingEngine", "SlotPool", "FIFOScheduler", "Request",
-           "PageAllocator"]
+           "PageAllocator", "RequestStatus", "TERMINAL_STATUSES",
+           "QueueFull", "RequestTooLarge", "Chaos", "ChaosError"]

@@ -1,0 +1,111 @@
+"""Seeded fault injection for the serving engine (the chaos lane).
+
+The engine's failure model is only trustworthy if something exercises it:
+this injector forces the faults the fault domain claims to survive —
+transient tick failures (the supervisor must retry), admission pressure
+(the scheduler must delay, not reorder), forced preemptions (the
+snapshot/restore path must stay bit-identical), and poisoned decode state
+(the NaN quarantine must fail ONE slot without touching its cohabitants).
+
+Everything is driven by one seeded numpy Generator, so a chaos run is
+exactly reproducible from its seed — a failing CI lane replays locally.
+
+The ENV-DRIVEN lane (`REPRO_CHAOS=1`, read by the engine at construction)
+must be SEMANTICS-PRESERVING: the whole serving test suite runs under it
+unmodified, so the default injections only perturb *when* work happens
+(retried ticks, delayed admissions, evict-then-resume) — never *what* the
+streams contain. NaN poisoning is NOT semantics-preserving (it turns
+streams into FAILED quarantines), so its env default is 0; dedicated tests
+construct `Chaos(nan=...)` explicitly or call `SlotPool.poison_slot`.
+
+Env knobs (floats are per-tick probabilities):
+  REPRO_CHAOS         master switch (off unless truthy)
+  REPRO_CHAOS_SEED    generator seed                     (default 0)
+  REPRO_CHAOS_TICK    P(transient decode-tick failure)   (default 0.05)
+  REPRO_CHAOS_PRESS   P(admissions skipped this tick)    (default 0.05)
+  REPRO_CHAOS_PREEMPT P(force-evict a random active slot)(default 0.05)
+  REPRO_CHAOS_NAN     P(poison a random active slot)     (default 0.0)
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class ChaosError(RuntimeError):
+    """An injected transient tick failure. RuntimeError so the serving
+    supervisor's default retry_on catches it — exactly the class of error
+    retry exists for."""
+
+
+@dataclass
+class Chaos:
+    """Seeded fault injector; all rates are per-tick probabilities."""
+
+    seed: int = 0
+    tick_fail: float = 0.0    # transient decode-tick failures (retried)
+    pressure: float = 0.0     # skip this tick's admissions (delay only)
+    preempt: float = 0.0      # force-evict a random active slot
+    nan: float = 0.0          # poison a random active slot's decode state
+    # never inject more consecutive tick failures than the supervisor will
+    # retry — chaos proves the fault domain, it doesn't DoS it
+    max_consecutive_faults: int = 2
+    injected: dict = field(default_factory=lambda: {
+        "tick_faults": 0, "pressure": 0, "preempts": 0, "nans": 0})
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._consecutive = 0
+
+    @classmethod
+    def from_env(cls) -> "Chaos | None":
+        """The CI lane's constructor: None unless REPRO_CHAOS is truthy."""
+        if os.environ.get("REPRO_CHAOS", "").strip().lower() in \
+                ("", "0", "false", "no"):
+            return None
+
+        def f(name, default):
+            return float(os.environ.get(name, default))
+
+        return cls(seed=int(os.environ.get("REPRO_CHAOS_SEED", "0")),
+                   tick_fail=f("REPRO_CHAOS_TICK", 0.05),
+                   pressure=f("REPRO_CHAOS_PRESS", 0.05),
+                   preempt=f("REPRO_CHAOS_PREEMPT", 0.05),
+                   nan=f("REPRO_CHAOS_NAN", 0.0))
+
+    # ----------------------------------------------------------------- events
+
+    def maybe_tick_fault(self, step: int) -> None:
+        """Raise ChaosError with probability tick_fail, capped at
+        max_consecutive_faults in a row so the supervisor always wins."""
+        if self.tick_fail > 0 and \
+                self._consecutive < self.max_consecutive_faults and \
+                self._rng.random() < self.tick_fail:
+            self._consecutive += 1
+            self.injected["tick_faults"] += 1
+            raise ChaosError(f"injected transient tick failure @ step {step}")
+        self._consecutive = 0
+
+    def pressure_event(self) -> bool:
+        """Should this tick's admissions be skipped (allocator pressure)?"""
+        hit = self.pressure > 0 and self._rng.random() < self.pressure
+        if hit:
+            self.injected["pressure"] += 1
+        return hit
+
+    def preempt_victim(self, slots: list[int]) -> int | None:
+        """Pick a slot to force-evict this tick, or None."""
+        if not slots or self.preempt <= 0 or \
+                self._rng.random() >= self.preempt:
+            return None
+        self.injected["preempts"] += 1
+        return slots[int(self._rng.integers(len(slots)))]
+
+    def nan_victim(self, slots: list[int]) -> int | None:
+        """Pick a slot whose decode state gets poisoned, or None."""
+        if not slots or self.nan <= 0 or self._rng.random() >= self.nan:
+            return None
+        self.injected["nans"] += 1
+        return slots[int(self._rng.integers(len(slots)))]

@@ -62,6 +62,24 @@ the selected-experts grouped GEMM — across the replicas. Admission prefill
 stays batch-1 (replicated) and is splatted into the sharded row; streams
 remain bit-identical to the unsharded engine (pinned in
 tests/test_moe_mesh.py).
+
+FAULT DOMAIN: every request ends in a typed terminal status (Request.status
+— DONE | TIMEOUT | CANCELLED | FAILED; see serving/scheduler.py). Requests
+carry wall budgets (`deadline_s` from submit, `max_wall_s` from first
+admission) checked at every tick; `cancel(rid)` retires a request wherever
+it is (queued, mid-chunk-prefill, active, or parked preempted). With
+`preemption=True` (paged pools only) a blocked higher-priority admission
+EVICTS the lowest-priority active stream: its live KV pages + GO rows are
+snapshotted host-side, its pages freed, and it resumes later via
+block-table surgery into fresh pages — bit-identical to never evicting
+(recompute-by-re-prefill is neither bit-exact for KV nor possible at all
+for the expert-choice GO decode history; see SlotPool.snapshot). The jitted
+decode tick runs under a StepSupervisor (runtime/fault.py — the training
+loop's retry/telemetry pattern, same determinism argument), slots producing
+non-finite logits are quarantined to FAILED without touching cohabiting
+rows, and `REPRO_AUDIT=1` sweeps allocator + pool invariants every tick.
+`serving/chaos.py` injects seeded faults into all of it (REPRO_CHAOS=1 is
+the CI lane).
 """
 from __future__ import annotations
 
@@ -69,6 +87,7 @@ import itertools
 import math
 import os
 import time
+from collections import Counter
 from dataclasses import dataclass
 from functools import partial
 
@@ -79,18 +98,24 @@ import numpy as np
 from repro.models.model import (init_decode_state, paged_supported, prefill,
                                 prefill_chunk as _model_prefill_chunk,
                                 serve_step)
+from repro.runtime.fault import StepSupervisor
+from repro.serving.chaos import Chaos
 from repro.serving.pool import SlotPool
-from repro.serving.scheduler import FIFOScheduler, Request
+from repro.serving.scheduler import (FIFOScheduler, QueueFull, Request,
+                                     RequestStatus, RequestTooLarge)
 
 
 @partial(jax.jit, static_argnames="cfg")
 def _decode_step(params, state, tokens, active, cfg):
     """One batched decode tick. Retired slots still flow through the math
     (masking beats reshaping — shapes never change) but their position is
-    pinned to 0 so they stay inside max_tokens until the next admission."""
+    pinned to 0 so they stay inside max_tokens until the next admission.
+    Also returns per-row `ok` (all logits finite) — the engine quarantines
+    rows that went non-finite without touching their cohabitants."""
     logits, state = serve_step(params, state, tokens, cfg)
     state["t"] = jnp.where(active, state["t"], 0)
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+    ok = jnp.isfinite(logits).all(axis=-1)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), state, ok
 
 
 def _sample_tokens(logits, keys, temps, top_ps):
@@ -121,9 +146,10 @@ def _decode_step_sampled(params, state, tokens, active, temps, top_ps, keys,
     pays the per-row vocab sort."""
     logits, state = serve_step(params, state, tokens, cfg)
     state["t"] = jnp.where(active, state["t"], 0)
+    ok = jnp.isfinite(logits).all(axis=-1)
     split = jax.vmap(jax.random.split)(keys)        # [B, 2, 2]
     tok = _sample_tokens(logits, split[:, 0], temps, top_ps)
-    return tok, state, split[:, 1]
+    return tok, state, ok, split[:, 1]
 
 
 # prefill compiles once per (prompt length, max_len) and is shared across
@@ -165,7 +191,8 @@ class ServingEngine:
                  extras: dict | None = None, mesh=None,
                  prompt_buckets: bool = False, paged: bool = False,
                  page_size: int = 16, num_pages: int | None = None,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, preemption: bool = False,
+                 chaos: Chaos | None = None):
         self.params = params
         self.mesh = mesh
         force = _env_on("REPRO_FORCE_PAGED") or \
@@ -232,6 +259,26 @@ class ServingEngine:
             prompt_buckets and cfg.block == "attn"
             and cfg.encoder_layers == 0 and cfg.cross_attn_every == 0)
         self.prefill_lengths: set[int] = set()
+        # --- fault domain ---
+        # explicit injector wins; otherwise the REPRO_CHAOS env lane
+        self.chaos = chaos if chaos is not None else Chaos.from_env()
+        if self.chaos is not None and self.chaos.preempt > 0 \
+                and self.pool.paged:
+            preemption = True      # forced evictions need the resume path
+        if preemption and not self.pool.paged:
+            raise ValueError("preemption needs a paged pool (eviction "
+                             "snapshots are block-table surgery)")
+        self.preemption = bool(preemption)
+        # decode-tick supervisor: same determinism-makes-retry-safe argument
+        # as the training loop's. max_retries must exceed the chaos
+        # injector's max consecutive faults or the lane DoSes itself.
+        self.supervisor = StepSupervisor(max_retries=3)
+        self._preempted: dict[int, dict] = {}   # rid -> eviction snapshot
+        self.preempted_total = 0
+        self.resumed_total = 0
+        self.rejected_full = 0
+        self.rejected_oversized = 0
+        self.audit_every_tick = _env_on("REPRO_AUDIT")
 
     # ------------------------------------------------------------- submission
 
@@ -239,12 +286,18 @@ class ServingEngine:
                extras: dict | None = None, arrival_step: int = 0,
                request_id: int | None = None, temperature: float = 0.0,
                top_p: float = 1.0, seed: int | None = None,
-               priority: int = 0) -> int:
+               priority: int = 0, deadline_s: float | None = None,
+               max_wall_s: float | None = None) -> int:
         """Queue a request. `arrival_step` > current step defers arrival to
         that engine tick (trace replay). `temperature` > 0 switches the
         request's rows to temperature/top-p sampling (greedy rows in the
         same pool stay bit-identical). `priority` orders admission (lower =
-        earlier; FIFO within a level). Returns the request id."""
+        earlier; FIFO within a level). `deadline_s`/`max_wall_s` bound the
+        request's wall clock from submission / first admission — exceeded
+        budgets retire it with status TIMEOUT. Raises RequestTooLarge for a
+        request that could never fit the pool and QueueFull (carrying the
+        backlog depth) at max_queue — both counted in stats()["rejected"].
+        Returns the request id."""
         rid = request_id if request_id is not None else next(self._ids)
         req = Request(
             request_id=rid,
@@ -257,6 +310,8 @@ class ServingEngine:
             temperature=float(temperature),
             top_p=float(top_p),
             seed=seed,
+            deadline_s=deadline_s,
+            max_wall_s=max_wall_s,
         )
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
@@ -269,22 +324,65 @@ class ServingEngine:
             need = self.pool.pages_needed(req)
             usable = self.pool.num_pages - 1          # page 0 is the null page
             if need > usable:
-                raise ValueError(
+                self.rejected_oversized += 1
+                raise RequestTooLarge(
                     f"request {rid}: prompt({req.prompt_len}) + "
                     f"max_new_tokens({req.max_new_tokens}) needs {need} "
                     f"pages of {self.pool.page_size} tokens, but the pool "
                     f"only has {usable} usable pages")
-        req.arrival_time = time.monotonic()
-        self.scheduler.submit(req, now_step=self.step_count)
+        req.arrival_time = req.submit_time = time.monotonic()
+        try:
+            self.scheduler.submit(req, now_step=self.step_count)
+        except QueueFull:
+            self.rejected_full += 1
+            raise
+        except RequestTooLarge:
+            self.rejected_oversized += 1
+            raise
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Retire request `rid` wherever it is — queued (or trace-pending),
+        parked preempted, mid-chunk-prefill, or actively decoding — freeing
+        its slot/pages and marking it CANCELLED (partial tokens kept in
+        Request.tokens). Returns False if the id is unknown or already
+        terminal."""
+        if rid in self.finished:
+            return False
+        done: list[Request] = []
+        req = self.scheduler.remove(rid)
+        if req is not None:
+            self._preempted.pop(rid, None)
+            self._mark_finished(req, RequestStatus.CANCELLED, done,
+                                reason="cancelled")
+            return True
+        job = self._chunk_job
+        if job is not None and job.req.request_id == rid:
+            if self.pool.paged:
+                self.pool.alloc.free(rid)   # claimed chunk pages + reservation
+            self._chunk_job = None
+            self._mark_finished(job.req, RequestStatus.CANCELLED, done,
+                                reason="cancelled")
+            return True
+        for slot, owner in enumerate(self.pool.owner):
+            if owner is not None and owner.request_id == rid:
+                self._retire_slot(slot, RequestStatus.CANCELLED, done,
+                                  reason="cancelled")
+                return True
+        return False
 
     # ------------------------------------------------------------------ ticks
 
     def step(self) -> list[Request]:
-        """One engine tick: advance the chunked-prefill job (if any) by one
-        chunk, admit due+queued requests into free slots, then advance every
-        occupied slot one token. Returns requests finished on this tick."""
+        """One engine tick: expire blown deadlines, advance the
+        chunked-prefill job (if any) by one chunk, admit due+queued requests
+        into free slots (evicting lower-priority streams under page
+        pressure when preemption is on), then advance every occupied slot
+        one token under the tick supervisor. Returns requests finished on
+        this tick."""
         done: list[Request] = []
+
+        self._expire(time.monotonic(), done)
 
         for req in self.scheduler.poll(self.step_count):
             req.arrival_time = time.monotonic()
@@ -292,31 +390,60 @@ class ServingEngine:
         if self._chunk_job is not None:
             self._advance_chunk_job(done)
 
-        free = self.pool.free_slots()
-        if self._chunk_job is not None and self._chunk_job.slot in free:
-            free.remove(self._chunk_job.slot)
-        while free:
-            busy = self.pool.num_active() + \
-                (1 if self._chunk_job is not None else 0)
-            req = self.scheduler.next_admission(busy, can_admit=self._can_admit)
-            if req is None:
-                break
-            if self.prefill_chunk and req.prompt_len > self.prefill_chunk:
-                self._start_chunk_job(free.pop(0), req)
-                continue
-            self._admit(free.pop(0), req, done)
+        # admission loop; a chaos pressure event skips it for one tick
+        # (delays admissions without reordering them)
+        if self.chaos is None or not self.chaos.pressure_event():
+            while True:
+                free = self.pool.free_slots()
+                if self._chunk_job is not None and \
+                        self._chunk_job.slot in free:
+                    free.remove(self._chunk_job.slot)
+                busy = self.pool.num_active() + \
+                    (1 if self._chunk_job is not None else 0)
+                req = self.scheduler.next_admission(
+                    busy, can_admit=self._can_admit)
+                if req is None:
+                    # blocked head + preemption on: evict a lower-priority
+                    # active stream and retry the admission
+                    if self.preemption and self._preempt_for_head():
+                        continue
+                    break
+                if req.request_id in self._preempted:
+                    self._resume(free[0], req)
+                elif self.prefill_chunk and \
+                        req.prompt_len > self.prefill_chunk:
+                    self._start_chunk_job(free[0], req)
+                else:
+                    self._admit(free[0], req, done)
 
         self._note_occupancy()
 
+        if self.chaos is not None:
+            self._inject_state_faults()
+
         if self.pool.any_active():
             self.pool.grow_active()
-            toks, state = self._run_decode_step()
+            toks, state, ok, new_keys = self._supervised_decode()
             self.pool.state = self.pool._pin(state)
+            if new_keys is not None:
+                # keys advance only after the tick COMMITS — a supervisor
+                # retry must re-run with the same keys or sampled streams
+                # would silently fork
+                self.pool.keys = np.array(new_keys, dtype=np.uint32)
             self.pool.note_decoded()
             toks = np.asarray(toks)
+            ok = np.asarray(ok)
             self.step_count += 1
             for slot, req in enumerate(self.pool.owner):
                 if req is None:
+                    continue
+                if not ok[slot]:
+                    # quarantine: this row's logits went non-finite; retire
+                    # it FAILED (no garbage token appended) — cohabiting
+                    # rows are untouched (every batched op is row-wise
+                    # independent)
+                    self._retire_slot(slot, RequestStatus.FAILED, done,
+                                      reason="non-finite logits")
                     continue
                 tok = int(toks[slot])
                 req.tokens.append(tok)
@@ -332,6 +459,9 @@ class ServingEngine:
             nxt = self.scheduler.next_arrival_step()
             self.step_count = max(self.step_count + 1,
                                   nxt if nxt is not None else 0)
+
+        if self.audit_every_tick:
+            self._audit()
         return done
 
     def has_work(self) -> bool:
@@ -363,18 +493,122 @@ class ServingEngine:
         reservable (paged pool), and a to-be-chunked prompt must wait for
         the single chunk-run lane. A blocked head blocks the queue —
         overtaking would break the starvation-freedom the priority heap
-        guarantees."""
+        guarantees. A PREEMPTED head resumes from its snapshot: it needs
+        only its remaining worst case and never re-prefills, so the chunk
+        lane is irrelevant to it."""
+        if req.request_id in self._preempted:
+            return self.pool.can_resume(self._preempted[req.request_id])
         if self.prefill_chunk and req.prompt_len > self.prefill_chunk \
                 and self._chunk_job is not None:
             return False
         return self.pool.can_admit(req)
+
+    # -------------------------------------------------------------- preemption
+
+    def _preempt_for_head(self) -> bool:
+        """The head of the admission heap is blocked on slots or pages:
+        evict ONE active stream of strictly lower priority (greatest
+        priority value; ties broken toward the most recent admission —
+        least work lost) and report whether anything was evicted. The
+        admission loop retries after each eviction, so exactly as many
+        victims fall as the head needs."""
+        if not (self.pool.paged and self.scheduler.queue):
+            return False
+        head = self.scheduler.queue[0][2]
+        if head.request_id not in self._preempted and self.prefill_chunk \
+                and head.prompt_len > self.prefill_chunk \
+                and self._chunk_job is not None:
+            return False     # blocked on the chunk LANE — eviction can't help
+        victims = [(owner.priority, owner.admit_step, slot)
+                   for slot, owner in enumerate(self.pool.owner)
+                   if owner is not None and owner.priority > head.priority]
+        if not victims:
+            return False
+        self._preempt(max(victims)[2])
+        return True
+
+    def _preempt(self, slot: int) -> None:
+        """Evict the stream in `slot`: host-snapshot its live pages + GO
+        rows + cursor, free its pages, park it PREEMPTED, and put it back
+        in the admission heap under its original submit order."""
+        req = self.pool.owner[slot]
+        snap = self.pool.snapshot(slot)
+        self.pool.retire(slot)
+        req.slot = -1
+        req.status = RequestStatus.PREEMPTED
+        req.preemptions += 1
+        self._preempted[req.request_id] = snap
+        self.scheduler.requeue(req)
+        self.preempted_total += 1
+
+    def _resume(self, slot: int, req: Request) -> None:
+        """Un-park a preempted stream into a free slot via block-table
+        surgery (SlotPool.restore) — no re-prefill, bit-identical to an
+        uninterrupted run."""
+        snap = self._preempted.pop(req.request_id)
+        self.pool.restore(slot, req, snap)
+        req.status = RequestStatus.ACTIVE
+        self.resumed_total += 1
+        self._note_occupancy()
+
+    # ------------------------------------------------------ faults & deadlines
+
+    def _expire(self, now: float, done: list[Request]) -> None:
+        """Retire every request whose wall budget ran out, wherever it is:
+        queued/pending/preempted (scheduler heaps), mid-chunk-prefill, or
+        actively decoding."""
+        for req in self.scheduler.expire(now):
+            self._preempted.pop(req.request_id, None)
+            self._mark_finished(req, RequestStatus.TIMEOUT, done,
+                                reason="deadline exceeded before admission"
+                                if req.admit_time == 0 else
+                                "deadline exceeded while preempted")
+        job = self._chunk_job
+        if job is not None and job.req.expired(now):
+            if self.pool.paged:
+                self.pool.alloc.free(job.req.request_id)
+            self._chunk_job = None
+            self._mark_finished(job.req, RequestStatus.TIMEOUT, done,
+                                reason="deadline exceeded during prefill")
+        for slot, req in enumerate(self.pool.owner):
+            if req is not None and req.expired(now):
+                self._retire_slot(slot, RequestStatus.TIMEOUT, done,
+                                  reason="deadline exceeded")
+
+    def _inject_state_faults(self) -> None:
+        """Chaos state-level injections for this tick: a forced eviction
+        (exercises the snapshot/restore path — semantics-preserving) and/or
+        a poisoned slot (NaN KV -> the quarantine path, off by default in
+        the env lane)."""
+        active = [s for s, o in enumerate(self.pool.owner) if o is not None]
+        if self.preemption and self.pool.paged:
+            victim = self.chaos.preempt_victim(active)
+            if victim is not None:
+                self._preempt(victim)
+                active.remove(victim)
+        victim = self.chaos.nan_victim(active)
+        if victim is not None:
+            self.pool.poison_slot(victim)
+
+    def _supervised_decode(self):
+        """Run the jitted decode tick under the StepSupervisor: injected or
+        real transient errors are retried with IDENTICAL inputs (the tick is
+        functional — pool state and sampling keys are only committed after
+        success), hard failures raise RestartRequired."""
+        def tick():
+            if self.chaos is not None:
+                self.chaos.maybe_tick_fault(self.step_count)
+            return self._run_decode_step()
+        return self.supervisor.run(tick, step=self.step_count)
 
     def _run_decode_step(self):
         """One jitted decode tick, inside the mesh context when sharded (the
         jit cache keys on the ambient mesh, so the sharded and unsharded
         variants coexist in one process). Pure-greedy pools run the lean
         greedy step; a pool with any sampling request runs the sampling
-        variant (greedy rows inside it stay bit-identical)."""
+        variant (greedy rows inside it stay bit-identical). Returns
+        (tokens, state, ok, new_keys-or-None) WITHOUT committing anything
+        to the pool — the caller commits, so a supervisor retry is pure."""
         sampling = bool((self.pool.temps > 0).any())
         args = (self.params, self.pool.state, jnp.asarray(self.pool.pending),
                 jnp.asarray(self.pool.active_mask()))
@@ -389,10 +623,9 @@ class ServingEngine:
             with self.mesh:
                 out = fn(*args, self.cfg)
         if sampling:
-            toks, state, new_keys = out
-            self.pool.keys = np.array(new_keys, dtype=np.uint32)
-            return toks, state
-        return out
+            return out                       # (toks, state, ok, new_keys)
+        toks, state, ok = out
+        return toks, state, ok, None
 
     def _bucketed(self, prompt: np.ndarray):
         """Pad the prompt up to its power-of-two bucket (capped at the
@@ -439,9 +672,19 @@ class ServingEngine:
         """Shared tail of one-shot and chunked admission: emit the first
         token, splat the prefilled state into the pool row, handle an
         immediate EOS/length finish. `page_row` marks a paged chunk run
-        whose pages are already claimed and filled."""
+        whose pages are already claimed and filled. Non-finite prefill
+        logits quarantine the request to FAILED before it ever occupies
+        the slot."""
+        if not bool(np.isfinite(np.asarray(logits)).all()):
+            if page_row is not None and self.pool.paged:
+                self.pool.alloc.free(req.request_id)   # claimed chunk pages
+            self._mark_finished(req, RequestStatus.FAILED, done,
+                                reason="non-finite prefill logits")
+            return
         first, key_next = self._first_token(req, logits)
         req.admit_step = self.step_count
+        req.admit_time = time.monotonic()
+        req.status = RequestStatus.ACTIVE
         req.tokens.append(first)
         self.pool.admit(slot, req, slot_state, first, key=key_next,
                         page_row=page_row)
@@ -516,11 +759,43 @@ class ServingEngine:
         self.chunk_ticks += 1
 
     def _finish(self, slot: int, done: list[Request]) -> None:
-        req = self.pool.retire(slot)
+        self._retire_slot(slot, RequestStatus.DONE, done)
+
+    def _retire_slot(self, slot: int, status: RequestStatus,
+                     done: list[Request], reason: str | None = None) -> None:
+        """Retire an ACTIVE slot into terminal `status`: frees the slot
+        (pages back to the allocator, GO rows to -inf) and records the
+        outcome. A FAILED retirement is a quarantine — its decode state is
+        non-finite, so its pages are scrubbed before the allocator can hand
+        them to another stream (NaN survives 0-weight masking)."""
+        req = self.pool.retire(slot, scrub=status is RequestStatus.FAILED)
+        self._mark_finished(req, status, done, reason=reason)
+
+    def _mark_finished(self, req: Request, status: RequestStatus,
+                       done: list[Request], reason: str | None = None) -> None:
+        req.status = status
+        req.fail_reason = reason
         req.finish_step = self.step_count
         req.finish_time = time.monotonic()
         self.finished[req.request_id] = req
         done.append(req)
+
+    def _audit(self) -> None:
+        """REPRO_AUDIT=1 invariant sweep, every tick: pool/allocator
+        consistency (SlotPool.audit) plus the engine-level cross-checks —
+        the chunk lane's claimed slot stays unoccupied and parked preempted
+        requests are neither active nor finished."""
+        self.pool.audit()
+        job = self._chunk_job
+        if job is not None:
+            assert self.pool.owner[job.slot] is None, \
+                "chunk job's claimed slot was given away"
+        for rid in self._preempted:
+            assert all(o is None or o.request_id != rid
+                       for o in self.pool.owner), \
+                f"preempted request {rid} also occupies a slot"
+            assert rid not in self.finished, \
+                f"preempted request {rid} already finished"
 
     # ------------------------------------------------------------------ stats
 
@@ -545,4 +820,14 @@ class ServingEngine:
             "pages_in_use": (self.pool.alloc.pages_in_use
                              if self.pool.paged else None),
             "chunk_ticks": self.chunk_ticks,
+            # --- fault domain ---
+            "statuses": dict(Counter(r.status.value for r in reqs)),
+            "preemptions": self.preempted_total,
+            "resumes": self.resumed_total,
+            "preempted_waiting": len(self._preempted),
+            "rejected": {"queue_full": self.rejected_full,
+                         "oversized": self.rejected_oversized},
+            "tick_retries": self.supervisor.stats.retries,
+            "chaos": (dict(self.chaos.injected)
+                      if self.chaos is not None else None),
         }

@@ -56,6 +56,11 @@ from repro.serving.scheduler import Request
 # throughput benchmark spins up one engine per slot count).
 _write_slot = jax.jit(write_decode_slot)
 _reset_slot = jax.jit(init_decode_slot)
+# Preemption-resume scatter: put a snapshot's live pages back into the page
+# store at freshly-allocated physical ids. Compiles once per (store shape,
+# live-page count) — page counts are small integers, so the cache stays tiny.
+_scatter_pages = jax.jit(
+    lambda store, ids, pages: store.at[:, ids].set(pages.astype(store.dtype)))
 
 
 class SlotPool:
@@ -253,15 +258,26 @@ class SlotPool:
             if req is not None:
                 self.t_host[slot] += 1
 
-    def retire(self, slot: int) -> Request:
+    def retire(self, slot: int, *, scrub: bool = False) -> Request:
         """Free a row: clear its caches (GO scores to -inf) and return the
         finished request. The row is immediately reusable. Paged pools
         return the slot's pages to the allocator on this same path — the
-        page CONTENTS are left as-is (unreachable once the block table is
-        nulled, and rewritten before any future occupant reads them)."""
+        page CONTENTS are normally left as-is (finite garbage is harmless:
+        stale positions are score-masked, and 0-weighted FINITE values
+        vanish from the attention sum). `scrub=True` zeroes the pages first
+        — required when quarantining a NON-FINITE slot, because 0 * NaN is
+        NaN: a poisoned page handed to a future stream would leak straight
+        through the mask on the value side."""
         req = self.owner[slot]
         assert req is not None, f"slot {slot} is already free"
         if self.paged:
+            if scrub:
+                row = self.block_table[slot]
+                ids = jnp.asarray(row[row != 0], jnp.int32)
+                self.state["k_pages"] = \
+                    self.state["k_pages"].at[:, ids].set(0)
+                self.state["v_pages"] = \
+                    self.state["v_pages"].at[:, ids].set(0)
             self.alloc.free(req.request_id)
             self.block_table[slot] = 0
         self.state = self._pin(_reset_slot(self.state, slot))
@@ -273,3 +289,148 @@ class SlotPool:
         self.top_ps[slot] = 1.0
         self.keys[slot] = 0
         return req
+
+    # ------------------------------------------------------------- preemption
+
+    def snapshot(self, slot: int) -> dict:
+        """Host-side eviction snapshot of an active PAGED slot: the slot's
+        LIVE KV pages (device -> host), its GO rows, and its decode cursor /
+        sampling state. Restoring this via `restore()` is bit-identical to
+        never evicting — unlike recomputing the KV by re-prefilling, which
+        is NOT bit-exact (full-sequence prefill matmuls differ bitwise from
+        incremental decode ones) and cannot reproduce an expert-choice GO
+        cache at all (the decode-time GO rows are TopKUpdate history over
+        per-step capacities, not a function of re-routing the sequence)."""
+        assert self.paged, "preemption snapshots are paged-pool only"
+        req = self.owner[slot]
+        assert req is not None, f"slot {slot} is free"
+        row = self.block_table[slot]
+        n = int((row != 0).sum())
+        assert (row[:n] != 0).all(), "block table is not a contiguous prefix"
+        ids = row[:n].copy()
+        snap = {
+            "t": int(self.t_host[slot]),
+            "pending": int(self.pending[slot]),
+            "remaining": int(self.remaining[slot]),
+            "temp": float(self.temps[slot]),
+            "top_p": float(self.top_ps[slot]),
+            "key": self.keys[slot].copy(),
+            "n_pages": n,
+            "k": np.asarray(self.state["k_pages"][:, ids]),
+            "v": np.asarray(self.state["v_pages"][:, ids]),
+        }
+        if "go" in self.state:
+            snap["go"] = jax.tree.map(lambda a: np.asarray(a[:, slot]),
+                                      self.state["go"])
+        return snap
+
+    def pages_for_resume(self, snap: dict) -> int:
+        """Worst-case page count to finish a snapshotted stream: every
+        position it has written plus every token it still owes."""
+        return pages_for_tokens(snap["t"] + snap["remaining"], self.page_size)
+
+    def can_resume(self, snap: dict) -> bool:
+        return self.alloc.can_reserve(self.pages_for_resume(snap))
+
+    def restore(self, slot: int, req: Request, snap: dict) -> None:
+        """Re-admit a preempted request from its eviction snapshot: reserve
+        its remaining worst case, allocate fresh physical pages for the live
+        prefix, scatter the snapshot back in, and rebuild the slot's block
+        table + GO rows + cursor — block-table surgery, no recompute."""
+        assert self.paged and self.owner[slot] is None
+        rid = req.request_id
+        self.alloc.reserve(rid, self.pages_for_resume(snap))
+        ids = self.alloc.alloc(rid, snap["n_pages"])
+        row = np.zeros(self.block_table.shape[1], np.int32)
+        row[:len(ids)] = ids
+        self.block_table[slot] = row
+        jids = jnp.asarray(ids, jnp.int32)
+        self.state["k_pages"] = _scatter_pages(
+            self.state["k_pages"], jids, jnp.asarray(snap["k"]))
+        self.state["v_pages"] = _scatter_pages(
+            self.state["v_pages"], jids, jnp.asarray(snap["v"]))
+        self.state["t"] = self.state["t"].at[slot].set(snap["t"])
+        if "go" in self.state:
+            self.state["go"] = jax.tree.map(
+                lambda a, r: a.at[:, slot].set(jnp.asarray(r).astype(a.dtype)),
+                self.state["go"], snap["go"])
+        self._push_block_table()
+        self.state = self._pin(self.state)
+        self.owner[slot] = req
+        self.pending[slot] = snap["pending"]
+        self.remaining[slot] = snap["remaining"]
+        self.t_host[slot] = snap["t"]
+        self.temps[slot] = snap["temp"]
+        self.top_ps[slot] = snap["top_p"]
+        self.keys[slot] = snap["key"]
+        self.admitted_total += 1
+        req.slot = slot
+
+    # --------------------------------------------------------- fault injection
+
+    def poison_slot(self, slot: int) -> None:
+        """Chaos hook: corrupt one slot's decode state with NaN (its most
+        recently written KV position — always inside the attention window)
+        so the NEXT decode tick produces non-finite logits for that row and
+        ONLY that row (every batched op is row-wise independent). The engine
+        must quarantine the slot without touching its cohabitants."""
+        assert self.owner[slot] is not None, f"slot {slot} is free"
+        t = max(0, int(self.t_host[slot]) - 1)
+        if self.paged:
+            page = int(self.block_table[slot, t // self.page_size])
+            off = t % self.page_size
+            self.state["k_pages"] = \
+                self.state["k_pages"].at[:, page, off].set(jnp.nan)
+        elif "k" in self.state:
+            self.state["k"] = self.state["k"].at[:, slot, t].set(jnp.nan)
+        else:
+            # recurrent archs: no KV rows — poison the slot's carried state
+            # (batch axes per key match init_decode_slot: ssm/slstm -> 1,
+            # mlstm -> 2); integer leaves are left alone
+            def rot(a, batch_axis):
+                if not jnp.issubdtype(a.dtype, jnp.floating):
+                    return a
+                idx = (slice(None),) * batch_axis + (slot,)
+                return a.at[idx].set(jnp.nan)
+            for key, ax in (("ssm", 1), ("mlstm", 2), ("slstm", 1)):
+                if key in self.state:
+                    self.state[key] = jax.tree.map(
+                        lambda a: rot(a, ax), self.state[key])
+        self.state = self._pin(self.state)
+
+    # -------------------------------------------------------------- invariants
+
+    def audit(self) -> None:
+        """Pool/slot invariant sweep (REPRO_AUDIT=1 runs it every engine
+        tick): allocator consistency, block tables as contiguous prefixes
+        matching exactly the allocator's ownership, host/device position
+        mirrors in sync, live metadata sane, freed slots fully cleared."""
+        if self.paged:
+            self.alloc.check()
+        dev_t = np.asarray(self.state["t"])
+        for slot, req in enumerate(self.owner):
+            if req is None:
+                assert self.remaining[slot] == 0 and self.t_host[slot] == 0, \
+                    f"freed slot {slot} has stale metadata"
+                assert dev_t[slot] == 0, \
+                    f"freed slot {slot}: device t={dev_t[slot]} not reset"
+                if self.paged:
+                    assert (self.block_table[slot] == 0).all(), \
+                        f"freed slot {slot} still maps pages"
+                continue
+            assert self.remaining[slot] > 0, \
+                f"active slot {slot} owes no tokens"
+            t = int(self.t_host[slot])
+            assert 0 < t <= self.max_tokens, f"slot {slot}: t={t} out of range"
+            assert dev_t[slot] == t, \
+                f"slot {slot}: device t={dev_t[slot]} != host t={t}"
+            if self.paged:
+                row = self.block_table[slot]
+                n = int((row != 0).sum())
+                assert (row[:n] != 0).all() and (row[n:] == 0).all(), \
+                    f"slot {slot}: block table not a contiguous prefix"
+                owned = self.alloc.owned(req.request_id)
+                assert set(row[:n].tolist()) == set(owned), \
+                    f"slot {slot}: block table != allocator ownership"
+                assert n >= pages_for_tokens(t, self.page_size), \
+                    f"slot {slot}: {n} pages cannot back {t} positions"

@@ -28,14 +28,59 @@ staggered-arrival tests and the Poisson-trace throughput benchmark. Such a
 request stays in the `pending` list until the engine's step counter reaches
 its arrival step, then joins the admission heap (keyed by its SUBMIT order,
 so same-tick arrivals stay FIFO).
+
+LIFECYCLE: every request carries a typed `status` and ends in exactly one
+terminal state — DONE (EOS/length), TIMEOUT (deadline_s from submission or
+max_wall_s from first admission exceeded), CANCELLED (engine.cancel), or
+FAILED (non-finite logits quarantined by the engine). PREEMPTED is the one
+non-terminal excursion out of ACTIVE: a page-pressure eviction parks the
+request back in this heap (requeue — it keeps its original submit order, so
+it resumes at the head of its priority class) until its pages are
+reservable again.
 """
 from __future__ import annotations
 
+import enum
 import heapq
 import itertools
 from dataclasses import dataclass, field
 
 import numpy as np
+
+
+class RequestStatus(str, enum.Enum):
+    """Request lifecycle states. str-mixin so `status == "DONE"` works."""
+
+    QUEUED = "QUEUED"          # waiting for admission (incl. trace-deferred)
+    ACTIVE = "ACTIVE"          # occupying a slot (prefilling or decoding)
+    PREEMPTED = "PREEMPTED"    # evicted under page pressure, awaiting resume
+    DONE = "DONE"              # terminal: EOS or length
+    TIMEOUT = "TIMEOUT"        # terminal: deadline_s / max_wall_s exceeded
+    CANCELLED = "CANCELLED"    # terminal: engine.cancel(rid)
+    FAILED = "FAILED"          # terminal: quarantined (non-finite logits)
+
+
+TERMINAL_STATUSES = frozenset({
+    RequestStatus.DONE, RequestStatus.TIMEOUT,
+    RequestStatus.CANCELLED, RequestStatus.FAILED,
+})
+
+
+class QueueFull(RuntimeError):
+    """Typed backpressure signal: the admission backlog is at max_queue.
+    Carries the observed depth so callers can shed load proportionally."""
+
+    def __init__(self, depth: int, max_queue: int):
+        self.depth = depth
+        self.max_queue = max_queue
+        super().__init__(
+            f"admission queue full: depth {depth} >= max_queue {max_queue}")
+
+
+class RequestTooLarge(ValueError):
+    """Typed submit-time rejection: the request could never fit the pool
+    (prompt + max_new_tokens over max_tokens, or over the paged pool's
+    usable page count), so admitting it would stall the queue forever."""
 
 
 @dataclass
@@ -53,13 +98,22 @@ class Request:
     temperature: float = 0.0
     top_p: float = 1.0
     seed: int | None = None          # None -> derived from request_id
+    # --- deadlines (None = unbounded) ---
+    deadline_s: float | None = None  # wall budget from submission
+    max_wall_s: float | None = None  # wall budget from FIRST admission
 
     # --- filled in by the engine ---
+    status: RequestStatus = RequestStatus.QUEUED
+    fail_reason: str | None = None   # set on FAILED/TIMEOUT/CANCELLED
     arrival_time: float = 0.0        # wall-clock when it joined the queue
+    submit_time: float = 0.0         # wall-clock at submit (deadline_s anchor)
+    admit_time: float = 0.0          # wall-clock at FIRST admission
     admit_step: int = -1
     finish_step: int = -1
     finish_time: float = 0.0
     slot: int = -1                   # slot it was admitted into
+    seq: int = -1                    # scheduler submit order (heap tie-break)
+    preemptions: int = 0             # times evicted under page pressure
     tokens: list[int] = field(default_factory=list)
 
     @property
@@ -69,6 +123,19 @@ class Request:
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    def expired(self, now: float) -> bool:
+        """Has either wall budget run out? deadline_s counts from submit
+        (queue wait included); max_wall_s counts from first admission and
+        keeps counting across preemptions (the request is still holding a
+        snapshot, i.e. engine memory)."""
+        if self.deadline_s is not None and \
+                now - self.submit_time > self.deadline_s:
+            return True
+        if self.max_wall_s is not None and self.admit_time > 0 and \
+                now - self.admit_time > self.max_wall_s:
+            return True
+        return False
 
 
 class FIFOScheduler:
@@ -87,22 +154,33 @@ class FIFOScheduler:
     # ------------------------------------------------------------- submission
 
     def submit(self, req: Request, *, now_step: int = 0) -> None:
-        """Queue a request (immediately, or at its arrival_step if later)."""
+        """Queue a request (immediately, or at its arrival_step if later).
+        Raises typed rejections: RequestTooLarge for a request that could
+        never fit the pool, QueueFull (carrying the depth) at max_queue."""
         need = req.prompt_len + req.max_new_tokens
         if need > self.max_tokens:
-            raise ValueError(
+            raise RequestTooLarge(
                 f"request {req.request_id}: prompt({req.prompt_len}) + "
                 f"max_new_tokens({req.max_new_tokens}) = {need} exceeds the "
                 f"pool's max_tokens={self.max_tokens}")
         backlog = len(self.queue) + len(self._pending)
         if self.max_queue and backlog >= self.max_queue:
-            raise RuntimeError(
-                f"admission queue full (max_queue={self.max_queue})")
-        seq = next(self._seq)
+            raise QueueFull(backlog, self.max_queue)
+        req.seq = next(self._seq)
+        req.status = RequestStatus.QUEUED
         if req.arrival_step > now_step:
-            heapq.heappush(self._pending, (req.arrival_step, seq, req))
+            heapq.heappush(self._pending, (req.arrival_step, req.seq, req))
             return
-        heapq.heappush(self.queue, (req.priority, seq, req))
+        heapq.heappush(self.queue, (req.priority, req.seq, req))
+
+    def requeue(self, req: Request) -> None:
+        """Put a PREEMPTED request back in the admission heap under its
+        ORIGINAL submit order: it resumes ahead of everything submitted
+        after it in its priority class (no progress lost to overtaking).
+        Bypasses max_queue — the request was already admitted once, so
+        bouncing it now would turn backpressure into data loss."""
+        assert req.seq >= 0, "requeue() is for previously-submitted requests"
+        heapq.heappush(self.queue, (req.priority, req.seq, req))
 
     def poll(self, step: int) -> list[Request]:
         """Move trace-replay requests whose arrival step has come into the
@@ -127,6 +205,36 @@ class FIFOScheduler:
         if can_admit is not None and not can_admit(head):
             return None
         return heapq.heappop(self.queue)[2]
+
+    # ------------------------------------------------------ removal / expiry
+
+    def remove(self, rid: int) -> Request | None:
+        """Pull a request out of the admission heap / pending trace list by
+        id (cancellation before admission). Returns it, or None if it is
+        not queued here."""
+        for heap in (self.queue, self._pending):
+            for i, (_, _, req) in enumerate(heap):
+                if req.request_id == rid:
+                    heap.pop(i)
+                    heapq.heapify(heap)
+                    return req
+        return None
+
+    def expire(self, now: float) -> list[Request]:
+        """Drop every queued/pending request whose wall budget has run out
+        (Request.expired) and return them; the engine marks them TIMEOUT.
+        Covers PREEMPTED requests parked here awaiting resume."""
+        out = [req for _, _, req in self.queue if req.expired(now)]
+        out += [req for _, _, req in self._pending if req.expired(now)]
+        if out:
+            gone = {r.request_id for r in out}
+            self.queue = [e for e in self.queue
+                          if e[2].request_id not in gone]
+            heapq.heapify(self.queue)
+            self._pending = [e for e in self._pending
+                             if e[2].request_id not in gone]
+            heapq.heapify(self._pending)
+        return out
 
     def has_pending(self) -> bool:
         return bool(self.queue) or bool(self._pending)

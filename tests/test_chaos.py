@@ -1,0 +1,164 @@
+"""The chaos lane: seeded fault injection proves the serving fault domain.
+
+Chaos (serving/chaos.py) forces exactly the faults the engine claims to
+survive — transient tick failures (the StepSupervisor must retry with the
+same inputs), admission pressure (delay, never reorder), forced preemptions
+(the snapshot/restore path must stay bit-identical), and NaN poisoning (the
+quarantine must fail ONE slot without touching cohabitants). Everything is
+driven by one seeded generator, so every test here replays exactly.
+
+CI runs the whole serving suite under `REPRO_CHAOS=1 REPRO_FORCE_PAGED=1
+REPRO_AUDIT=1` — the env-driven lane is semantics-preserving, so the
+bit-identity pins in test_serving.py double as chaos assertions. This file
+pins the injector itself and the non-preserving faults (NaN, supervisor
+exhaustion) the env lane keeps off by default."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.launch.serve import generate
+from repro.models.model import model_init
+from repro.runtime.fault import RestartRequired
+from repro.serving import Chaos, ChaosError, RequestStatus, ServingEngine
+
+MAX_TOKENS = 48
+
+
+def _setup(arch="llama_moe_4_16"):
+    cfg = get_config(arch, smoke=True)
+    params = model_init(jax.random.PRNGKey(5), cfg)
+    return cfg, params
+
+
+def _static_tokens(params, cfg, prompt, gen):
+    res = generate(params, cfg, jnp.asarray(prompt)[None, :], gen,
+                   max_len=MAX_TOKENS)
+    return np.asarray(res["tokens"][0]).tolist()
+
+
+def test_chaos_churn_preserves_streams_and_pages():
+    """The full storm on a paged pool — tick failures, admission pressure,
+    forced evictions — is invisible in the OUTPUT: every stream equals
+    running alone bit for bit, every preempted stream resumed, no page
+    leaks, and the per-tick invariant sweep stays green."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
+               for _ in range(6)]
+    chaos = Chaos(seed=3, tick_fail=0.3, pressure=0.2, preempt=0.4)
+    eng = ServingEngine(params, cfg, num_slots=3, max_tokens=MAX_TOKENS,
+                        paged=True, page_size=8, chaos=chaos)
+    assert eng.preemption          # chaos preempt > 0 arms the resume path
+    eng.audit_every_tick = True
+    rids = [eng.submit(p, 16) for p in prompts]
+    fin = eng.run()
+
+    s = eng.stats()
+    assert s["chaos"]["tick_faults"] >= 1 and s["tick_retries"] >= 1
+    assert s["chaos"]["pressure"] >= 1
+    assert s["preemptions"] >= 1 and s["resumes"] == s["preemptions"]
+    for rid, p in zip(rids, prompts):
+        assert fin[rid].status is RequestStatus.DONE
+        assert fin[rid].tokens == _static_tokens(params, cfg, p, 16), \
+            f"request {rid} diverged under chaos"
+    assert eng.pool.alloc.pages_in_use == 0
+    eng.pool.audit()
+
+
+def test_chaos_tick_faults_retried_bit_identical_dense():
+    """Transient decode-tick failures on a dense pool: the supervisor
+    retries with the SAME inputs, so heavy fault rates change nothing but
+    wall time — streams stay bit-identical and all requests finish DONE."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
+               for _ in range(3)]
+    eng = ServingEngine(params, cfg, num_slots=2, max_tokens=MAX_TOKENS,
+                        chaos=Chaos(seed=1, tick_fail=0.5))
+    rids = [eng.submit(p, 12) for p in prompts]
+    fin = eng.run()
+    assert eng.stats()["tick_retries"] >= 1
+    for rid, p in zip(rids, prompts):
+        assert fin[rid].status is RequestStatus.DONE
+        assert fin[rid].tokens == _static_tokens(params, cfg, p, 12)
+
+
+def test_supervisor_exhaustion_raises_restart_required():
+    """A fault that never clears must NOT spin forever: past the
+    supervisor's retry budget the tick raises RestartRequired (the same
+    give-up signal the training loop uses), with the chaos error chained."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    p = rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+    chaos = Chaos(seed=0, tick_fail=1.0, max_consecutive_faults=10 ** 6)
+    eng = ServingEngine(params, cfg, num_slots=1, max_tokens=MAX_TOKENS,
+                        chaos=chaos)
+    eng.submit(p, 4)
+    with pytest.raises(RestartRequired) as ei:
+        eng.run()
+    assert isinstance(ei.value.__cause__, ChaosError)
+    assert eng.stats()["tick_retries"] >= 3
+
+
+def test_chaos_nan_injection_quarantines_without_cross_contamination():
+    """Random NaN poisoning (the one non-semantics-preserving fault) fails
+    the poisoned streams — partial tokens are a true prefix of the solo
+    stream — while every surviving stream stays bit-identical, and the pool
+    drains clean."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
+               for _ in range(4)]
+    eng = ServingEngine(params, cfg, num_slots=2, max_tokens=MAX_TOKENS,
+                        chaos=Chaos(seed=2, nan=0.12))   # 2 FAILED / 2 DONE
+    rids = [eng.submit(p, 12) for p in prompts]
+    fin = eng.run()
+
+    statuses = eng.stats()["statuses"]
+    assert statuses.get("FAILED", 0) >= 1, "seeded NaN never landed"
+    assert statuses.get("DONE", 0) >= 1, "no survivors to check isolation"
+    assert eng.stats()["chaos"]["nans"] >= 1
+    for rid, p in zip(rids, prompts):
+        ref = _static_tokens(params, cfg, p, 12)
+        if fin[rid].status is RequestStatus.DONE:
+            assert fin[rid].tokens == ref
+        else:
+            assert fin[rid].status is RequestStatus.FAILED
+            assert fin[rid].fail_reason == "non-finite logits"
+            assert fin[rid].tokens == ref[:len(fin[rid].tokens)]
+    assert not eng.pool.any_active()
+
+
+def test_chaos_from_env(monkeypatch):
+    """`REPRO_CHAOS` wires the injector into every engine by default; off
+    (or falsy) means no injector and no overhead."""
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)
+    assert Chaos.from_env() is None
+    monkeypatch.setenv("REPRO_CHAOS", "0")
+    assert Chaos.from_env() is None
+    monkeypatch.setenv("REPRO_CHAOS", "1")
+    monkeypatch.setenv("REPRO_CHAOS_SEED", "7")
+    monkeypatch.setenv("REPRO_CHAOS_TICK", "0.5")
+    c = Chaos.from_env()
+    assert c is not None and c.seed == 7
+    assert c.tick_fail == 0.5 and c.pressure == 0.05 and c.nan == 0.0
+
+
+def test_audit_catches_page_accounting_corruption():
+    """REPRO_AUDIT's sweep is a real tripwire: freeing a live slot's pages
+    behind the pool's back (block table still mapping them) must fail the
+    next audit — ownership and block tables must agree EXACTLY."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(4)
+    p = rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
+    eng = ServingEngine(params, cfg, num_slots=2, max_tokens=MAX_TOKENS,
+                        paged=True, page_size=8)
+    rid = eng.submit(p, 8)
+    for _ in range(3):
+        eng.step()
+    eng.pool.audit()                           # clean while consistent
+    eng.pool.alloc.free(rid)                   # corrupt: pages freed, table live
+    with pytest.raises(AssertionError, match="block table"):
+        eng.pool.audit()

@@ -196,6 +196,38 @@ def test_sharded_engine_bit_identical(backend, paged):
                                       res1["tokens"][rid])
 
 
+@needs_mesh
+def test_sharded_engine_preemption_bit_identical():
+    """Page-pressure eviction + block-table-surgery resume with the pool
+    sharded over the mesh: snapshots cross host<->device through SHARDED
+    page stores, and the preempted-then-resumed streams must still equal
+    the unsharded engine bit for bit, with the same preemption schedule."""
+    from repro.configs.registry import get_config
+    from repro.launch.serve import serve_continuous
+    from repro.models.model import model_init
+    cfg = get_config("llama_moe_4_16", smoke=True)
+    params = model_init(jax.random.PRNGKey(5), cfg)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+               for _ in range(3)]
+    # two low-priority streams fill the 8 usable pages; the high-priority
+    # arrival at step 6 must evict one and finish first
+    kw = dict(num_slots=3, max_tokens=48, paged=True, page_size=8,
+              num_pages=9, priorities=[5, 5, 0], arrival_steps=[0, 0, 6],
+              preemption=True)
+    res0 = serve_continuous(params, cfg, prompts, 24, **kw)
+    res1 = serve_continuous(params, cfg, prompts, 24, mesh=_mesh((2, 2)),
+                            **kw)
+    assert res1["stats"]["mesh"] == {"data": 2, "model": 2}
+    assert res1["stats"]["preemptions"] >= 1
+    assert res0["stats"]["preemptions"] == res1["stats"]["preemptions"]
+    assert res0["stats"]["statuses"] == res1["stats"]["statuses"] \
+        == {"DONE": 3}
+    for rid in res0["tokens"]:
+        np.testing.assert_array_equal(res0["tokens"][rid],
+                                      res1["tokens"][rid])
+
+
 # ------------------------------------------------- single-device fallback
 
 def test_mesh_suite_subprocess():

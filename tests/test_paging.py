@@ -152,3 +152,89 @@ def test_freed_go_rows_always_return_neg_inf(slots, seed):
             pool.retire(slot)
     assert pool.alloc.pages_in_use == 0
     assert bool(jnp.isneginf(pool.state["go"].scores).all())
+
+
+# ------------------------- pool-level preempt / cancel / resume interleaving
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.tuples(
+           st.sampled_from(["admit", "tick", "preempt", "resume", "cancel"]),
+           st.integers(0, 2)),
+       min_size=1, max_size=24),
+       st.integers(0, 2 ** 31 - 1))
+def test_pool_survives_preempt_cancel_interleavings(ops, seed):
+    """Fault-domain sweep over the paged pool: arbitrary interleavings of
+    admit / decode-tick / preempt (snapshot + free) / resume (block-table
+    surgery) / cancel must never leak or alias a page, must reset freed GO
+    rows to -inf, must hand a restored slot back EXACTLY its snapshotted
+    pages — and the full invariant audit() passes after every op."""
+    from repro.configs.registry import get_config
+    from repro.models.model import init_decode_state
+    from repro.serving.pool import SlotPool
+    from repro.serving.scheduler import Request
+
+    cfg = get_config("llama_moe_4_16", smoke=True)
+    pool = SlotPool(cfg, 3, 16, paged=True, page_size=8)
+    rng = np.random.default_rng(seed)
+    parked: dict = {}                           # rid -> (req, snapshot)
+    rid = 0
+    for op, slot in ops:
+        req = pool.owner[slot]
+        if op == "admit" and req is None:
+            nreq = Request(
+                request_id=rid,
+                prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                max_new_tokens=4)
+            if pool.can_admit(nreq):            # the engine's admission gate
+                rid += 1
+                src = init_decode_state(cfg, 1, 16)
+                src["t"] = jnp.asarray(6, jnp.int32)
+                src["go"] = jax.tree.map(
+                    lambda a: jnp.ones_like(a) if a.dtype != jnp.int32
+                    else jnp.zeros_like(a), src["go"])
+                pool.admit(slot, nreq, src, first_token=1)
+        elif op == "tick" and pool.any_active():
+            # one decode token for every active slot, the engine's order:
+            # pre-grow the write page, bump device t, mirror it host-side
+            pool.grow_active()
+            bump = jnp.asarray([1 if o is not None else 0
+                                for o in pool.owner], jnp.int32)
+            pool.state["t"] = pool.state["t"] + bump
+            pool.note_decoded()
+            for s, o in enumerate(pool.owner):
+                if o is not None:
+                    pool.remaining[s] -= 1
+                    if pool.remaining[s] <= 0:
+                        pool.retire(s)
+        elif op == "preempt" and req is not None:
+            snap = pool.snapshot(slot)
+            pool.retire(slot)
+            parked[req.request_id] = (req, snap)
+            assert bool(jnp.isneginf(pool.state["go"].scores[:, slot]).all())
+        elif op == "resume" and parked and pool.owner[slot] is None:
+            prid = min(parked)
+            preq, snap = parked[prid]
+            if pool.can_resume(snap):
+                del parked[prid]
+                pool.restore(slot, preq, snap)
+                ids = pool.block_table[slot][:snap["n_pages"]]
+                # the restored slot reads back EXACTLY its snapshotted pages
+                np.testing.assert_array_equal(
+                    np.asarray(pool.state["k_pages"][:, ids]), snap["k"])
+                np.testing.assert_array_equal(
+                    np.asarray(pool.state["v_pages"][:, ids]), snap["v"])
+        elif op == "cancel":
+            if req is not None:                 # cancel an active stream
+                pool.retire(slot)
+                assert bool(
+                    jnp.isneginf(pool.state["go"].scores[:, slot]).all())
+            elif parked:                        # cancel a parked snapshot
+                parked.pop(min(parked))         # pages were freed at preempt
+        pool.audit()
+        pool.alloc.check()
+    for s, o in enumerate(pool.owner):          # drain
+        if o is not None:
+            pool.retire(s)
+    pool.audit()
+    assert pool.alloc.pages_in_use == 0
+    assert bool(jnp.isneginf(pool.state["go"].scores).all())

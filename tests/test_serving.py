@@ -15,7 +15,8 @@ from repro.configs.registry import get_config
 from repro.launch.serve import generate
 from repro.models.model import (init_decode_slot, init_decode_state,
                                 model_init, prefill, write_decode_slot)
-from repro.serving import ServingEngine
+from repro.serving import (QueueFull, RequestStatus, RequestTooLarge,
+                           ServingEngine)
 from repro.serving.scheduler import FIFOScheduler, Request
 
 MAX_TOKENS = 48
@@ -512,3 +513,214 @@ def test_chunked_prefill_moe_deterministic_and_go_clean():
     assert (ids[scores > 0] < 27).all() and (ids[scores > 0] >= 0).all(), \
         "non-prompt position cached with positive score"
     assert int(st["t"]) == 27
+
+
+# ----------------------------------------------------------- fault domain
+
+def test_deadline_expires_queued_request_without_touching_survivors():
+    """deadline_s counts from submission, queue wait included: a request
+    that blows it while still queued retires TIMEOUT with zero tokens, and
+    the stream it was queued behind is untouched."""
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(21)
+    p0, p1 = (rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
+              for _ in range(2))
+    eng = ServingEngine(params, cfg, num_slots=1, max_tokens=MAX_TOKENS)
+    r0 = eng.submit(p0, 8)
+    r1 = eng.submit(p1, 6, deadline_s=0.0)    # expires while queued
+    fin = eng.run()
+    assert fin[r1].status is RequestStatus.TIMEOUT
+    assert fin[r1].tokens == [] and fin[r1].fail_reason
+    assert fin[r0].status is RequestStatus.DONE
+    assert fin[r0].tokens == _static_tokens(params, cfg, p0, 8)
+    assert eng.stats()["statuses"] == {"DONE": 1, "TIMEOUT": 1}
+
+
+def test_max_wall_retires_mid_decode_and_frees_the_slot():
+    """max_wall_s counts from first admission: an admitted stream that
+    blows it is retired TIMEOUT mid-decode — partial tokens kept (a true
+    prefix of its solo stream), slot + pages freed — while the cohabiting
+    stream stays bit-identical."""
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(22)
+    p0, p1 = (rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
+              for _ in range(2))
+    eng = ServingEngine(params, cfg, num_slots=2, max_tokens=MAX_TOKENS)
+    r0 = eng.submit(p0, 24, max_wall_s=0.0)   # blown right after admission
+    r1 = eng.submit(p1, 8)
+    fin = eng.run()
+    assert fin[r0].status is RequestStatus.TIMEOUT
+    ref0 = _static_tokens(params, cfg, p0, 24)
+    assert 0 < len(fin[r0].tokens) < 24
+    assert fin[r0].tokens == ref0[:len(fin[r0].tokens)]
+    assert fin[r1].status is RequestStatus.DONE
+    assert fin[r1].tokens == _static_tokens(params, cfg, p1, 8)
+    assert not eng.pool.any_active()
+    if eng.pool.paged:
+        assert eng.pool.alloc.pages_in_use == 0
+
+
+def test_cancel_across_the_request_lifecycle():
+    """cancel() retires a request wherever it is: queued (no tokens),
+    actively decoding (partial prefix kept, slot freed) — and returns False
+    for unknown ids and double cancels."""
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(23)
+    p0, p1 = (rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
+              for _ in range(2))
+    eng = ServingEngine(params, cfg, num_slots=1, max_tokens=MAX_TOKENS)
+    r0 = eng.submit(p0, 16)
+    r1 = eng.submit(p1, 8)                    # queued behind the only slot
+    for _ in range(6):
+        eng.step()
+    assert eng.cancel(r1)                     # still queued
+    assert eng.cancel(r0)                     # mid-decode
+    assert not eng.cancel(r0)                 # already terminal
+    assert not eng.cancel(10 ** 6)            # unknown id
+    fin = eng.run()
+    ref0 = _static_tokens(params, cfg, p0, 16)
+    assert fin[r0].status is RequestStatus.CANCELLED
+    assert 0 < len(fin[r0].tokens) < 16
+    assert fin[r0].tokens == ref0[:len(fin[r0].tokens)]
+    assert fin[r1].status is RequestStatus.CANCELLED and fin[r1].tokens == []
+    assert not eng.pool.any_active()
+    if eng.pool.paged:
+        assert eng.pool.alloc.pages_in_use == 0
+
+
+def test_cancel_mid_chunk_prefill_frees_claimed_pages():
+    """Cancelling a request whose chunked prefill is in flight must return
+    its up-front page claim AND reservation to the allocator, and the pool
+    must serve later requests as if it never existed."""
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(24)
+    long_p = rng.integers(0, cfg.vocab_size, size=28, dtype=np.int32)
+    p1 = rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)  # one-shot
+    eng = ServingEngine(params, cfg, num_slots=2, max_tokens=MAX_TOKENS,
+                        paged=True, page_size=8, prefill_chunk=8)
+    r0 = eng.submit(long_p, 8)
+    for _ in range(5):                        # chaos pressure may delay start
+        eng.step()
+        if eng._chunk_job is not None:
+            break
+    assert eng._chunk_job is not None and eng._chunk_job.req.request_id == r0
+    assert eng.pool.alloc.pages_in_use > 0
+    assert eng.cancel(r0)
+    assert eng._chunk_job is None
+    assert eng.pool.alloc.pages_in_use == 0
+    eng.pool.alloc.check()
+    assert eng.finished[r0].status is RequestStatus.CANCELLED
+    r1 = eng.submit(p1, 6)
+    fin = eng.run()
+    assert fin[r1].tokens == _static_tokens(params, cfg, p1, 6)
+
+
+def test_queue_full_is_typed_and_counted():
+    """The backlog cap raises QueueFull carrying the observed depth, old
+    RuntimeError handlers still catch it, and the rejection is counted —
+    without perturbing the admitted stream."""
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(25)
+    p = rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+    eng = ServingEngine(params, cfg, num_slots=1, max_tokens=MAX_TOKENS,
+                        max_queue=1)
+    r0 = eng.submit(p, 4)
+    with pytest.raises(QueueFull) as ei:
+        eng.submit(p, 4)
+    assert isinstance(ei.value, RuntimeError)
+    assert ei.value.depth == 1 and ei.value.max_queue == 1
+    assert eng.stats()["rejected"]["queue_full"] == 1
+    fin = eng.run()
+    assert fin[r0].status is RequestStatus.DONE
+    assert fin[r0].tokens == _static_tokens(params, cfg, p, 4)
+
+
+def test_oversized_rejection_is_typed_and_counted():
+    """Requests that could NEVER fit fail fast at submit with
+    RequestTooLarge (a ValueError subclass) on both bounds: the per-slot
+    max_tokens and the paged pool's whole-pool page budget."""
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(26)
+    big = rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
+
+    eng = ServingEngine(params, cfg, num_slots=2, max_tokens=16)
+    with pytest.raises(RequestTooLarge) as ei:
+        eng.submit(big, 8)                    # 12 + 8 > 16: never fits a slot
+    assert isinstance(ei.value, ValueError)
+    assert eng.stats()["rejected"]["oversized"] == 1
+
+    # paged whole-pool bound: tighter than max_tokens when the pool is small
+    eng2 = ServingEngine(params, cfg, num_slots=2, max_tokens=48,
+                         paged=True, page_size=8, num_pages=4)
+    with pytest.raises(RequestTooLarge, match="pages"):
+        eng2.submit(big, 24)                  # needs 5 pages, pool has 3
+    assert eng2.stats()["rejected"]["oversized"] == 1
+
+
+@pytest.mark.parametrize("arch", ["llama_moe_4_16", "starcoder2-3b"])
+def test_page_pressure_preemption_resumes_bit_identical(arch):
+    """The tentpole pin: two low-priority streams fill the page pool; a
+    high-priority arrival evicts one (snapshot + page free), finishes, and
+    the evicted stream resumes via block-table surgery — every stream,
+    including the preempted-then-resumed one, equals running alone bit for
+    bit, and the pool drains clean."""
+    cfg, params = _setup(arch)
+    rng = np.random.default_rng(2)
+    lo = [rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+          for _ in range(2)]
+    hi = rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+    eng = ServingEngine(params, cfg, num_slots=3, max_tokens=MAX_TOKENS,
+                        paged=True, page_size=8, num_pages=9,
+                        preemption=True)
+    r_lo = [eng.submit(p, 24, priority=5) for p in lo]
+    r_hi = eng.submit(hi, 8, priority=0, arrival_step=6)
+    fin = eng.run()
+    s = eng.stats()
+    assert s["preemptions"] >= 1 and s["resumes"] >= 1
+    for rid, p, g in [(r_lo[0], lo[0], 24), (r_lo[1], lo[1], 24),
+                      (r_hi, hi, 8)]:
+        assert fin[rid].status is RequestStatus.DONE
+        assert fin[rid].tokens == _static_tokens(params, cfg, p, g), \
+            f"request {rid} diverged after preemption churn"
+    assert any(fin[r].preemptions >= 1 for r in r_lo)
+    if eng.chaos is None:   # deterministic outside the env-chaos lane
+        # the high-priority request overtook the stream evicted for it
+        assert fin[r_hi].finish_step < max(fin[r].finish_step for r in r_lo)
+    assert eng.pool.alloc.pages_in_use == 0
+    eng.pool.alloc.check()
+    eng.pool.audit()
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_nan_poison_quarantines_one_slot_not_its_cohabitants(paged):
+    """Poisoning one slot's decode state mid-flight retires THAT request
+    FAILED ("non-finite logits") with its pre-poison prefix kept — and the
+    cohabiting stream in the same pool finishes bit-identical."""
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(27)
+    p0, p1 = (rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
+              for _ in range(2))
+    kw = dict(num_slots=2, max_tokens=MAX_TOKENS)
+    if paged:
+        kw.update(paged=True, page_size=8)
+    eng = ServingEngine(params, cfg, **kw)
+    r0 = eng.submit(p0, 16)
+    r1 = eng.submit(p1, 16)
+    for _ in range(40):                       # decode a few tokens first
+        eng.step()
+        slot0 = next((s for s, o in enumerate(eng.pool.owner)
+                      if o is not None and o.request_id == r0), None)
+        if slot0 is not None and \
+                len(eng.pool.owner[slot0].tokens) >= 4:
+            break
+    eng.pool.poison_slot(slot0)
+    fin = eng.run()
+    assert fin[r0].status is RequestStatus.FAILED
+    assert fin[r0].fail_reason == "non-finite logits"
+    ref0 = _static_tokens(params, cfg, p0, 16)
+    assert 4 <= len(fin[r0].tokens) < 16
+    assert fin[r0].tokens == ref0[:len(fin[r0].tokens)]
+    ref1 = _static_tokens(params, cfg, p1, 16)
+    assert fin[r1].status is RequestStatus.DONE and fin[r1].tokens == ref1
+    assert not eng.pool.any_active()
+    assert eng.stats()["statuses"] == {"DONE": 1, "FAILED": 1}
