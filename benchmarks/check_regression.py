@@ -28,7 +28,15 @@ Gates:
     token streams (eviction/resume is invisible in the output), the
     high-priority p95 turnaround in engine ticks must stay strictly
     below admission blocking, and neither it nor the preemption count
-    may drift against the committed baseline.
+    may drift against the committed baseline;
+  * serving (``prefix_sharing``, deterministic: exact hit/page/token
+    integers on the shared-system-prompt trace): the prefix cache must
+    score hits, share pages, and skip prefill tokens, with sharing and
+    non-sharing streams bit-identical and no drift vs the baseline;
+  * serving (``expert_balance``, deterministic: tick windows on the
+    alternating two-class trace): expert-aware admission must touch
+    strictly fewer experts per decode tick than FIFO with bit-identical
+    streams, and the aware mean must not regress.
 
 Usage:  python benchmarks/check_regression.py \
             --baseline BENCH_moe_path.json --fresh /tmp/bench_fresh.json \
@@ -120,6 +128,8 @@ def check_serve(baseline: dict, fresh: dict) -> list[str]:
                 "refresh?)")
     errs += check_paged_attn(baseline, fresh)
     errs += check_preemption(baseline, fresh)
+    errs += check_prefix_sharing(baseline, fresh)
+    errs += check_expert_balance(baseline, fresh)
     return errs
 
 
@@ -198,6 +208,85 @@ def check_preemption(baseline: dict, fresh: dict) -> list[str]:
     return errs
 
 
+def check_prefix_sharing(baseline: dict, fresh: dict) -> list[str]:
+    """Gate the prefix-sharing section: the shared-system-prompt trace must
+    actually hit the cache (hits, shared pages, skipped prefill tokens all
+    positive — every one an exact integer over a deterministic trace), the
+    sharing and non-sharing engines must produce bit-identical streams
+    (sharing is correctness-neutral by construction), and none of the
+    integers may drift against the committed baseline."""
+    errs = []
+    f_px = fresh.get("prefix_sharing")
+    if f_px is None:
+        return ["serve: fresh report lacks the prefix_sharing section "
+                "(schema drift silently disarmed the sharing gate)"]
+    if "skipped" in f_px:
+        return []             # arch without a paged path — nothing to gate
+    on = f_px["on"]
+    if on["prefix_hits"] < 1:
+        errs.append("serve: the shared-system-prompt trace scored 0 prefix "
+                    "hits — the prefix cache went dead")
+    if not on["prefill_tokens_skipped"] > 0:
+        errs.append("serve: prefix sharing skipped 0 prefill tokens — "
+                    "cache hits no longer bypass prefill")
+    if not on["pages_shared"] > 0:
+        errs.append("serve: prefix sharing mapped 0 shared pages — "
+                    "copy-on-write page mapping went dead")
+    if not f_px.get("streams_match", False):
+        errs.append("serve: sharing and non-sharing engines produced "
+                    "different token streams — prefix sharing is no "
+                    "longer bit-identical")
+    b_px = baseline.get("prefix_sharing")
+    if b_px is not None and "skipped" not in b_px:
+        for key in ("prefix_hits", "pages_shared", "prefill_tokens_skipped"):
+            if on[key] != b_px["on"][key]:
+                errs.append(
+                    f"serve: prefix_sharing {key} drifted "
+                    f"{b_px['on'][key]} -> {on[key]} (the trace is "
+                    "deterministic — config/seed changed without a "
+                    "baseline refresh?)")
+    return errs
+
+
+def check_expert_balance(baseline: dict, fresh: dict) -> list[str]:
+    """Gate the expert-balance section: on the alternating two-class trace
+    the expert-aware scheduler must touch STRICTLY fewer experts per decode
+    tick than FIFO (the tiles-per-tick objective, reconstructed from
+    deterministic admit/finish windows), with bit-identical streams, and
+    the aware mean must not regress against the committed baseline."""
+    errs = []
+    f_eb = fresh.get("expert_balance")
+    if f_eb is None:
+        return ["serve: fresh report lacks the expert_balance section "
+                "(schema drift silently disarmed the balance gate)"]
+    if "skipped" in f_eb:
+        return []             # no MoE gate / no disjoint classes found
+    aware, fifo = f_eb["aware"]["mean_experts_per_tick"], \
+        f_eb["fifo"]["mean_experts_per_tick"]
+    if not aware < fifo:
+        errs.append(
+            f"serve: expert-aware admission must touch STRICTLY fewer "
+            f"experts per tick than FIFO: aware {aware} vs fifo {fifo}")
+    if not f_eb.get("streams_match", False):
+        errs.append("serve: expert-aware and FIFO engines produced "
+                    "different token streams — admission reordering is no "
+                    "longer correctness-neutral")
+    b_eb = baseline.get("expert_balance")
+    if b_eb is not None and "skipped" not in b_eb:
+        if aware > b_eb["aware"]["mean_experts_per_tick"] + EPS:
+            errs.append(
+                f"serve: expert_balance aware mean_experts_per_tick "
+                f"regressed {b_eb['aware']['mean_experts_per_tick']} -> "
+                f"{aware}")
+        if abs(fifo - b_eb["fifo"]["mean_experts_per_tick"]) > EPS:
+            errs.append(
+                f"serve: expert_balance fifo mean_experts_per_tick drifted "
+                f"{b_eb['fifo']['mean_experts_per_tick']} -> {fifo} (the "
+                "trace is deterministic — config/seed changed without a "
+                "baseline refresh?)")
+    return errs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_moe_path.json",
@@ -235,6 +324,19 @@ def main() -> None:
                               f"{pa['traffic_ratio']:.3f} (kernel "
                               f"{pa['hbm_kernel_bytes']}B < gather "
                               f"{pa['hbm_gather_bytes']}B)")
+            px = serve_fresh.get("prefix_sharing", {})
+            if "on" in px:
+                serve_msg += (
+                    f"; prefix_sharing {px['on']['prefix_hits']} hits / "
+                    f"{px['on']['prefill_tokens_skipped']} prefill tokens "
+                    f"skipped (streams_match={px['streams_match']})")
+            eb = serve_fresh.get("expert_balance", {})
+            if "aware" in eb:
+                serve_msg += (
+                    f"; expert_balance "
+                    f"{eb['fifo']['mean_experts_per_tick']:.2f} -> "
+                    f"{eb['aware']['mean_experts_per_tick']:.2f} "
+                    f"experts/tick")
             pe = serve_fresh.get("preemption", {})
             if "preempt" in pe:
                 serve_msg += (

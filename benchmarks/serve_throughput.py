@@ -40,6 +40,17 @@ Two head-to-head sections ride along in the JSON report:
                    invisible in the output), and the high-priority p95
                    turnaround in ENGINE TICKS under preemption stays
                    strictly below blocking. Wall clocks archived.
+  prefix_sharing   the shared-system-prompt trace with prefix sharing OFF
+                   vs ON: followers admit from the page-aligned prefix
+                   cache (refcounted copy-on-write pages, cached prefill
+                   logits) instead of re-prefilling. Gated, deterministic:
+                   prefix_hits / pages_shared / prefill_tokens_skipped are
+                   exact integers and the streams must be bit-identical.
+  expert_balance   an alternating two-routing-class workload under FIFO vs
+                   expert-aware admission: the mean experts touched per
+                   decode tick (reconstructed from the deterministic
+                   admit/finish windows — the planner's tiles-per-tick
+                   objective) must drop strictly, streams bit-identical.
 
 Compilation is excluded: each engine variant warms up prefill + its
 pool-width decode step on a throwaway request before the timed run.
@@ -339,6 +350,136 @@ def preemption_compare(params, cfg, rng, *, num_slots: int, max_tokens: int,
     }
 
 
+def prefix_sharing_compare(params, cfg, rng, *, num_slots: int,
+                           max_tokens: int, page_size: int,
+                           num_requests: int, prompt_len: int,
+                           gen: int) -> dict:
+    """The shared-system-prompt workload: every request carries the SAME
+    page-aligned prompt, arrivals staggered one per tick so the first
+    admission's deposit is live before the rest look it up. With sharing
+    OFF each admission pays a full prefill and private pages; with sharing
+    ON the followers map the donor's pages copy-on-write and emit their
+    first token from the cached prefill logits — zero prefill tokens.
+
+    Everything gated is deterministic (tick-based trace, greedy decode):
+    prefix_hits / pages_shared / prefill_tokens_skipped are exact integers,
+    and the two modes' token streams must match bit for bit (sharing is
+    correctness-neutral by construction). Wall clocks are archived only."""
+    from repro.serving import ServingEngine
+
+    prompt = rng.integers(0, cfg.vocab_size, size=prompt_len, dtype=np.int32)
+    gens = rng.integers(max(1, gen // 2), gen + 1, size=num_requests)
+    arrivals = np.arange(num_requests)
+
+    def run_mode(share: bool):
+        kw = dict(num_slots=num_slots, max_tokens=max_tokens, paged=True,
+                  page_size=page_size, prefix_share=share)
+        warm = ServingEngine(params, cfg, **kw)
+        warm.submit(prompt, 2)
+        warm.run()
+        eng = ServingEngine(params, cfg, **kw)
+        ids = [eng.submit(prompt, int(g), arrival_step=int(a))
+               for g, a in zip(gens, arrivals)]
+        t0 = time.monotonic()
+        fin = eng.run()
+        dt = time.monotonic() - t0
+        st = eng.stats()
+        stream = tuple(tuple(int(t) for t in fin[i].tokens) for i in ids)
+        return {
+            "prefix_hits": st["prefix_hits"],
+            "pages_shared": st["pages_shared"],
+            "prefill_tokens_skipped": st["prefill_tokens_skipped"],
+            "steps": eng.step_count,
+            "wall_s": dt,
+            "statuses": st["statuses"],
+        }, stream
+
+    off, so = run_mode(False)
+    on, sn = run_mode(True)
+    return {
+        "trace": {"requests": num_requests, "prompt_len": prompt_len,
+                  "gen": gen, "slots": num_slots, "page_size": page_size},
+        "streams_match": so == sn,
+        "off": off,
+        "on": on,
+    }
+
+
+def expert_balance_compare(params, cfg, rng, *, num_slots: int,
+                           max_tokens: int, num_requests: int,
+                           prompt_len: int, gen: int) -> dict:
+    """Expert-aware admission vs FIFO on a two-class workload: scan the
+    vocabulary for two repeated-token prompts whose layer-0 gate probes
+    route to DISJOINT expert sets, then submit them alternating (worst case
+    for FIFO — every tick's batch unions both classes' experts). The
+    expert-aware scheduler groups same-class requests instead, so the mean
+    experts-touched-per-decode-tick (reconstructed from the deterministic
+    admit/finish tick windows against the probe signatures — the planner's
+    tiles-per-tick objective) drops strictly below FIFO, while every stream
+    stays bit-identical (admission order is correctness-neutral)."""
+    from repro.serving import ServingEngine
+    from repro.serving.engine import expert_signature
+
+    base_sig = base_prompt = None
+    pair = None
+    for tok in range(min(cfg.vocab_size, 256)):
+        p = np.full(prompt_len, tok, np.int32)
+        sig = np.asarray(expert_signature(params, p, cfg), bool)
+        if base_sig is None:
+            base_sig, base_prompt = sig, p
+        elif not (sig & base_sig).any():
+            pair = [(base_prompt, base_sig), (p, sig)]
+            break
+    if pair is None:
+        return {"skipped": "vocab scan found no disjoint expert signatures"}
+
+    prompts = [pair[i % 2][0] for i in range(num_requests)]
+    sigs = [pair[i % 2][1] for i in range(num_requests)]
+
+    def run_mode(aware: bool):
+        kw = dict(num_slots=num_slots, max_tokens=max_tokens,
+                  expert_aware=aware)
+        warm = ServingEngine(params, cfg, **kw)
+        warm.submit(prompts[0], 2)
+        warm.run()
+        eng = ServingEngine(params, cfg, **kw)
+        ids = [eng.submit(p, gen) for p in prompts]
+        t0 = time.monotonic()
+        fin = eng.run()
+        dt = time.monotonic() - t0
+        # experts the decode tick pays for = union of the active requests'
+        # probe signatures, per tick (admit/finish steps are deterministic)
+        per_tick = []
+        for t in range(eng.step_count):
+            union = np.zeros_like(sigs[0])
+            n = 0
+            for i, s in zip(ids, sigs):
+                if fin[i].admit_step <= t < fin[i].finish_step:
+                    union |= s
+                    n += 1
+            if n:
+                per_tick.append(int(union.sum()))
+        stream = tuple(tuple(int(t) for t in fin[i].tokens) for i in ids)
+        return {
+            "mean_experts_per_tick": float(np.mean(per_tick)),
+            "steps": eng.step_count,
+            "wall_s": dt,
+            "statuses": eng.stats()["statuses"],
+        }, stream
+
+    fifo, sf = run_mode(False)
+    aware, sa = run_mode(True)
+    return {
+        "trace": {"requests": num_requests, "prompt_len": prompt_len,
+                  "gen": gen, "slots": num_slots,
+                  "class_sizes": [int(pair[0][1].sum()),
+                                  int(pair[1][1].sum())]},
+        "streams_match": sf == sa,
+        "fifo": fifo,
+        "aware": aware,
+    }
+
+
 def run(arch: str = "llama_moe_4_16", smoke: bool = True,
         slot_counts=(1, 4, 8), num_requests: int = 8, prompt_len: int = 16,
         gen: int = 8, rate: float = 0.5, seed: int = 0,
@@ -405,9 +546,26 @@ def run(arch: str = "llama_moe_4_16", smoke: bool = True,
                 num_slots=3, max_tokens=16, page_size=8, num_pages=5,
                 num_requests=9 if smoke else 24, prompt_len=8, gen=8,
                 rate=0.4, hi_every=3)
+            # shared-system-prompt trace: one donor prefill, the rest admit
+            # from the prefix cache (page-aligned 16-token prompt, ps=8)
+            report["prefix_sharing"] = prefix_sharing_compare(
+                params, cfg, np.random.default_rng(seed),
+                num_slots=4, max_tokens=32 if smoke else 64, page_size=8,
+                num_requests=8 if smoke else 24, prompt_len=16, gen=8)
         else:
             report["paged_attn"] = {"skipped": "arch has no paged path"}
             report["preemption"] = {"skipped": "arch has no paged path"}
+            report["prefix_sharing"] = {"skipped": "arch has no paged path"}
+        if cfg.moe is not None and cfg.block == "attn" \
+                and cfg.encoder_layers == 0 and cfg.cross_attn_every == 0:
+            # alternating two-class workload on a dense 2-slot pool (no
+            # page confounds — this section isolates admission ORDER)
+            report["expert_balance"] = expert_balance_compare(
+                params, cfg, np.random.default_rng(seed),
+                num_slots=2, max_tokens=32 if smoke else 64,
+                num_requests=8 if smoke else 16, prompt_len=8, gen=8)
+        else:
+            report["expert_balance"] = {"skipped": "arch has no MoE gate"}
     if out:
         with open(out, "w") as f:
             json.dump(report, f, indent=2)
@@ -478,6 +636,21 @@ def main():
                   f"every slot's full table) — ratio "
                   f"{pa['traffic_ratio']:.3f}, streams_match="
                   f"{pa['streams_match']}")
+        px = rep.get("prefix_sharing", {})
+        if "skipped" not in px:
+            print(f"# prefix_sharing prompt={px['trace']['prompt_len']}tok "
+                  f"x{px['trace']['requests']}: "
+                  f"{px['on']['prefix_hits']} hits, "
+                  f"{px['on']['pages_shared']} pages shared, "
+                  f"{px['on']['prefill_tokens_skipped']} prefill tokens "
+                  f"skipped (off: 0), streams_match={px['streams_match']}")
+        eb = rep.get("expert_balance", {})
+        if "skipped" not in eb:
+            print(f"# expert_balance classes={eb['trace']['class_sizes']}: "
+                  f"mean experts/tick "
+                  f"{eb['fifo']['mean_experts_per_tick']:.2f} (fifo) -> "
+                  f"{eb['aware']['mean_experts_per_tick']:.2f} "
+                  f"(expert-aware), streams_match={eb['streams_match']}")
         pe = rep.get("preemption", {})
         if "skipped" not in pe:
             print(f"# preemption pages={pe['trace']['num_pages']}: hi-class "

@@ -91,7 +91,9 @@ def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
                      priorities: list | None = None,
                      preemption: bool = False, chaos=None,
                      deadline_s: float | None = None,
-                     max_wall_s: float | None = None) -> dict:
+                     max_wall_s: float | None = None,
+                     prefix_share: bool | None = None,
+                     expert_aware: bool | None = None) -> dict:
     """Run a list of prompts through the continuous-batching engine.
     With `mesh`, slot rows are sharded across the data-parallel replicas and
     every decode tick runs under the mesh (launch/sharding.py rules).
@@ -106,7 +108,12 @@ def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
     evicted streams resume bit-identically); `chaos` injects seeded faults
     (serving/chaos.py); `deadline_s`/`max_wall_s` bound every request's
     wall clock (TIMEOUT past them). Requests that end in a non-DONE
-    terminal status surface their partial streams.
+    terminal status surface their partial streams. `prefix_share` maps
+    prompts sharing a page-aligned prefix onto the same physical pages
+    copy-on-write and skips the shared prefill (paged pools);
+    `expert_aware` scores admission order by routing overlap with the
+    active batch (MoE attention archs) — both default to the
+    REPRO_PREFIX_SHARE / REPRO_EXPERT_AWARE env knobs.
     Returns per-request token arrays plus engine stats."""
     max_tokens = max_tokens or (
         max(len(p) for p in prompts) + gen_tokens + 1)
@@ -120,7 +127,8 @@ def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
                         prompt_buckets=prompt_buckets, paged=paged,
                         page_size=page_size, num_pages=num_pages,
                         prefill_chunk=prefill_chunk, preemption=preemption,
-                        chaos=chaos)
+                        chaos=chaos, prefix_share=prefix_share,
+                        expert_aware=expert_aware)
     ids = []
     for i, p in enumerate(prompts):
         step = arrival_steps[i] if arrival_steps else 0
@@ -174,6 +182,15 @@ def main():
                     help="page-pool size incl. the null page (0 = match the "
                          "dense pool's token capacity); smaller values "
                          "simulate a tighter HBM budget")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="copy-on-write prefix page sharing: prompts with a "
+                         "page-aligned shared prefix map the same physical "
+                         "pages and skip the shared prefill (needs --paged; "
+                         "like REPRO_PREFIX_SHARE=1)")
+    ap.add_argument("--expert-aware", action="store_true",
+                    help="expert-aware admission: order admissions by "
+                         "routing overlap with the active batch (MoE archs; "
+                         "like REPRO_EXPERT_AWARE=1)")
     ap.add_argument("--chunk-prefill", type=int, default=0,
                     help="admit prompts longer than this one chunk per tick "
                          "(0 = one-shot prefill); must divide max_tokens")
@@ -253,7 +270,9 @@ def main():
                            priorities=[args.priority] * len(prompts),
                            preemption=args.preemption, chaos=chaos,
                            deadline_s=args.deadline_s or None,
-                           max_wall_s=args.max_wall_s or None)
+                           max_wall_s=args.max_wall_s or None,
+                           prefix_share=args.prefix_share or None,
+                           expert_aware=args.expert_aware or None)
     s = res["stats"]
     print(f"served {s['finished']} requests over {s['steps']} ticks on "
           f"{args.slots} slots in {res['decode_s']:.2f}s "
@@ -261,7 +280,12 @@ def main():
           + (f" [mesh {s['mesh']}]" if s["mesh"] else "")
           + (f" [paged ps={s['page_size']} pages={s['num_pages']}]"
              if s["paged"] else "")
-          + (f" [chunk ticks {s['chunk_ticks']}]" if s["chunk_ticks"] else ""))
+          + (f" [chunk ticks {s['chunk_ticks']}]" if s["chunk_ticks"] else "")
+          + (f" [prefix hits {s['prefix_hits']} shared pages "
+             f"{s['pages_shared']} prefill skipped "
+             f"{s['prefill_tokens_skipped']} tok]"
+             if s["prefix_share"] else "")
+          + (" [expert-aware]" if s["expert_aware"] else ""))
     print(f"statuses: {s['statuses']}  preemptions: {s['preemptions']} "
           f"(resumes {s['resumes']})  tick retries: {s['tick_retries']}"
           + (f"  chaos: {s['chaos']}" if s["chaos"] else ""))

@@ -1,24 +1,30 @@
 """Continuous-batching serving over the paper's KV + GO cache pool.
 
   scheduler  priority-heap admission (FIFO within a level) +
-             max-slots/max-tokens policy (host-side)
+             max-slots/max-tokens policy (host-side); ExpertAwareScheduler
+             scores admission by routing overlap with the active batch
+             (per-expert load EWMAs, Sieve-style)
   paging     host page allocator for the paged KV pool (reservations,
-             lazy grow, null page)
+             lazy grow, null page, refcounted copy-on-write sharing) +
+             the page-aligned radix PrefixIndex (prompt prefixes -> shared
+             physical pages + cached prefill artifacts)
   pool       fixed-width slot pool owning the pooled decode state —
              dense per-slot KV rows or the paged block-table pool
-  engine     jitted masked decode step; admit -> prefill (one-shot or
-             chunked) -> decode -> retire; request-lifecycle fault domain
-             (deadlines, cancel, preemption/resume, NaN quarantine)
+  engine     jitted masked decode step; admit -> prefill (one-shot,
+             chunked, or skipped via prefix sharing) -> decode -> retire;
+             request-lifecycle fault domain (deadlines, cancel,
+             preemption/resume, NaN quarantine)
   chaos      seeded fault injector (REPRO_CHAOS lane)
 """
 from repro.serving.chaos import Chaos, ChaosError
 from repro.serving.engine import ServingEngine
-from repro.serving.paging import PageAllocator
+from repro.serving.paging import PageAllocator, PrefixIndex
 from repro.serving.pool import SlotPool
-from repro.serving.scheduler import (FIFOScheduler, QueueFull, Request,
-                                     RequestStatus, RequestTooLarge,
-                                     TERMINAL_STATUSES)
+from repro.serving.scheduler import (ExpertAwareScheduler, FIFOScheduler,
+                                     QueueFull, Request, RequestStatus,
+                                     RequestTooLarge, TERMINAL_STATUSES)
 
-__all__ = ["ServingEngine", "SlotPool", "FIFOScheduler", "Request",
-           "PageAllocator", "RequestStatus", "TERMINAL_STATUSES",
-           "QueueFull", "RequestTooLarge", "Chaos", "ChaosError"]
+__all__ = ["ServingEngine", "SlotPool", "FIFOScheduler",
+           "ExpertAwareScheduler", "Request", "PageAllocator", "PrefixIndex",
+           "RequestStatus", "TERMINAL_STATUSES", "QueueFull",
+           "RequestTooLarge", "Chaos", "ChaosError"]

@@ -100,9 +100,11 @@ from repro.models.model import (init_decode_state, paged_supported, prefill,
                                 serve_step)
 from repro.runtime.fault import StepSupervisor
 from repro.serving.chaos import Chaos
+from repro.serving.paging import PrefixIndex
 from repro.serving.pool import SlotPool
-from repro.serving.scheduler import (FIFOScheduler, QueueFull, Request,
-                                     RequestStatus, RequestTooLarge)
+from repro.serving.scheduler import (ExpertAwareScheduler, FIFOScheduler,
+                                     QueueFull, Request, RequestStatus,
+                                     RequestTooLarge)
 
 
 @partial(jax.jit, static_argnames="cfg")
@@ -167,6 +169,30 @@ def _env_on(name: str) -> bool:
         ("", "0", "false", "no")
 
 
+@partial(jax.jit, static_argnames="cfg")
+def _gate_probe(params, tokens, cfg):
+    """Layer-0 router probe over raw prompt EMBEDDINGS: which experts would
+    each token's top_k pick if the gate saw the embedding directly? A cheap
+    [T, d] @ [d, E] — no attention, no layers — so the scheduler can
+    fingerprint a prompt at submit time. It is a HEURISTIC (the real gate
+    input is the post-attention hidden state, and deeper layers route
+    independently), which is fine: the signature only steers admission
+    order, never any compute, so a wrong prediction costs batch composition
+    quality, not correctness. Expert-choice archs refine it at admission
+    from the actually-observed GO rows."""
+    x = params["embed"][tokens].astype(jnp.float32)           # [T, d]
+    gate = params["layers"]["moe"]["gate"][0]                 # layer 0 [d, E]
+    _, idx = jax.lax.top_k(x @ gate.astype(jnp.float32), cfg.moe.top_k)
+    return jnp.zeros((cfg.moe.num_experts,), bool).at[
+        idx.reshape(-1)].set(True)
+
+
+def expert_signature(params, prompt, cfg) -> np.ndarray:
+    """Predicted expert footprint of a prompt: bool [num_experts]."""
+    return np.asarray(
+        _gate_probe(params, jnp.asarray(prompt, jnp.int32), cfg))
+
+
 @dataclass
 class _ChunkJob:
     """One in-flight chunked prefill: a claimed slot, reserved pages, and a
@@ -192,7 +218,9 @@ class ServingEngine:
                  prompt_buckets: bool = False, paged: bool = False,
                  page_size: int = 16, num_pages: int | None = None,
                  prefill_chunk: int = 0, preemption: bool = False,
-                 chaos: Chaos | None = None):
+                 chaos: Chaos | None = None,
+                 prefix_share: bool | None = None,
+                 expert_aware: bool | None = None):
         self.params = params
         self.mesh = mesh
         force = _env_on("REPRO_FORCE_PAGED") or \
@@ -223,7 +251,38 @@ class ServingEngine:
         self.pool = SlotPool(cfg, num_slots, max_tokens, extras, mesh=mesh,
                              paged=paged, page_size=page_size,
                              num_pages=num_pages)
-        self.scheduler = FIFOScheduler(num_slots, max_tokens, max_queue)
+        # --- prefix sharing / expert-aware admission knobs ---
+        # resolved ONCE here (REPRO_FORCE_PAGED pattern): the env knobs are
+        # semantics-preserving CI lanes, so they silently no-op on engines
+        # whose shape can't support them; the explicit kwargs are API
+        # contracts and raise instead.
+        if prefix_share is None:
+            prefix_share = _env_on("REPRO_PREFIX_SHARE") and self.pool.paged
+        elif prefix_share and not self.pool.paged:
+            raise ValueError("prefix sharing needs a paged pool (it is "
+                             "copy-on-write block-table surgery)")
+        self.prefix_share = bool(prefix_share)
+        # expert-aware admission needs observable routing: a plain-attention
+        # MoE stack (the gate probe reads the stacked layer-0 gate)
+        moe_ok = (cfg.moe is not None and cfg.block == "attn"
+                  and cfg.encoder_layers == 0 and cfg.cross_attn_every == 0)
+        if expert_aware is None:
+            expert_aware = _env_on("REPRO_EXPERT_AWARE") and moe_ok
+        elif expert_aware and not moe_ok:
+            raise ValueError("expert-aware admission needs a plain-attention "
+                             "MoE config (it scores routing overlap)")
+        self.expert_aware = bool(expert_aware)
+        self.scheduler = (
+            ExpertAwareScheduler(num_slots, max_tokens, max_queue,
+                                 num_experts=cfg.moe.num_experts)
+            if self.expert_aware
+            else FIFOScheduler(num_slots, max_tokens, max_queue))
+        self.prefix_index = (
+            PrefixIndex(self.pool.alloc, self.pool.page_size)
+            if self.prefix_share else None)
+        self.prefix_hits = 0
+        self.pages_shared = 0
+        self.prefill_tokens_skipped = 0
         self.step_count = 0
         self.finished: dict[int, Request] = {}
         self._ids = itertools.count()
@@ -330,6 +389,14 @@ class ServingEngine:
                     f"max_new_tokens({req.max_new_tokens}) needs {need} "
                     f"pages of {self.pool.page_size} tokens, but the pool "
                     f"only has {usable} usable pages")
+        if self.expert_aware:
+            if self.mesh is None:
+                req.expert_sig = expert_signature(
+                    self.params, req.prompt, self.cfg)
+            else:
+                with self.mesh:
+                    req.expert_sig = expert_signature(
+                        self.params, req.prompt, self.cfg)
         req.arrival_time = req.submit_time = time.monotonic()
         try:
             self.scheduler.submit(req, now_step=self.step_count)
@@ -358,8 +425,7 @@ class ServingEngine:
             return True
         job = self._chunk_job
         if job is not None and job.req.request_id == rid:
-            if self.pool.paged:
-                self.pool.alloc.free(rid)   # claimed chunk pages + reservation
+            self.pool.release_pages(rid)   # claimed chunk pages + reservation
             self._chunk_job = None
             self._mark_finished(job.req, RequestStatus.CANCELLED, done,
                                 reason="cancelled")
@@ -400,6 +466,12 @@ class ServingEngine:
                     free.remove(self._chunk_job.slot)
                 busy = self.pool.num_active() + \
                     (1 if self._chunk_job is not None else 0)
+                if self.expert_aware:
+                    # refresh the cost model's view of the active batch —
+                    # each admission changes it, so re-note every iteration
+                    self.scheduler.note_active(
+                        [o.expert_sig for o in self.pool.owner
+                         if o is not None])
                 req = self.scheduler.next_admission(
                     busy, can_admit=self._can_admit)
                 if req is None:
@@ -411,10 +483,16 @@ class ServingEngine:
                 if req.request_id in self._preempted:
                     self._resume(free[0], req)
                 elif self.prefill_chunk and \
-                        req.prompt_len > self.prefill_chunk:
+                        req.prompt_len > self.prefill_chunk and \
+                        self._full_hit(req) is None and \
+                        self._ext_hit(req) is None:
+                    # long prompt with no cached prefix: chunked prefill.
+                    # A prefix hit skips (part of) the prefill, so it takes
+                    # the synchronous admission path below instead of
+                    # queueing behind the single chunk lane.
                     self._start_chunk_job(free[0], req)
                 else:
-                    self._admit(free[0], req, done)
+                    self._admit_any(free[0], req, done)
 
         self._note_occupancy()
 
@@ -474,9 +552,15 @@ class ServingEngine:
     def run(self) -> dict[int, Request]:
         """Tick until queue, trace, chunk run and pool drain; returns
         finished requests keyed by request id (token streams in
-        Request.tokens)."""
+        Request.tokens). Draining also flushes the prefix index: run() means
+        "this workload is over", so the cache's page pins are dropped and a
+        fully-retired pool again holds zero pages (open-ended tick loops —
+        `while has_work(): step()` — keep the cache warm across requests,
+        which is where prefix sharing actually pays)."""
         while self.has_work():
             self.step()
+        if self.prefix_index is not None:
+            self.pool.scrub_released(self.prefix_index.flush())
         return self.finished
 
     # -------------------------------------------------------------- internals
@@ -489,15 +573,42 @@ class ServingEngine:
             self.pool.num_active() + (1 if self._chunk_job is not None else 0))
 
     def _can_admit(self, req: Request) -> bool:
-        """Admission gate for the scheduler's head-of-queue: pages must be
-        reservable (paged pool), and a to-be-chunked prompt must wait for
-        the single chunk-run lane. A blocked head blocks the queue —
-        overtaking would break the starvation-freedom the priority heap
-        guarantees. A PREEMPTED head resumes from its snapshot: it needs
-        only its remaining worst case and never re-prefills, so the chunk
-        lane is irrelevant to it."""
+        """Admission gate with page-pressure cache reclaim: the prefix
+        index's node pins are OPPORTUNISTIC, a blocked admission is not —
+        if the head doesn't fit, evict LRU prefix-cache entries (scrubbing
+        the freed pages) until it does or the cache is dry. Reclaim happens
+        before live-stream preemption ever gets consulted, and is gated on
+        `pool.can_admit` so a chunk-lane wait (not page pressure) never
+        drains the cache."""
+        ok = self._can_admit_now(req)
+        while not ok and self.prefix_index is not None \
+                and len(self.prefix_index) and not self.pool.can_admit(req):
+            self.pool.scrub_released(self.prefix_index.reclaim_one())
+            ok = self._can_admit_now(req)
+        return ok
+
+    def _can_admit_now(self, req: Request) -> bool:
+        """One admission-gate evaluation: pages must be reservable (paged
+        pool), and a to-be-chunked prompt must wait for the single
+        chunk-run lane. A blocked head blocks the queue — overtaking would
+        break the starvation-freedom the priority heap guarantees. A
+        PREEMPTED head resumes from its snapshot: it needs only its
+        remaining worst case and never re-prefills, so the chunk lane is
+        irrelevant to it. A prefix-index hit discounts the shared pages
+        from the gate — copy-on-write references consume nothing from the
+        free list, so an admission the cache mostly covers squeezes in
+        where a cold one couldn't."""
         if req.request_id in self._preempted:
             return self.pool.can_resume(self._preempted[req.request_id])
+        if self.prefix_share:
+            entry = self._full_hit(req)
+            if entry is not None:
+                return self.pool.alloc.can_reserve(
+                    self.pool.pages_needed(req) - len(entry["nodes"]))
+            shared = self._ext_hit(req)
+            if shared is not None:
+                return self.pool.alloc.can_reserve(
+                    self.pool.pages_needed(req) - len(shared))
         if self.prefill_chunk and req.prompt_len > self.prefill_chunk \
                 and self._chunk_job is not None:
             return False
@@ -511,21 +622,41 @@ class ServingEngine:
         priority value; ties broken toward the most recent admission —
         least work lost) and report whether anything was evicted. The
         admission loop retries after each eviction, so exactly as many
-        victims fall as the head needs."""
+        victims fall as the head needs. An ExpertAwareScheduler remembers
+        WHICH candidate its cost model chose before the page gate blocked it
+        (`last_blocked`) — pages are freed for that request, not for the
+        arrival-order head it may have skipped; within a priority class the
+        victim with the most experts UNIQUE to it falls first (evicting it
+        shrinks the tick's expert set the most)."""
         if not (self.pool.paged and self.scheduler.queue):
             return False
-        head = self.scheduler.queue[0][2]
+        head = getattr(self.scheduler, "last_blocked", None) or \
+            self.scheduler.queue[0][2]
         if head.request_id not in self._preempted and self.prefill_chunk \
                 and head.prompt_len > self.prefill_chunk \
+                and self._full_hit(head) is None \
+                and self._ext_hit(head) is None \
                 and self._chunk_job is not None:
             return False     # blocked on the chunk LANE — eviction can't help
-        victims = [(owner.priority, owner.admit_step, slot)
+        victims = [(owner.priority, self._victim_rank(slot),
+                    owner.admit_step, slot)
                    for slot, owner in enumerate(self.pool.owner)
                    if owner is not None and owner.priority > head.priority]
         if not victims:
             return False
-        self._preempt(max(victims)[2])
+        self._preempt(max(victims)[3])
         return True
+
+    def _victim_rank(self, slot: int) -> int:
+        """Preemption cost model (expert-aware engines): victims touching
+        more experts nobody else needs rank higher. 0 under plain FIFO, so
+        the historical (priority, admit_step) order is unchanged."""
+        if not self.expert_aware:
+            return 0
+        others = [o.expert_sig for s, o in enumerate(self.pool.owner)
+                  if o is not None and s != slot]
+        return self.scheduler.victim_bonus(
+            self.pool.owner[slot].expert_sig, others)
 
     def _preempt(self, slot: int) -> None:
         """Evict the stream in `slot`: host-snapshot its live pages + GO
@@ -565,8 +696,7 @@ class ServingEngine:
                                 "deadline exceeded while preempted")
         job = self._chunk_job
         if job is not None and job.req.expired(now):
-            if self.pool.paged:
-                self.pool.alloc.free(job.req.request_id)
+            self.pool.release_pages(job.req.request_id)
             self._chunk_job = None
             self._mark_finished(job.req, RequestStatus.TIMEOUT, done,
                                 reason="deadline exceeded during prefill")
@@ -668,16 +798,21 @@ class ServingEngine:
         self._install(slot, req, slot_state, logits, done)
 
     def _install(self, slot: int, req: Request, slot_state, logits,
-                 done: list[Request], page_row=None) -> None:
-        """Shared tail of one-shot and chunked admission: emit the first
-        token, splat the prefilled state into the pool row, handle an
-        immediate EOS/length finish. `page_row` marks a paged chunk run
+                 done: list[Request], page_row=None, *,
+                 deposit: bool = True) -> None:
+        """Shared tail of one-shot, prefix-extension and chunked admission:
+        emit the first token, splat the prefilled state into the pool row,
+        handle an immediate EOS/length finish. `page_row` marks a paged run
         whose pages are already claimed and filled. Non-finite prefill
-        logits quarantine the request to FAILED before it ever occupies
-        the slot."""
+        logits quarantine the request to FAILED before it ever occupies the
+        slot. With prefix sharing on, the freshly-admitted prompt deposits
+        its prefill artifacts into the prefix index (`deposit=False` for
+        chunk runs — a chunked expert-choice prefill routes at per-chunk
+        capacities, so its GO rows and logits are not the one-shot
+        artifacts the cache promises)."""
         if not bool(np.isfinite(np.asarray(logits)).all()):
             if page_row is not None and self.pool.paged:
-                self.pool.alloc.free(req.request_id)   # claimed chunk pages
+                self.pool.release_pages(req.request_id)  # claimed run pages
             self._mark_finished(req, RequestStatus.FAILED, done,
                                 reason="non-finite prefill logits")
             return
@@ -688,10 +823,182 @@ class ServingEngine:
         req.tokens.append(first)
         self.pool.admit(slot, req, slot_state, first, key=key_next,
                         page_row=page_row)
+        if self.expert_aware:
+            self._refine_sig(slot, req)
+            self.scheduler.observe(req.expert_sig)
+        if deposit:
+            self._deposit(slot, req, logits)
         self._note_occupancy()       # before a possible instant retirement
         if self.pool.remaining[slot] <= 0 or \
                 (req.eos_id is not None and first == req.eos_id):
             self._finish(slot, done)
+
+    def _refine_sig(self, slot: int, req: Request) -> None:
+        """Replace the submit-time gate-probe prediction with the routing
+        the prefill actually OBSERVED, where observable: an expert-choice
+        arch's GO cache records exactly which (layer, expert, token) pairs
+        were kept — union over layers/capacity beats any probe. Unless the
+        union SATURATES: expert-choice hands every expert its capacity of
+        tokens whenever the prompt is long enough, and an all-experts
+        signature carries no grouping signal — keep the sparse layer-0
+        probe instead (the scheduler only needs a consistent fingerprint,
+        not ground truth)."""
+        if "go" not in self.pool.state:
+            return
+        tid = np.asarray(self.pool.state["go"].token_ids[:, slot])  # [L,E,k]
+        sig = (tid >= 0).any(axis=(0, 2))
+        if not sig.all():
+            req.expert_sig = sig
+
+    # --------------------------------------------------------- prefix sharing
+
+    def _full_hit(self, req: Request):
+        """Exact full-prompt prefix-index entry for `req`, or None. Requests
+        with per-request extras (cross-attn memory) never hit: their prefill
+        state depends on more than the prompt tokens."""
+        if self.prefix_index is None or req.extras is not None:
+            return None
+        return self.prefix_index.lookup_full(req.prompt)
+
+    def _ext_hit(self, req: Request):
+        """Shared page chain for a page-aligned PREFIX of `req`'s prompt, or
+        None. DENSE archs only: an MoE prefill routes with whole-sequence
+        competition (expert-choice capacity, batch-level token ranks), so a
+        prefix's KV under a longer prompt is not the KV this prompt's
+        prefill would produce — only the full-prompt exact match (where the
+        donor ran the identical prefill) is reusable for MoE. For dense
+        attention the prefix KV is position-local and exact, and the repo
+        pins chunked==one-shot prefill, so resuming prefill past the prefix
+        stays bit-identical."""
+        if self.prefix_index is None or req.extras is not None \
+                or self.cfg.moe is not None:
+            return None
+        shared = self.prefix_index.lookup_prefix(req.prompt)
+        ps = self.pool.page_size
+        while shared and len(shared) * ps >= req.prompt_len:
+            # the whole prompt is covered but no full entry exists (evicted,
+            # or the match is a prefix of a LONGER cached prompt): re-prefill
+            # the last page so the admission has prefill logits to emit from
+            shared.pop()
+        if not shared:
+            return None
+        if self.prefill_chunk and \
+                req.prompt_len - len(shared) * ps > self.prefill_chunk:
+            return None    # remainder is still a long prompt: chunk lane
+        return shared
+
+    def _admit_any(self, slot: int, req: Request,
+                   done: list[Request]) -> None:
+        """Admission dispatch: full-prompt cache hit (zero prefill), dense
+        prefix-extension hit (prefill only the remainder), or cold one-shot
+        prefill."""
+        entry = self._full_hit(req)
+        if entry is not None:
+            self._admit_from_cache(slot, req, entry, done)
+            return
+        shared = self._ext_hit(req)
+        if shared is not None:
+            self._admit_prefix_ext(slot, req, shared, done)
+            return
+        self._admit(slot, req, done)
+
+    def _admit_from_cache(self, slot: int, req: Request, entry: dict,
+                          done: list[Request]) -> None:
+        """Zero-compute admission from a full-prompt prefix-index entry:
+        O(1) block-table surgery instead of O(prompt) prefill. The first
+        token comes from the entry's cached prefill logits — the SAME
+        logits the donor's prefill emitted, so greedy streams are
+        bit-identical to a cold admission (and sampling requests draw from
+        the exact distribution under their own temperature/seed). The
+        donor's finite-logits check already vetted the entry."""
+        shared = self.prefix_index.entry_pages(entry)
+        first, key_next = self._first_token(req, jnp.asarray(entry["logits"]))
+        req.admit_step = self.step_count
+        req.admit_time = time.monotonic()
+        req.status = RequestStatus.ACTIVE
+        req.tokens.append(first)
+        self.pool.admit_from_prefix(slot, req, shared, entry, first,
+                                    key=key_next)
+        if req.expert_sig is None and entry["sig"] is not None:
+            req.expert_sig = entry["sig"]
+        if self.expert_aware:
+            self.scheduler.observe(req.expert_sig)
+        self.prefix_hits += 1
+        self.pages_shared += len(shared)
+        self.prefill_tokens_skipped += req.prompt_len
+        self._note_occupancy()
+        if self.pool.remaining[slot] <= 0 or \
+                (req.eos_id is not None and first == req.eos_id):
+            self._finish(slot, done)
+
+    def _admit_prefix_ext(self, slot: int, req: Request, shared,
+                          done: list[Request]) -> None:
+        """Dense prefix-extension admission: map the cached prefix's pages
+        copy-on-write and prefill ONLY the remainder of the prompt in one
+        paged chunk run (prefill_chunk starting past the prefix, attending
+        over the shared pages — the same machinery chunked prefill uses,
+        minus the chunks the cache already holds)."""
+        ps = self.pool.page_size
+        start = len(shared) * ps
+        row = self.pool.claim_prefix_ext_pages(req, shared)
+        rem = req.prompt_len - start
+        padded = -(-rem // ps) * ps
+        chunk = np.pad(req.prompt[start:], (0, padded - rem))
+        state = init_decode_state(self.cfg, 1, self.pool.max_tokens,
+                                  req.extras or {},
+                                  paged=(1, ps))
+        del state["k_pages"], state["v_pages"]
+        state["block_table"] = jnp.asarray(row, jnp.int32)[None, :]
+        state["k_pages"] = self.pool.state["k_pages"]
+        state["v_pages"] = self.pool.state["v_pages"]
+        args = (self.params, state, jnp.asarray(chunk, jnp.int32)[None, :],
+                self.cfg, jnp.asarray(start, jnp.int32),
+                jnp.asarray(rem, jnp.int32))
+        if self.mesh is not None:
+            with self.mesh:
+                state, logits = _jit_prefill_chunk(*args)
+        else:
+            state, logits = _jit_prefill_chunk(*args)
+        self.pool.state["k_pages"] = state.pop("k_pages")
+        self.pool.state["v_pages"] = state.pop("v_pages")
+        self.pool.state = self.pool._pin(self.pool.state)
+        self.prefix_hits += 1
+        self.pages_shared += len(shared)
+        self.prefill_tokens_skipped += start
+        self._install(slot, req, state, logits, done, page_row=row)
+
+    def _deposit(self, slot: int, req: Request, logits) -> None:
+        """Record a freshly-admitted prompt in the prefix index: pin its
+        full pages as radix nodes (refcount bump — nothing moves) and cache
+        the artifacts pages alone can't give a future consumer — the tail
+        KV past the last full page (it sits in this request's PRIVATE page,
+        which its decode will overwrite), the GO rows (TopKUpdate history —
+        not recomputable), and the prefill logits (the consumer's first
+        token without a forward pass). Deposited at ADMISSION, so the entry
+        serves consumers while the donor is still live AND after it retires
+        (the node refcounts keep the pages alive — "recently-retired"
+        donors cost nothing extra)."""
+        idx = self.prefix_index
+        if idx is None or req.extras is not None:
+            return
+        ps = self.pool.page_size
+        row = self.pool.block_table[slot]
+        n_full = req.prompt_len // ps
+        tail = req.prompt_len - n_full * ps
+        tail_k = tail_v = None
+        if tail:
+            pid = int(row[n_full])
+            tail_k = np.asarray(self.pool.state["k_pages"][:, pid, :tail])
+            tail_v = np.asarray(self.pool.state["v_pages"][:, pid, :tail])
+        go = None
+        if "go" in self.pool.state:
+            go = jax.tree.map(lambda a: np.asarray(a[:, slot]),
+                              self.pool.state["go"])
+        released = idx.deposit(
+            req.prompt, row[:n_full], tail_k=tail_k, tail_v=tail_v, go=go,
+            logits=np.asarray(logits, np.float32).reshape(1, -1),
+            sig=req.expert_sig)
+        self.pool.scrub_released(released)
 
     # ---------------------------------------------------------- chunk prefill
 
@@ -728,7 +1035,7 @@ class ServingEngine:
         if job is not None and job.pos >= len(job.prompt):
             self._chunk_job = None
             self._install(job.slot, job.req, job.state, job.logits, done,
-                          page_row=job.page_row)
+                          page_row=job.page_row, deposit=False)
 
     def _advance_chunk_job_once(self) -> None:
         job = self._chunk_job
@@ -786,6 +1093,27 @@ class ServingEngine:
         the chunk lane's claimed slot stays unoccupied and parked preempted
         requests are neither active nor finished."""
         self.pool.audit()
+        if self.pool.paged:
+            # refcount invariant: the allocator's page refcounts must equal
+            # the LIVE references — slot block-table entries, the chunk
+            # run's claimed row, and the prefix index's node pins. A page
+            # freed while referenced (or referenced while free) shows up
+            # here as a count mismatch.
+            refs: Counter[int] = Counter()
+            for slot, owner in enumerate(self.pool.owner):
+                if owner is not None:
+                    r = self.pool.block_table[slot]
+                    refs.update(int(p) for p in r[r != 0])
+            job_row = (self._chunk_job.page_row
+                       if self._chunk_job is not None else None)
+            if job_row is not None:
+                refs.update(int(p) for p in job_row[job_row != 0])
+            if self.prefix_index is not None:
+                refs.update(self.prefix_index.node_pages())
+            rc = Counter(self.pool.alloc.refcounts())
+            assert refs == rc, \
+                f"page refcounts != live references: {rc - refs} over, " \
+                f"{refs - rc} under"
         job = self._chunk_job
         if job is not None:
             assert self.pool.owner[job.slot] is None, \
@@ -820,6 +1148,12 @@ class ServingEngine:
             "pages_in_use": (self.pool.alloc.pages_in_use
                              if self.pool.paged else None),
             "chunk_ticks": self.chunk_ticks,
+            # --- prefix sharing / expert-aware admission ---
+            "prefix_share": self.prefix_share,
+            "expert_aware": self.expert_aware,
+            "prefix_hits": self.prefix_hits,
+            "pages_shared": self.pages_shared,
+            "prefill_tokens_skipped": self.prefill_tokens_skipped,
             # --- fault domain ---
             "statuses": dict(Counter(r.status.value for r in reqs)),
             "preemptions": self.preempted_total,

@@ -1,4 +1,4 @@
-"""Host-side page allocator for the paged KV(+GO) decode pool.
+"""Host-side page allocator + prefix index for the paged KV(+GO) pool.
 
 The device holds ONE fixed page pool (`k_pages`/`v_pages`,
 [L, num_pages, page_size, h, hd]); this allocator decides which physical
@@ -19,12 +19,28 @@ always grow to its declared maximum, and `can_reserve` is the scheduler's
 "pages available?" admission question. Retirement returns every owned page
 and drops the reservation in one call (`free`), which is also where the
 slot's GO-cache rows are reset by the pool.
+
+REFCOUNTED SHARING (copy-on-write prefix pages): pages are refcounted, so
+several owners can map the SAME physical page (`share` — e.g. requests
+whose prompts share a page-aligned prefix, plus the prefix-index nodes
+that keep a retired donor's pages alive). A shared page counts as OWNED by
+each sharer but consumes nothing from the free list; `free` only releases
+a page once its last reference drops. Divergent writes go through `fork`:
+the writer swaps its reference for a fresh private page (the caller copies
+the contents) and the donors never see the write. Scrub marks
+(`mark_scrub`/`pop_dirty`) defer PR 7's NaN-scrub to the page's LAST free:
+a quarantined request may share clean prefix pages with live streams, so
+zeroing must wait until nobody maps the page.
 """
 from __future__ import annotations
 
+import itertools
+from collections import Counter, OrderedDict
+
 
 class PageAllocator:
-    """Fixed-pool free-list allocator with worst-case reservations."""
+    """Fixed-pool free-list allocator with worst-case reservations and
+    refcounted (copy-on-write) page sharing."""
 
     def __init__(self, num_pages: int, page_size: int,
                  max_tokens: int | None = None):
@@ -47,6 +63,8 @@ class PageAllocator:
         self._free: list[int] = list(range(num_pages - 1, 0, -1))
         self._owned: dict[int, list[int]] = {}     # request id -> pages held
         self._reserved: dict[int, int] = {}        # request id -> max pages
+        self._refcnt: dict[int, int] = {}          # page -> live references
+        self._dirty: set[int] = set()              # scrub due at last free
 
     # ---------------------------------------------------------------- queries
 
@@ -62,8 +80,18 @@ class PageAllocator:
     def owned(self, rid: int) -> list[int]:
         return list(self._owned.get(rid, ()))
 
+    def refcount(self, page: int) -> int:
+        return self._refcnt.get(page, 0)
+
+    def refcounts(self) -> dict[int, int]:
+        """Copy of the page -> reference-count map (audit cross-checks it
+        against the live block-table references)."""
+        return dict(self._refcnt)
+
     def _outstanding(self) -> int:
-        """Pages promised to admitted requests but not yet handed out."""
+        """Pages promised to admitted requests but not yet handed out.
+        Shared pages count as handed out: a sharer's remaining free-list
+        demand is its worst case MINUS everything it already maps."""
         return sum(max(0, n - len(self._owned.get(r, ())))
                    for r, n in self._reserved.items())
 
@@ -77,13 +105,15 @@ class PageAllocator:
     def reserve(self, rid: int, n: int) -> None:
         """Promise `rid` up to `n` pages total. Re-reserving (e.g. a chunked
         prefill whose reservation predates admission) keeps the larger
-        promise."""
-        have = self._reserved.get(rid, 0)
+        promise. Pages `rid` already maps — including SHARED prefix pages
+        (`share` before `reserve`) — count as held, so only the remainder
+        must be coverable by the free list."""
+        have = max(self._reserved.get(rid, 0), len(self._owned.get(rid, ())))
         if n > have and not self.can_reserve(n - have):
             raise RuntimeError(
                 f"page pool over-committed: request {rid} wants {n} pages, "
                 f"{len(self._free)} free / {self._outstanding()} promised")
-        self._reserved[rid] = max(n, have)
+        self._reserved[rid] = max(n, self._reserved.get(rid, 0))
         self._owned.setdefault(rid, [])
 
     def alloc(self, rid: int, n: int) -> list[int]:
@@ -103,8 +133,49 @@ class PageAllocator:
                 f"page pool exhausted: request {rid} asked {n}, "
                 f"{len(self._free)} free")
         pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refcnt[p] = 1
         self._owned.setdefault(rid, []).extend(pages)
         return pages
+
+    def share(self, rid: int, pages: list[int]) -> None:
+        """Map already-allocated `pages` into `rid` copy-on-write: each
+        page's refcount rises by one and `rid` owns it like any other page,
+        but nothing leaves the free list. The sharer must never WRITE a
+        shared page (fork first) — the engine guarantees it structurally
+        (a consumer's first write lands past the shared full-page prefix)."""
+        owned = self._owned.setdefault(rid, [])
+        for p in pages:
+            p = int(p)
+            if self._refcnt.get(p, 0) < 1:
+                raise RuntimeError(
+                    f"request {rid} cannot share unallocated page {p}")
+            if p in owned:
+                raise RuntimeError(
+                    f"request {rid} already maps page {p}")
+            self._refcnt[p] += 1
+            owned.append(p)
+
+    def fork(self, rid: int, page: int) -> int:
+        """Copy-on-write fork: swap `rid`'s reference to SHARED `page` for a
+        fresh private page and return it (the caller copies the contents
+        before diverging). Fork draws from the free list OUTSIDE the
+        reservation accounting, so it can fail under pressure — the engine
+        never needs it (consumers never write shared pages); it exists for
+        explicit divergent writers (chaos poison) and the property tests."""
+        owned = self._owned.get(rid)
+        if owned is None or page not in owned:
+            raise KeyError(f"request {rid} does not map page {page}")
+        if self._refcnt.get(page, 0) < 2:
+            raise RuntimeError(
+                f"page {page} is not shared — fork would leak its twin")
+        if not self._free:
+            raise RuntimeError("page pool exhausted on fork")
+        new = self._free.pop()
+        self._refcnt[new] = 1
+        owned[owned.index(page)] = new
+        self._refcnt[page] -= 1
+        return new
 
     def can_grow(self, rid: int) -> bool:
         return rid in self._owned and \
@@ -128,33 +199,235 @@ class PageAllocator:
             raise RuntimeError("page pool exhausted on grow — admission "
                                "reservations make this unreachable")
         page = self._free.pop()
+        self._refcnt[page] = 1
         self._owned[rid].append(page)
         return page
 
     def free(self, rid: int) -> list[int]:
-        """Retirement: return every page `rid` holds and drop its
-        reservation. The freed page ids go back to the free list; the pool
-        resets the slot's GO rows (scores to -inf) on this same path."""
+        """Retirement: drop every reference `rid` holds and its reservation.
+        Returns the pages actually RELEASED — those whose last reference
+        this was (shared pages survive until their other owners free them).
+        Callers owning device state must route released pages through
+        `pop_dirty` and zero the marked ones (deferred NaN scrub)."""
         pages = self._owned.pop(rid, [])
         self._reserved.pop(rid, None)
-        self._free.extend(reversed(pages))
-        return pages
+        released = []
+        for p in pages:
+            self._refcnt[p] -= 1
+            if self._refcnt[p] == 0:
+                del self._refcnt[p]
+                released.append(p)
+        self._free.extend(reversed(released))
+        return released
+
+    # ------------------------------------------------------- deferred scrub
+
+    def mark_scrub(self, rid: int) -> None:
+        """Flag every page `rid` maps for a zero-on-last-free scrub (PR 7's
+        NaN quarantine): pages released right now are zeroed right now, but
+        a page still shared with live owners is zeroed only when the LAST
+        reference drops — scrubbing earlier would wipe state someone is
+        still reading; scrubbing never would leak NaN to a future stream."""
+        self._dirty.update(self._owned.get(rid, ()))
+
+    def pop_dirty(self, pages: list[int]) -> list[int]:
+        """Consume the scrub marks among just-released `pages`; the caller
+        zeroes exactly these on device. Marks on still-live pages stay."""
+        out = [p for p in pages if p in self._dirty]
+        self._dirty.difference_update(out)
+        return out
 
     # ------------------------------------------------------------- invariants
 
     def check(self) -> None:
         """Internal-consistency assertions (used by the property tests):
-        every page is either free or owned by exactly one request, and page
-        0 is neither."""
-        seen: set[int] = set()
-        for pool in [self._free, *self._owned.values()]:
-            for p in pool:
-                assert 0 < p < self.num_pages, f"bad page id {p}"
-                assert p not in seen, f"page {p} aliased"
-                seen.add(p)
-        assert len(seen) == self.num_pages - 1, \
-            f"leaked {self.num_pages - 1 - len(seen)} pages"
+        every page is either free or allocated — never both; an allocated
+        page's refcount equals the number of owners mapping it (no page
+        freed while referenced, no reference without a refcount); no page
+        leaks; scrub marks only on live pages; page 0 touches none of it."""
+        owners: Counter[int] = Counter()
+        for rid, pages in self._owned.items():
+            assert len(set(pages)) == len(pages), \
+                f"request {rid} maps a page twice"
+            owners.update(pages)
+        free_set = set(self._free)
+        assert len(free_set) == len(self._free), "free list holds duplicates"
+        for p in free_set:
+            assert 0 < p < self.num_pages, f"bad page id {p}"
+            assert p not in owners, f"page {p} both free and owned"
+            assert p not in self._refcnt, f"freed page {p} keeps a refcount"
+        for p, n in owners.items():
+            assert 0 < p < self.num_pages, f"bad page id {p}"
+            assert self._refcnt.get(p) == n, \
+                f"page {p}: refcount {self._refcnt.get(p)} != {n} owners"
+        assert set(self._refcnt) == set(owners), "refcount on unowned page"
+        assert len(free_set) + len(owners) == self.num_pages - 1, \
+            f"leaked {self.num_pages - 1 - len(free_set) - len(owners)} pages"
+        assert self._dirty <= set(owners), \
+            "scrub mark on a released page (scrub must fire ON last free)"
 
 
 def pages_for_tokens(num_tokens: int, page_size: int) -> int:
     return -(-num_tokens // page_size)
+
+
+class PrefixIndex:
+    """Page-aligned radix index over prompt tokens: maps prompt prefixes to
+    the PHYSICAL pages already holding their KV, plus the per-prompt prefill
+    artifacts a zero-compute admission needs.
+
+    Structure: one radix NODE per full page of prompt tokens, keyed by
+    (parent node, that page's token tuple) — so walking a new prompt's
+    leading pages yields the longest page-aligned shared prefix in O(pages).
+    Each node pins one physical page via the allocator's refcounts under a
+    per-node synthetic owner id (negative, so it can never collide with a
+    request id); donors may retire freely — the node keeps the page alive,
+    which is what "live or RECENTLY-RETIRED stream" means here.
+
+    A full-prompt ENTRY (deposited at admission, LRU-bounded by `capacity`)
+    additionally carries what page sharing alone cannot reproduce:
+
+      tail KV   the prompt positions past the last full page (host copy —
+                they live in the donor's PRIVATE page, which decode writes
+                into, so consumers get a copy-on-write copy up front);
+      GO rows   the expert-choice GO cache after prefill — TopKUpdate
+                history, NOT recomputable from the shared pages (the exact
+                problem the paper's GO cache solves);
+      logits    the prefill logits, so the consumer's first token (greedy
+                or sampled under ITS temperature/seed) needs no forward.
+
+    The index is pure host bookkeeping; page release flows back through the
+    pool so deferred scrub marks are honoured — every mutating method
+    returns the physical pages it RELEASED for exactly that reason."""
+
+    def __init__(self, alloc: PageAllocator, page_size: int,
+                 capacity: int = 32):
+        self.alloc = alloc
+        self.page_size = page_size
+        self.capacity = capacity
+        self._ids = itertools.count()
+        self._children: dict[tuple, int] = {}   # (parent, tokens) -> node id
+        self._nodes: dict[int, dict] = {}       # id -> {page, key, uses}
+        self._entries: OrderedDict[tuple, dict] = OrderedDict()
+        self.hits = 0
+        self.partial_hits = 0
+        self.deposits = 0
+        self.evictions = 0
+
+    @staticmethod
+    def node_rid(node_id: int) -> int:
+        """Synthetic allocator owner id for a node's page pin (negative —
+        disjoint from every request id by construction)."""
+        return -(node_id + 1)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def node_pages(self) -> list[int]:
+        """Physical pages pinned by the index (one per node) — the audit
+        counts these as live block-table references."""
+        return [n["page"] for n in self._nodes.values()]
+
+    def _walk(self, prompt) -> list[int]:
+        """Node chain matching the prompt's leading FULL pages."""
+        ps = self.page_size
+        chain, parent = [], -1
+        for i in range(len(prompt) // ps):
+            key = (parent, tuple(int(t) for t in prompt[i * ps:(i + 1) * ps]))
+            nid = self._children.get(key)
+            if nid is None:
+                break
+            chain.append(nid)
+            parent = nid
+        return chain
+
+    # ----------------------------------------------------------------- lookup
+
+    def lookup_full(self, prompt) -> dict | None:
+        """Exact full-prompt entry (zero-prefill admission) or None."""
+        key = tuple(int(t) for t in prompt)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+        return entry
+
+    def entry_pages(self, entry: dict) -> list[int]:
+        return [self._nodes[n]["page"] for n in entry["nodes"]]
+
+    def lookup_prefix(self, prompt) -> list[int]:
+        """Physical pages backing the longest page-aligned prefix of
+        `prompt` present in the index (possibly empty)."""
+        return [self._nodes[n]["page"] for n in self._walk(prompt)]
+
+    # ---------------------------------------------------------------- deposit
+
+    def deposit(self, prompt, page_ids, *, tail_k, tail_v, go, logits,
+                sig=None) -> list[int]:
+        """Record an admitted prompt: pin its full pages as radix nodes
+        (sharing the donor's physical `page_ids` — no data moves) and cache
+        the tail KV / GO rows / logits under the full-prompt key. Returns
+        pages RELEASED by any capacity eviction (caller scrubs them)."""
+        key = tuple(int(t) for t in prompt)
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return []
+        ps = self.page_size
+        n_full = len(key) // ps
+        assert len(page_ids) >= n_full, "deposit needs the full-page ids"
+        parent, chain = -1, []
+        for i in range(n_full):
+            ck = (parent, key[i * ps:(i + 1) * ps])
+            nid = self._children.get(ck)
+            if nid is None:
+                nid = next(self._ids)
+                self.alloc.share(self.node_rid(nid), [int(page_ids[i])])
+                self._children[ck] = nid
+                self._nodes[nid] = {"page": int(page_ids[i]), "key": ck,
+                                    "uses": 0}
+            chain.append(nid)
+            parent = nid
+        for nid in chain:
+            self._nodes[nid]["uses"] += 1
+        self._entries[key] = {
+            "nodes": chain, "tail_k": tail_k, "tail_v": tail_v,
+            "go": go, "logits": logits, "sig": sig, "prompt_len": len(key),
+        }
+        self.deposits += 1
+        released: list[int] = []
+        while len(self._entries) > self.capacity:
+            released += self._evict_one()
+        return released
+
+    def _evict_one(self) -> list[int]:
+        """Drop the least-recently-used entry; release the pages of nodes no
+        surviving entry walks through (a chain always references every
+        ancestor, so uses==0 implies no live descendants either)."""
+        _, entry = self._entries.popitem(last=False)
+        self.evictions += 1
+        released: list[int] = []
+        for nid in reversed(entry["nodes"]):
+            node = self._nodes[nid]
+            node["uses"] -= 1
+            if node["uses"] == 0:
+                del self._children[node["key"]]
+                del self._nodes[nid]
+                released += self.alloc.free(self.node_rid(nid))
+        return released
+
+    def reclaim_one(self) -> list[int]:
+        """Page-pressure hook: drop the LRU entry on demand (the engine
+        calls this when a blocked admission could use the pinned pages —
+        cache pins are opportunistic, a stalled request is not). Returns
+        the released pages for scrubbing."""
+        return self._evict_one() if self._entries else []
+
+    def flush(self) -> list[int]:
+        """Drop every entry and node, releasing all pinned pages (the
+        engine flushes on drain so a fully-retired pool holds zero pages).
+        Returns the released pages for scrubbing."""
+        released: list[int] = []
+        while self._entries:
+            released += self._evict_one()
+        assert not self._nodes and not self._children, \
+            "prefix index leaked nodes past its entries"
+        return released

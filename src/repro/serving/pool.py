@@ -227,6 +227,80 @@ class SlotPool:
         self.keys[slot] = 0 if key is None else np.asarray(key, np.uint32)
         req.slot = slot
 
+    # --------------------------------------------------------- prefix sharing
+
+    def claim_prefix_ext_pages(self, req: Request, shared) -> np.ndarray:
+        """Prefix-extension page claim: map the cached prefix's physical
+        pages copy-on-write as the request's leading block-table entries,
+        reserve its worst case, and allocate fresh pages for the rest of
+        the prompt + first decode write. The caller prefills ONLY the
+        non-shared remainder (prefill_chunk starting past the prefix) into
+        the fresh pages; the shared pages are never written — the first
+        write lands at position len(shared) * page_size or later."""
+        assert self.paged, "prefix sharing is paged-pool only"
+        rid = req.request_id
+        shared = [int(p) for p in shared]
+        self.alloc.share(rid, shared)
+        self.reserve_pages(req)
+        n0 = pages_for_tokens(req.prompt_len + 1, self.page_size)
+        fresh = self.alloc.alloc(rid, n0 - len(shared))
+        row = np.zeros(self.block_table.shape[1], np.int32)
+        row[:len(shared)] = shared
+        row[len(shared):n0] = fresh
+        return row
+
+    def admit_from_prefix(self, slot: int, req: Request, shared,
+                          entry: dict, first_token: int, key=None) -> None:
+        """Zero-prefill admission from a full-prompt prefix-index entry:
+        block-table surgery in the style of `restore()`. The prompt's full
+        pages map the donor's physical pages copy-on-write (`shared` —
+        nothing moves on device); the tail positions past the last full
+        page are scattered from the entry's host copy into the request's
+        FIRST fresh page (they live in the donor's private page, which its
+        decode overwrote); GO rows restore from the entry's snapshot (they
+        are TopKUpdate history — not recomputable, the reason the entry
+        carries them); the first decode input is the token the engine
+        derived from the entry's cached prefill logits. The request writes
+        only its fresh pages from here on, so the donor and every other
+        sharer stay bit-identical."""
+        assert self.paged and self.owner[slot] is None
+        rid = req.request_id
+        n_sh = len(shared)
+        shared = [int(p) for p in shared]
+        self.alloc.share(rid, shared)
+        self.reserve_pages(req)
+        n0 = pages_for_tokens(req.prompt_len + 1, self.page_size)
+        fresh = self.alloc.alloc(rid, n0 - n_sh)
+        row = np.zeros(self.block_table.shape[1], np.int32)
+        row[:n_sh] = shared
+        row[n_sh:n0] = fresh
+        self.block_table[slot] = row
+        tail = req.prompt_len - n_sh * self.page_size
+        if tail:
+            pid = int(fresh[0])
+            self.state["k_pages"] = self.state["k_pages"].at[
+                :, pid, :tail].set(jnp.asarray(entry["tail_k"]).astype(
+                    self.state["k_pages"].dtype))
+            self.state["v_pages"] = self.state["v_pages"].at[
+                :, pid, :tail].set(jnp.asarray(entry["tail_v"]).astype(
+                    self.state["v_pages"].dtype))
+        self.state["t"] = self.state["t"].at[slot].set(req.prompt_len)
+        if "go" in self.state:
+            self.state["go"] = jax.tree.map(
+                lambda a, r: a.at[:, slot].set(jnp.asarray(r).astype(a.dtype)),
+                self.state["go"], entry["go"])
+        self._push_block_table()
+        self.state = self._pin(self.state)
+        self.owner[slot] = req
+        self.pending[slot] = first_token
+        self.remaining[slot] = req.max_new_tokens - 1   # first token emitted
+        self.t_host[slot] = req.prompt_len
+        self.admitted_total += 1
+        self.temps[slot] = req.temperature
+        self.top_ps[slot] = req.top_p
+        self.keys[slot] = 0 if key is None else np.asarray(key, np.uint32)
+        req.slot = slot
+
     def grow_active(self) -> None:
         """Paged pools: make sure every active slot owns the page its NEXT
         decode write lands in (position t_host). Reservations guarantee the
@@ -258,27 +332,49 @@ class SlotPool:
             if req is not None:
                 self.t_host[slot] += 1
 
+    def release_pages(self, rid: int) -> None:
+        """Drop every page reference `rid` holds (request retirement, chunk
+        cancellation, prefix-index eviction all route here) and zero the
+        scrub-marked pages among those actually RELEASED — shared pages
+        survive until their last owner frees them, so the scrub fires
+        exactly on last free."""
+        if self.paged:
+            self.scrub_released(self.alloc.free(rid))
+
+    def scrub_released(self, released) -> None:
+        """Zero the deferred-scrub pages among just-released `released`
+        (PR 7's NaN quarantine: 0 * NaN is NaN, so a poisoned page must be
+        cleaned before any future stream can map it — but not before its
+        LAST reference drops, other owners may still be reading it)."""
+        if not self.paged or not released:
+            return
+        dirty = self.alloc.pop_dirty(released)
+        if not dirty:
+            return
+        ids = jnp.asarray(dirty, jnp.int32)
+        self.state["k_pages"] = self.state["k_pages"].at[:, ids].set(0)
+        self.state["v_pages"] = self.state["v_pages"].at[:, ids].set(0)
+        self.state = self._pin(self.state)
+
     def retire(self, slot: int, *, scrub: bool = False) -> Request:
         """Free a row: clear its caches (GO scores to -inf) and return the
         finished request. The row is immediately reusable. Paged pools
         return the slot's pages to the allocator on this same path — the
         page CONTENTS are normally left as-is (finite garbage is harmless:
         stale positions are score-masked, and 0-weighted FINITE values
-        vanish from the attention sum). `scrub=True` zeroes the pages first
-        — required when quarantining a NON-FINITE slot, because 0 * NaN is
-        NaN: a poisoned page handed to a future stream would leak straight
-        through the mask on the value side."""
+        vanish from the attention sum). `scrub=True` marks the pages for a
+        zero-on-last-free scrub — required when quarantining a NON-FINITE
+        slot, because 0 * NaN is NaN: a poisoned page handed to a future
+        stream would leak straight through the mask on the value side.
+        (Marked pages still shared with live owners are zeroed when their
+        final reference drops; only the slot's PRIVATE pages can actually
+        carry NaN — poison_slot forks shared pages before writing.)"""
         req = self.owner[slot]
         assert req is not None, f"slot {slot} is already free"
         if self.paged:
             if scrub:
-                row = self.block_table[slot]
-                ids = jnp.asarray(row[row != 0], jnp.int32)
-                self.state["k_pages"] = \
-                    self.state["k_pages"].at[:, ids].set(0)
-                self.state["v_pages"] = \
-                    self.state["v_pages"].at[:, ids].set(0)
-            self.alloc.free(req.request_id)
+                self.alloc.mark_scrub(req.request_id)
+            self.release_pages(req.request_id)
             self.block_table[slot] = 0
         self.state = self._pin(_reset_slot(self.state, slot))
         self.owner[slot] = None
@@ -377,7 +473,26 @@ class SlotPool:
         assert self.owner[slot] is not None, f"slot {slot} is free"
         t = max(0, int(self.t_host[slot]) - 1)
         if self.paged:
-            page = int(self.block_table[slot, t // self.page_size])
+            idx = t // self.page_size
+            page = int(self.block_table[slot, idx])
+            if self.alloc.refcount(page) > 1:
+                # the target position sits in a SHARED prefix page (this is
+                # the divergent write the COW contract forbids in place) —
+                # fork a private copy first so the donor and every other
+                # sharer keep their clean state. No spare page beyond the
+                # in-flight reservations -> skip this fault injection;
+                # stealing a promised page would break deadlock freedom.
+                if not self.alloc.can_reserve(1):
+                    return
+                new = self.alloc.fork(
+                    self.owner[slot].request_id, page)
+                self.state["k_pages"] = self.state["k_pages"].at[:, new].set(
+                    self.state["k_pages"][:, page])
+                self.state["v_pages"] = self.state["v_pages"].at[:, new].set(
+                    self.state["v_pages"][:, page])
+                self.block_table[slot, idx] = new
+                self._push_block_table()
+                page = new
             off = t % self.page_size
             self.state["k_pages"] = \
                 self.state["k_pages"].at[:, page, off].set(jnp.nan)

@@ -101,6 +101,13 @@ class Request:
     # --- deadlines (None = unbounded) ---
     deadline_s: float | None = None  # wall budget from submission
     max_wall_s: float | None = None  # wall budget from FIRST admission
+    # --- routing fingerprint (expert-aware admission; None = unknown) ---
+    # bool [num_experts]: which experts this request's prompt is PREDICTED
+    # to touch. Filled by the engine (layer-0 gate probe at submit, refined
+    # from the observed GO rows at admission). Purely a scheduling hint —
+    # never consulted on any compute path, so a wrong prediction costs
+    # batch composition quality, not correctness.
+    expert_sig: object = None
 
     # --- filled in by the engine ---
     status: RequestStatus = RequestStatus.QUEUED
@@ -243,3 +250,117 @@ class FIFOScheduler:
         """Earliest future arrival step (None when no trace-replay requests
         remain) — lets an idle engine fast-forward its tick counter."""
         return self._pending[0][0] if self._pending else None
+
+
+class ExpertAwareScheduler(FIFOScheduler):
+    """Admission driven by a routing-overlap cost model instead of pure
+    arrival order (Sieve-style: per-expert load EWMAs track expert
+    popularity as it evolves; the HD-MoE insight that batch composition
+    should key off OBSERVED routing).
+
+    The objective is the planner's occupancy telemetry: a decode tick over
+    requests that route to the same few experts packs those experts' tiles
+    full, while a batch spread across many experts pays tile setup for
+    mostly-empty lanes. So within the head priority class, admission picks
+    the candidate whose predicted expert signature
+
+      * overlaps most with the union of the ACTIVE batch's signatures
+        (reuses experts the tick already pays for),
+      * introduces fewest NEW experts, and
+      * avoids hot experts (EWMA load — spreading arrivals away from
+        recently-popular experts keeps per-expert queueing bounded as
+        popularity drifts).
+
+    STRICT-PRIORITY and STARVATION guarantees are inherited unchanged:
+    candidates come only from the head priority class (a lower class never
+    overtakes), the scan window is bounded (`window`, so the cost model
+    cannot indefinitely skip an old equal-priority request — and any
+    request it skips only waits while its competitors' overlap is strictly
+    better, which changes as the active set churns), and requests with no
+    signature (dense prompts, probe disabled) score 0 — an all-None
+    workload degenerates to EXACT FIFO order including head-blocking
+    semantics, which is what keeps the existing test matrix green.
+
+    Correctness-neutral by design: admission ORDER is the only output; the
+    decode math of an admitted request is row-independent, so streams stay
+    bit-identical to the FIFO path no matter how this reorders them."""
+
+    def __init__(self, max_slots: int, max_tokens: int, max_queue: int = 0,
+                 *, num_experts: int, ewma_alpha: float = 0.25,
+                 window: int = 8, load_weight: float = 0.125):
+        super().__init__(max_slots, max_tokens, max_queue)
+        self.num_experts = num_experts
+        self.ewma_alpha = ewma_alpha
+        self.window = window
+        self.load_weight = load_weight
+        self.load = np.zeros(num_experts, np.float64)  # per-expert EWMA
+        self._active_union = np.zeros(num_experts, bool)
+        # the request the page gate rejected this tick (the preemption
+        # machinery frees pages for THIS one, not the arrival-order head)
+        self.last_blocked: Request | None = None
+
+    # ------------------------------------------------------------ observation
+
+    def observe(self, sig) -> None:
+        """Fold one admitted request's observed/predicted routing into the
+        per-expert load EWMAs (Sieve's evolving-popularity signal)."""
+        if sig is None:
+            return
+        self.load *= 1.0 - self.ewma_alpha
+        self.load[np.asarray(sig, bool)] += self.ewma_alpha
+
+    def note_active(self, sigs) -> None:
+        """Refresh the active batch's expert-union (engine calls this with
+        the signatures of every slot owner before asking for admissions)."""
+        u = np.zeros(self.num_experts, bool)
+        for s in sigs:
+            if s is not None:
+                u |= np.asarray(s, bool)
+        self._active_union = u
+
+    # -------------------------------------------------------------- admission
+
+    def score(self, req: Request) -> float:
+        """Higher = admit sooner. 0 for unknown signatures so unscored
+        requests neither jump nor yield within their class."""
+        if req.expert_sig is None:
+            return 0.0
+        sig = np.asarray(req.expert_sig, bool)
+        new = sig & ~self._active_union
+        overlap = int((sig & self._active_union).sum())
+        return overlap - int(new.sum()) - \
+            self.load_weight * float(self.load[new].sum())
+
+    def victim_bonus(self, sig, other_sigs) -> int:
+        """Preemption cost model: how many experts does this victim touch
+        that NO other active request needs? Evicting the request with the
+        most unique experts shrinks the tick's expert set the most."""
+        if sig is None:
+            return 0
+        others = np.zeros(self.num_experts, bool)
+        for s in other_sigs:
+            if s is not None:
+                others |= np.asarray(s, bool)
+        return int((np.asarray(sig, bool) & ~others).sum())
+
+    def next_admission(self, num_active: int,
+                       can_admit=None) -> Request | None:
+        """Pick the best-scoring candidate among the first `window`
+        same-priority entries at the head of the heap. The page gate
+        applies to the CHOSEN candidate (its identity is remembered in
+        `last_blocked` so preemption frees pages for it, not for the
+        arrival-order head)."""
+        self.last_blocked = None
+        if not self.queue or num_active >= self.max_slots:
+            return None
+        head_prio = self.queue[0][0]
+        cands = heapq.nsmallest(
+            self.window, (e for e in self.queue if e[0] == head_prio))
+        best = min(cands, key=lambda e: (-self.score(e[2]), e[1]))
+        req = best[2]
+        if can_admit is not None and not can_admit(req):
+            self.last_blocked = req
+            return None
+        self.queue.remove(best)
+        heapq.heapify(self.queue)
+        return req

@@ -228,6 +228,37 @@ def test_sharded_engine_preemption_bit_identical():
                                       res1["tokens"][rid])
 
 
+@needs_mesh
+def test_sharded_prefix_share_bit_identical():
+    """Prefix page sharing + expert-aware admission under the mesh: the
+    shared-system-prompt workload (one donor prefill, cache-hit admissions
+    mapping refcounted pages copy-on-write through SHARDED page stores,
+    first tokens replayed from cached prefill logits) must equal the plain
+    unsharded FIFO engine bit for bit, with the prefix index drained."""
+    from repro.configs.registry import get_config
+    from repro.launch.serve import serve_continuous
+    from repro.models.model import model_init
+    cfg = get_config("llama_moe_4_16", smoke=True)
+    params = model_init(jax.random.PRNGKey(5), cfg)
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, cfg.vocab_size, size=16, dtype=np.int32)
+    kw = dict(num_slots=2, max_tokens=48, paged=True, page_size=8,
+              arrival_steps=[0, 0, 3, 5])
+    res0 = serve_continuous(params, cfg, [prompt] * 4, 8,
+                            prefix_share=False, expert_aware=False, **kw)
+    res1 = serve_continuous(params, cfg, [prompt] * 4, 8,
+                            mesh=_mesh((2, 2)), prefix_share=True,
+                            expert_aware=True, **kw)
+    assert res1["stats"]["mesh"] == {"data": 2, "model": 2}
+    assert res1["stats"]["prefix_hits"] == 3
+    assert res1["stats"]["prefill_tokens_skipped"] == 3 * 16
+    assert res1["stats"]["pages_in_use"] == 0
+    assert res1["stats"]["statuses"] == {"DONE": 4}
+    for rid in res0["tokens"]:
+        np.testing.assert_array_equal(res0["tokens"][rid],
+                                      res1["tokens"][rid])
+
+
 # ------------------------------------------------- single-device fallback
 
 def test_mesh_suite_subprocess():

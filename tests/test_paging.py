@@ -55,6 +55,91 @@ def test_allocator_never_leaks_or_aliases(ops, num_pages, page_size):
     assert alloc.free_pages == num_pages - 1
 
 
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(
+           st.sampled_from(["admit", "share", "fork", "grow", "free",
+                            "scrub"]),
+           st.integers(0, 5), st.integers(1, 4)),
+       max_size=60),
+       st.integers(4, 24), st.integers(1, 16))
+def test_refcounted_sharing_never_leaks_or_cross_aliases(ops, num_pages,
+                                                         page_size):
+    """Drive the REFCOUNTED allocator with arbitrary share / fork / grow /
+    free interleavings (invalid ops skipped the way the engine's gates
+    would skip them). After every op `check()` holds: refcounts equal the
+    owner count per page, no page is freed while referenced, no page
+    leaks. On top: a page is never shared into a request that didn't ask
+    (no alias across UNRELATED rids — only explicit share() creates
+    overlap), fork never mutates the DONOR's page list, and a scrub mark
+    survives until the page's LAST free — never past it."""
+    alloc = PageAllocator(num_pages, page_size)
+    live: set[int] = set()
+    expect: dict[int, set[int]] = {}        # rid -> expected owned pages
+    for op, rid, n in ops:
+        other = (rid + 1) % 6
+        if op == "admit" and rid not in live:
+            if alloc.can_reserve(n):
+                alloc.reserve(rid, n)
+                alloc.alloc(rid, max(1, n // 2))
+                live.add(rid)
+                expect[rid] = set(alloc.owned(rid))
+        elif op == "share" and rid in live and other in live:
+            # map ONE of `other`'s pages that `rid` doesn't hold yet —
+            # the engine's COW prefix mapping (share before reserve)
+            cand = [p for p in alloc.owned(other)
+                    if p not in expect[rid]]
+            if cand:
+                alloc.share(rid, [cand[0]])
+                expect[rid].add(cand[0])
+                assert alloc.refcount(cand[0]) >= 2
+        elif op == "fork" and rid in live:
+            shared = [p for p in expect[rid] if alloc.refcount(p) > 1]
+            if shared and alloc.free_pages:
+                donor_before = {r: set(alloc.owned(r))
+                                for r in live if r != rid}
+                new = alloc.fork(rid, shared[0])
+                expect[rid].discard(shared[0])
+                expect[rid].add(new)
+                assert alloc.refcount(new) == 1
+                # COW contract: no other owner's mapping moved
+                for r, pages in donor_before.items():
+                    assert set(alloc.owned(r)) == pages
+        elif op == "grow" and rid in live and alloc.can_grow(rid):
+            expect[rid].add(alloc.grow(rid))
+        elif op == "scrub" and rid in live:
+            alloc.mark_scrub(rid)
+        elif op == "free" and rid in live:
+            released = alloc.free(rid)
+            live.remove(rid)
+            mine = expect.pop(rid)
+            # released = exactly the pages whose LAST reference this was
+            still_held = set().union(*(expect[r] for r in live), set())
+            assert set(released) == {p for p in mine
+                                     if p not in still_held}
+            for p in released:
+                assert alloc.refcount(p) == 0
+            # the pool's release path: consume the scrub marks among the
+            # released pages (and zero them on device) — a mark must never
+            # outlive the page's last reference
+            dirty = alloc.pop_dirty(released)
+            assert set(dirty) <= set(released)
+        alloc.check()
+        # no alias across unrelated rids: every page overlap is one we
+        # created via share() (tracked in `expect`)
+        for r in live:
+            assert set(alloc.owned(r)) == expect[r]
+    for rid in list(live):
+        dirty = alloc.pop_dirty(alloc.free(rid))
+        assert not set(dirty) & {p for r in live if r != rid
+                                 for p in expect[r]}
+        live.remove(rid)
+    alloc.check()
+    assert alloc.pages_in_use == 0
+    assert alloc.free_pages == num_pages - 1
+    assert alloc.pop_dirty(list(range(num_pages))) == [], \
+        "scrub marks survived past the last free"
+
+
 def test_allocator_reservations_prevent_deadlock():
     """A reserved-but-unallocated page cannot be promised twice: with 6
     usable pages, reserving 4 leaves room for 2 — a request needing 3 must

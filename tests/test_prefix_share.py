@@ -1,0 +1,245 @@
+"""Prefix page sharing + expert-aware admission: correctness-neutral by
+construction, and these tests pin it.
+
+Sharing maps a consumer's leading block-table entries onto the donor's
+physical pages (copy-on-write, refcounted) and skips the shared prefill;
+expert-aware admission only REORDERS equal-priority admissions. Neither may
+change a single token: every batched decode op is row-wise independent, a
+full-prompt cache hit replays the donor's own prefill logits, and the dense
+prefix-extension path re-runs exactly the non-shared tail through the same
+chunked-prefill kernel. So each test runs the SAME workload through a plain
+FIFO paged engine and a sharing/expert-aware engine and asserts bit
+identity — plus the stats counters proving the fast paths actually fired
+and the allocator invariant that every shared page is returned on drain."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.launch.serve import serve_continuous
+from repro.models.model import model_init
+from repro.serving import ExpertAwareScheduler, ServingEngine
+from repro.serving.scheduler import Request
+
+MOE_ARCHS = ["llama_moe_4_16", "deepseek-moe-16b", "granite-moe-3b-a800m"]
+
+
+def _setup(arch):
+    cfg = get_config(arch, smoke=True)
+    params = model_init(jax.random.PRNGKey(5), cfg)
+    return cfg, params
+
+
+# ------------------------------------------------------- full-prompt sharing
+
+@pytest.mark.parametrize("arch", MOE_ARCHS)
+def test_full_match_bit_identical_to_fifo(arch, monkeypatch):
+    """Six requests with the SAME prompt (the shared-system-prompt shape):
+    the first admission prefills and deposits, the other five admit from
+    the cache — no prefill, pages shared copy-on-write, first token from
+    the donor's cached logits — and every stream equals the plain FIFO
+    engine bit for bit. Runs under REPRO_AUDIT=1 so the allocator refcount
+    sweep checks every tick; also the serving smoke for the paper's MoE
+    target configs (deepseek-moe-16b / granite-moe-3b-a800m)."""
+    monkeypatch.setenv("REPRO_AUDIT", "1")
+    cfg, params = _setup(arch)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=16, dtype=np.int32)
+    prompts = [prompt] * 6
+    kw = dict(num_slots=3, max_tokens=48, paged=True, page_size=8,
+              arrival_steps=[0, 0, 2, 4, 6, 8])
+    base = serve_continuous(params, cfg, prompts, 8,
+                            prefix_share=False, expert_aware=False, **kw)
+    shared = serve_continuous(params, cfg, prompts, 8,
+                              prefix_share=True, expert_aware=True, **kw)
+
+    assert shared["stats"]["prefix_share"] and shared["stats"]["expert_aware"]
+    assert shared["stats"]["prefix_hits"] == 5
+    assert shared["stats"]["prefill_tokens_skipped"] == 5 * 16
+    assert shared["stats"]["pages_shared"] == 5 * 2     # both full pages
+    assert shared["stats"]["statuses"] == {"DONE": 6}
+    # run() drained the prefix index: every shared page back in the free list
+    assert shared["stats"]["pages_in_use"] == 0
+    for rid in base["tokens"]:
+        np.testing.assert_array_equal(base["tokens"][rid],
+                                      shared["tokens"][rid])
+
+
+def test_dense_prefix_extension_bit_identical(monkeypatch):
+    """Dense arch (starcoder2-3b): requests share a page-aligned 16-token
+    prefix but diverge after it. Consumers map the two shared pages and
+    prefill ONLY their 6-token tail (chunked-prefill kernel from the shared
+    boundary) — bit-identical to cold full prefill because dense attention
+    over the prefix is position-wise reusable (no whole-sequence routing
+    competition, unlike MoE — which is why MoE gets full-prompt dedup
+    only)."""
+    monkeypatch.setenv("REPRO_AUDIT", "1")
+    cfg, params = _setup("starcoder2-3b")
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, cfg.vocab_size, size=16, dtype=np.int32)
+    prompts = [np.concatenate([
+        prefix, rng.integers(0, cfg.vocab_size, size=6, dtype=np.int32)])
+        for _ in range(5)]
+    kw = dict(num_slots=2, max_tokens=48, paged=True, page_size=8,
+              arrival_steps=[0, 2, 4, 6, 8])
+    base = serve_continuous(params, cfg, prompts, 6,
+                            prefix_share=False, **kw)
+    shared = serve_continuous(params, cfg, prompts, 6,
+                              prefix_share=True, **kw)
+
+    assert shared["stats"]["prefix_hits"] == 4
+    assert shared["stats"]["prefill_tokens_skipped"] == 4 * 16
+    assert shared["stats"]["pages_shared"] == 4 * 2
+    assert shared["stats"]["pages_in_use"] == 0
+    assert shared["stats"]["statuses"] == {"DONE": 5}
+    for rid in base["tokens"]:
+        np.testing.assert_array_equal(base["tokens"][rid],
+                                      shared["tokens"][rid])
+
+
+def test_sharing_survives_preemption(monkeypatch):
+    """A consumer admitted from the cache is evicted under page pressure
+    and resumed via snapshot/restore: the shared pages were snapshotted
+    like any others (host copy), the resume re-reserves private pages, and
+    the stream still equals the non-shared FIFO run bit for bit."""
+    monkeypatch.setenv("REPRO_AUDIT", "1")
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+    prompts = [prompt, prompt, prompt]
+    kw = dict(num_slots=3, max_tokens=48, paged=True, page_size=8,
+              num_pages=9, priorities=[5, 5, 0], arrival_steps=[0, 2, 6],
+              preemption=True)
+    base = serve_continuous(params, cfg, prompts, 24,
+                            prefix_share=False, **kw)
+    shared = serve_continuous(params, cfg, prompts, 24,
+                              prefix_share=True, **kw)
+    assert base["stats"]["preemptions"] >= 1
+    assert shared["stats"]["prefix_hits"] >= 1
+    assert shared["stats"]["statuses"] == {"DONE": 3}
+    assert shared["stats"]["pages_in_use"] == 0
+    for rid in base["tokens"]:
+        np.testing.assert_array_equal(base["tokens"][rid],
+                                      shared["tokens"][rid])
+
+
+def test_index_pins_yield_to_blocked_admissions(monkeypatch):
+    """Distinct prompts on a pool barely big enough for two streams: every
+    deposit pins node pages, so without pressure reclaim the fourth
+    admission could NEVER reserve and the engine would spin forever. The
+    engine must evict LRU prefix-cache entries for a blocked head — cache
+    pins are opportunistic, admissions are not — and still finish every
+    stream identically to the non-shared run."""
+    monkeypatch.setenv("REPRO_AUDIT", "1")
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab_size, size=16, dtype=np.int32)
+               for _ in range(4)]
+    kw = dict(num_slots=2, max_tokens=24, paged=True, page_size=8,
+              arrival_steps=[0, 2, 4, 6])
+    base = serve_continuous(params, cfg, prompts, 6,
+                            prefix_share=False, **kw)
+    shared = serve_continuous(params, cfg, prompts, 6,
+                              prefix_share=True, **kw)
+    assert shared["stats"]["statuses"] == {"DONE": 4}
+    assert shared["stats"]["pages_in_use"] == 0
+    for rid in base["tokens"]:
+        np.testing.assert_array_equal(base["tokens"][rid],
+                                      shared["tokens"][rid])
+
+
+# ----------------------------------------------------------- explicit errors
+
+def test_explicit_flags_validate_config():
+    """Explicit kwargs on unsupported shapes are hard errors (the env knobs
+    silently no-op instead — that asymmetry is what makes the CI lanes
+    semantics-preserving)."""
+    cfg, params = _setup("llama_moe_4_16")
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(params, cfg, num_slots=2, max_tokens=48,
+                      prefix_share=True)          # dense pool: nothing to map
+    dense_cfg, dense_params = _setup("starcoder2-3b")
+    with pytest.raises(ValueError):
+        ServingEngine(dense_params, dense_cfg, num_slots=2, max_tokens=48,
+                      expert_aware=True)          # no MoE: nothing to score
+
+
+# ------------------------------------------------- expert-aware scheduler
+
+def _req(rid, sig=None, priority=0):
+    return Request(request_id=rid, prompt=np.zeros(4, np.int32),
+                   max_new_tokens=4, priority=priority, expert_sig=sig)
+
+
+def test_expert_aware_degenerates_to_fifo_without_signatures():
+    """All-None signatures score 0, so admission order — including the
+    blocked-head semantics the page gate relies on — is exactly FIFO.
+    This is the property that keeps the whole existing serving test matrix
+    valid under ExpertAwareScheduler."""
+    sched = ExpertAwareScheduler(2, 64, num_experts=4)
+    for i in range(4):
+        sched.submit(_req(i))
+    assert sched.next_admission(0).request_id == 0
+    assert sched.next_admission(1).request_id == 1
+    assert sched.next_admission(2) is None          # max_slots
+    # a blocked head blocks everything behind it (no overtaking)
+    assert sched.next_admission(1, can_admit=lambda r: False) is None
+    assert sched.last_blocked.request_id == 2
+    assert sched.next_admission(1).request_id == 2
+
+
+def test_expert_aware_groups_overlapping_requests():
+    """With slot owners routing to experts {0,1}, the scheduler admits the
+    overlapping candidate ahead of an earlier-arrived disjoint one — but
+    never across a priority class, and the EWMA load term steers between
+    otherwise-equal candidates toward cold experts."""
+    sched = ExpertAwareScheduler(4, 64, num_experts=4)
+    A = np.array([1, 1, 0, 0], bool)      # overlaps the active batch
+    B = np.array([0, 0, 1, 1], bool)      # disjoint
+    sched.note_active([A])
+    sched.submit(_req(0, sig=B))
+    sched.submit(_req(1, sig=A))
+    assert sched.next_admission(1).request_id == 1    # overlap wins
+    assert sched.next_admission(1).request_id == 0
+
+    # strict priority is never traded for overlap
+    sched.submit(_req(2, sig=B, priority=0))
+    sched.submit(_req(3, sig=A, priority=1))
+    assert sched.next_admission(1).request_id == 2
+    assert sched.next_admission(1).request_id == 3
+
+    # equal overlap: EWMA load breaks the tie toward the colder experts
+    sched.note_active([])
+    C = np.array([1, 0, 0, 0], bool)
+    D = np.array([0, 0, 0, 1], bool)
+    for _ in range(4):
+        sched.observe(C)                  # expert 0 is hot
+    sched.submit(_req(4, sig=C))
+    sched.submit(_req(5, sig=D))
+    assert sched.next_admission(0).request_id == 5
+    assert sched.next_admission(1).request_id == 4
+
+    # victim cost model: the request with the most unique experts
+    assert sched.victim_bonus(B, [A, C]) == 2
+    assert sched.victim_bonus(A, [A, C]) == 0
+    assert sched.victim_bonus(None, [A]) == 0
+
+
+def test_expert_aware_engine_reorders_without_changing_streams():
+    """End-to-end: expert-aware admission on a 1-slot pool may reorder the
+    queue, but every request's stream still equals the FIFO run — admission
+    order is correctness-neutral because decode rows are independent."""
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+               for _ in range(4)]
+    kw = dict(num_slots=1, max_tokens=32, paged=True, page_size=8)
+    base = serve_continuous(params, cfg, prompts, 6,
+                            expert_aware=False, **kw)
+    aware = serve_continuous(params, cfg, prompts, 6,
+                             expert_aware=True, **kw)
+    assert aware["stats"]["expert_aware"]
+    assert aware["stats"]["statuses"] == {"DONE": 4}
+    for rid in base["tokens"]:
+        np.testing.assert_array_equal(base["tokens"][rid],
+                                      aware["tokens"][rid])
