@@ -169,28 +169,46 @@ def _env_on(name: str) -> bool:
         ("", "0", "false", "no")
 
 
+# the submit-time gate probe examines at most this many leading prompt
+# tokens, zero-padded to exactly this length: ONE probe compile per config
+# instead of one per distinct prompt length (a per-length retrace would
+# spike submit() latency on varied-length workloads)
+_PROBE_TOKENS = 64
+
+
 @partial(jax.jit, static_argnames="cfg")
-def _gate_probe(params, tokens, cfg):
+def _gate_probe(params, tokens, valid, cfg):
     """Layer-0 router probe over raw prompt EMBEDDINGS: which experts would
     each token's top_k pick if the gate saw the embedding directly? A cheap
-    [T, d] @ [d, E] — no attention, no layers — so the scheduler can
-    fingerprint a prompt at submit time. It is a HEURISTIC (the real gate
-    input is the post-attention hidden state, and deeper layers route
-    independently), which is fine: the signature only steers admission
+    [P, d] @ [d, E] over a FIXED [_PROBE_TOKENS] leading slice (pad rows
+    masked out of the scatter) — no attention, no layers, one compile — so
+    the scheduler can fingerprint a prompt at submit time. It is a
+    HEURISTIC twice over (the real gate input is the post-attention hidden
+    state, deeper layers route independently, and tokens past the probe
+    window are unseen), which is fine: the signature only steers admission
     order, never any compute, so a wrong prediction costs batch composition
     quality, not correctness. Expert-choice archs refine it at admission
     from the actually-observed GO rows."""
-    x = params["embed"][tokens].astype(jnp.float32)           # [T, d]
+    x = params["embed"][tokens].astype(jnp.float32)           # [P, d]
     gate = params["layers"]["moe"]["gate"][0]                 # layer 0 [d, E]
     _, idx = jax.lax.top_k(x @ gate.astype(jnp.float32), cfg.moe.top_k)
+    # pad rows scatter to index E — out of range, dropped
+    idx = jnp.where((jnp.arange(tokens.shape[0]) < valid)[:, None],
+                    idx, cfg.moe.num_experts)
     return jnp.zeros((cfg.moe.num_experts,), bool).at[
-        idx.reshape(-1)].set(True)
+        idx.reshape(-1)].set(True, mode="drop")
 
 
 def expert_signature(params, prompt, cfg) -> np.ndarray:
-    """Predicted expert footprint of a prompt: bool [num_experts]."""
-    return np.asarray(
-        _gate_probe(params, jnp.asarray(prompt, jnp.int32), cfg))
+    """Predicted expert footprint of a prompt: bool [num_experts], from its
+    first _PROBE_TOKENS tokens."""
+    prompt = np.asarray(prompt, np.int32).reshape(-1)[:_PROBE_TOKENS]
+    valid = int(prompt.shape[0])
+    if valid < _PROBE_TOKENS:
+        prompt = np.pad(prompt, (0, _PROBE_TOKENS - valid))
+    return np.asarray(_gate_probe(
+        params, jnp.asarray(prompt, jnp.int32),
+        jnp.asarray(valid, jnp.int32), cfg))
 
 
 @dataclass

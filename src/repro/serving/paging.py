@@ -284,6 +284,15 @@ class PrefixIndex:
     request id); donors may retire freely — the node keeps the page alive,
     which is what "live or RECENTLY-RETIRED stream" means here.
 
+    A node is only REUSED by a later deposit when its pinned page IS the
+    depositor's page for those positions (same physical page == same bytes,
+    by COW construction). Same tokens backed by a DIFFERENT page means the
+    two prompts prefilled those positions independently — under MoE's
+    whole-sequence routing the KV differs even though the tokens match —
+    so the depositor pins its own page under a PRIVATE node (key None,
+    unreachable from `_walk`): its full-prompt entry chains its own bytes,
+    never another prompt's, which is what keeps exact-match hits bit-exact.
+
     A full-prompt ENTRY (deposited at admission, LRU-bounded by `capacity`)
     additionally carries what page sharing alone cannot reproduce:
 
@@ -378,10 +387,21 @@ class PrefixIndex:
         for i in range(n_full):
             ck = (parent, key[i * ps:(i + 1) * ps])
             nid = self._children.get(ck)
+            if nid is not None and \
+                    self._nodes[nid]["page"] != int(page_ids[i]):
+                # same tokens, different physical page: the existing node
+                # pins ANOTHER prompt's prefill of these positions (MoE
+                # whole-sequence routing makes that KV non-interchangeable
+                # even though the tokens match). Chaining through it would
+                # hand a future exact-match consumer the other prompt's
+                # bytes — pin the depositor's own page under a private
+                # node instead.
+                nid, ck = None, None
             if nid is None:
                 nid = next(self._ids)
                 self.alloc.share(self.node_rid(nid), [int(page_ids[i])])
-                self._children[ck] = nid
+                if ck is not None:
+                    self._children[ck] = nid
                 self._nodes[nid] = {"page": int(page_ids[i]), "key": ck,
                                     "uses": 0}
             chain.append(nid)
@@ -409,7 +429,8 @@ class PrefixIndex:
             node = self._nodes[nid]
             node["uses"] -= 1
             if node["uses"] == 0:
-                del self._children[node["key"]]
+                if node["key"] is not None:     # private nodes never registered
+                    del self._children[node["key"]]
                 del self._nodes[nid]
                 released += self.alloc.free(self.node_rid(nid))
         return released

@@ -109,6 +109,12 @@ class Request:
     # batch composition quality, not correctness.
     expert_sig: object = None
 
+    # --- filled in by the scheduler ---
+    # times an ExpertAwareScheduler's cost model admitted a different
+    # same-priority candidate past this one; at max_skips the request is
+    # force-admitted regardless of score (the starvation bound)
+    times_skipped: int = 0
+
     # --- filled in by the engine ---
     status: RequestStatus = RequestStatus.QUEUED
     fail_reason: str | None = None   # set on FAILED/TIMEOUT/CANCELLED
@@ -271,15 +277,21 @@ class ExpertAwareScheduler(FIFOScheduler):
         recently-popular experts keeps per-expert queueing bounded as
         popularity drifts).
 
-    STRICT-PRIORITY and STARVATION guarantees are inherited unchanged:
-    candidates come only from the head priority class (a lower class never
-    overtakes), the scan window is bounded (`window`, so the cost model
-    cannot indefinitely skip an old equal-priority request — and any
-    request it skips only waits while its competitors' overlap is strictly
-    better, which changes as the active set churns), and requests with no
-    signature (dense prompts, probe disabled) score 0 — an all-None
-    workload degenerates to EXACT FIFO order including head-blocking
-    semantics, which is what keeps the existing test matrix green.
+    STRICT PRIORITY is inherited unchanged: candidates come only from the
+    head priority class, so a lower class never overtakes. STARVATION
+    within the class is bounded by an explicit AGING CAP, not by the scan
+    window (the window bounds the SCAN, not how often a candidate can be
+    passed over — an old request with a disjoint signature could otherwise
+    be skipped forever while overlapping same-priority arrivals keep
+    coming): every time the cost model admits past a scanned candidate its
+    `times_skipped` rises, and a candidate at `max_skips` is FORCE-ADMITTED
+    (oldest such first) regardless of score. So any request is admitted
+    after at most `max_skips` same-class admissions overtake it, no matter
+    how the active set churns. Requests with no signature (dense prompts,
+    probe disabled) score 0 — an all-None workload degenerates to EXACT
+    FIFO order including head-blocking semantics, which is what keeps the
+    existing test matrix green (ties break by submit order, so nothing is
+    ever skipped and the aging cap never engages).
 
     Correctness-neutral by design: admission ORDER is the only output; the
     decode math of an admitted request is row-independent, so streams stay
@@ -287,12 +299,14 @@ class ExpertAwareScheduler(FIFOScheduler):
 
     def __init__(self, max_slots: int, max_tokens: int, max_queue: int = 0,
                  *, num_experts: int, ewma_alpha: float = 0.25,
-                 window: int = 8, load_weight: float = 0.125):
+                 window: int = 8, load_weight: float = 0.125,
+                 max_skips: int = 16):
         super().__init__(max_slots, max_tokens, max_queue)
         self.num_experts = num_experts
         self.ewma_alpha = ewma_alpha
         self.window = window
         self.load_weight = load_weight
+        self.max_skips = max_skips
         self.load = np.zeros(num_experts, np.float64)  # per-expert EWMA
         self._active_union = np.zeros(num_experts, bool)
         # the request the page gate rejected this tick (the preemption
@@ -346,21 +360,30 @@ class ExpertAwareScheduler(FIFOScheduler):
     def next_admission(self, num_active: int,
                        can_admit=None) -> Request | None:
         """Pick the best-scoring candidate among the first `window`
-        same-priority entries at the head of the heap. The page gate
-        applies to the CHOSEN candidate (its identity is remembered in
-        `last_blocked` so preemption frees pages for it, not for the
-        arrival-order head)."""
+        same-priority entries at the head of the heap — unless a scanned
+        candidate has already been passed over `max_skips` times, in which
+        case the OLDEST such candidate is force-admitted (the starvation
+        bound; skips only count when an admission actually happens, so a
+        blocked tick ages nobody). The page gate applies to the CHOSEN
+        candidate (its identity is remembered in `last_blocked` so
+        preemption frees pages for it, not for the arrival-order head)."""
         self.last_blocked = None
         if not self.queue or num_active >= self.max_slots:
             return None
         head_prio = self.queue[0][0]
         cands = heapq.nsmallest(
             self.window, (e for e in self.queue if e[0] == head_prio))
-        best = min(cands, key=lambda e: (-self.score(e[2]), e[1]))
+        forced = [e for e in cands if e[2].times_skipped >= self.max_skips]
+        best = min(forced) if forced else \
+            min(cands, key=lambda e: (-self.score(e[2]), e[1]))
         req = best[2]
         if can_admit is not None and not can_admit(req):
             self.last_blocked = req
             return None
+        for e in cands:
+            if e is not best:
+                e[2].times_skipped += 1
+        req.times_skipped = 0
         self.queue.remove(best)
         heapq.heapify(self.queue)
         return req

@@ -97,6 +97,64 @@ def test_dense_prefix_extension_bit_identical(monkeypatch):
                                       shared["tokens"][rid])
 
 
+def test_moe_divergent_prefix_exact_repeat_bit_identical(monkeypatch):
+    """Two MoE prompts share a page-aligned leading page but diverge after
+    it; an exact repeat of the SECOND prompt then admits from the cache.
+    The second deposit must NOT chain through the first prompt's radix node
+    (same tokens, DIFFERENT physical page — MoE whole-sequence routing
+    makes that page another prompt's KV), or the repeat would COW-map the
+    first prompt's prefix and its stream would silently fork. This is the
+    shared-system-prompt trace shape with non-identical continuations."""
+    monkeypatch.setenv("REPRO_AUDIT", "1")
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(23)
+    lead = rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+    pa, pb = (np.concatenate([
+        lead, rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)])
+        for _ in range(2))
+    assert not np.array_equal(pa, pb)
+    prompts = [pa, pb, pb]                    # exact repeat of B last
+    kw = dict(num_slots=3, max_tokens=48, paged=True, page_size=8,
+              arrival_steps=[0, 2, 6])
+    base = serve_continuous(params, cfg, prompts, 8,
+                            prefix_share=False, **kw)
+    shared = serve_continuous(params, cfg, prompts, 8,
+                              prefix_share=True, **kw)
+    assert shared["stats"]["prefix_hits"] == 1        # the repeat of B only
+    assert shared["stats"]["statuses"] == {"DONE": 3}
+    assert shared["stats"]["pages_in_use"] == 0
+    for rid in base["tokens"]:
+        np.testing.assert_array_equal(base["tokens"][rid],
+                                      shared["tokens"][rid])
+
+
+def test_prefix_index_deposit_is_page_strict():
+    """Unit-level pin of the same invariant: depositing a prompt whose
+    leading page TOKENS match an existing node but whose physical page
+    differs pins the depositor's own page under a private node — its entry
+    never returns another prompt's page."""
+    from repro.serving.paging import PageAllocator, PrefixIndex
+    alloc = PageAllocator(num_pages=8, page_size=4)
+    idx = PrefixIndex(alloc, page_size=4)
+    alloc.reserve(1, 2)
+    a_pages = alloc.alloc(1, 2)
+    alloc.reserve(2, 2)
+    b_pages = alloc.alloc(2, 2)
+    pa = list(range(8))                       # two full pages
+    pb = pa[:4] + [9] * 4                     # same leading page tokens
+    idx.deposit(pa, a_pages, tail_k=None, tail_v=None, go=None, logits=None)
+    idx.deposit(pb, b_pages, tail_k=None, tail_v=None, go=None, logits=None)
+    assert idx.entry_pages(idx.lookup_full(pa)) == a_pages
+    assert idx.entry_pages(idx.lookup_full(pb)) == b_pages
+    # B's own leading page is pinned (privately), A's node untouched
+    assert alloc.refcount(b_pages[0]) == 2
+    assert alloc.refcount(a_pages[0]) == 2
+    idx.flush()                               # private nodes evict cleanly
+    assert alloc.refcount(a_pages[0]) == 1
+    assert alloc.refcount(b_pages[0]) == 1
+    alloc.check()
+
+
 def test_sharing_survives_preemption(monkeypatch):
     """A consumer admitted from the cache is evicted under page pressure
     and resumed via snapshot/restore: the shared pages were snapshotted
@@ -146,6 +204,28 @@ def test_index_pins_yield_to_blocked_admissions(monkeypatch):
     for rid in base["tokens"]:
         np.testing.assert_array_equal(base["tokens"][rid],
                                       shared["tokens"][rid])
+
+
+# --------------------------------------------------------------- gate probe
+
+def test_gate_probe_fixed_length_no_per_prompt_retrace():
+    """The submit-time gate probe runs over a fixed-length leading slice:
+    distinct prompt lengths must NOT each retrace/recompile it (submit
+    latency would spike on varied-length workloads), and a long prompt's
+    signature equals its probe-window head's."""
+    from repro.serving.engine import (_PROBE_TOKENS, _gate_probe,
+                                      expert_signature)
+    cfg, params = _setup("llama_moe_4_16")
+    rng = np.random.default_rng(2)
+    long = rng.integers(0, cfg.vocab_size, size=_PROBE_TOKENS + 33,
+                        dtype=np.int32)
+    before = _gate_probe._cache_size()
+    sigs = [expert_signature(params, long[:n], cfg)
+            for n in (3, 7, 20, _PROBE_TOKENS, len(long))]
+    assert _gate_probe._cache_size() - before <= 1
+    for s in sigs:
+        assert s.shape == (cfg.moe.num_experts,) and s.any()
+    np.testing.assert_array_equal(sigs[-1], sigs[-2])
 
 
 # ----------------------------------------------------------- explicit errors
@@ -223,6 +303,31 @@ def test_expert_aware_groups_overlapping_requests():
     assert sched.victim_bonus(B, [A, C]) == 2
     assert sched.victim_bonus(A, [A, C]) == 0
     assert sched.victim_bonus(None, [A]) == 0
+
+
+def test_expert_aware_starvation_bounded_by_aging_cap():
+    """An old request with a signature disjoint from the active batch must
+    not be skipped forever while overlapping same-priority requests keep
+    arriving: after max_skips pass-overs it is force-admitted regardless of
+    score (the window bounds the SCAN, the aging cap bounds the WAIT)."""
+    sched = ExpertAwareScheduler(8, 64, num_experts=4, max_skips=3)
+    A = np.array([1, 1, 0, 0], bool)          # matches the active batch
+    B = np.array([0, 0, 1, 1], bool)          # disjoint
+    sched.note_active([A])
+    sched.submit(_req(0, sig=B))              # the would-be starvee
+    picked = []
+    for rid in range(1, 12):                  # adversarial arrival stream
+        sched.submit(_req(rid, sig=A))
+        picked.append(sched.next_admission(0).request_id)
+        if picked[-1] == 0:
+            break
+    assert 0 in picked, "disjoint request starved"
+    assert len(picked) <= sched.max_skips + 1
+    # a blocked tick ages nobody: nothing was admitted past the candidate
+    sched.submit(_req(99, sig=B))
+    skips_before = [e[2].times_skipped for e in sched.queue]
+    assert sched.next_admission(0, can_admit=lambda r: False) is None
+    assert [e[2].times_skipped for e in sched.queue] == skips_before
 
 
 def test_expert_aware_engine_reorders_without_changing_streams():
