@@ -36,7 +36,13 @@ Gates:
   * serving (``expert_balance``, deterministic: tick windows on the
     alternating two-class trace): expert-aware admission must touch
     strictly fewer experts per decode tick than FIFO with bit-identical
-    streams, and the aware mean must not regress.
+    streams, and the aware mean must not regress;
+  * serving (``crash_recovery``, deterministic: tick-based trace, greedy
+    decode): recovering a journaled engine abandoned mid-decode must
+    restore live streams and replay journal-tail events (both exact
+    integers, no drift vs baseline) and drain every stream bit-identical
+    to the uninterrupted engine; the recovery wall clock is archived,
+    never gated.
 
 Usage:  python benchmarks/check_regression.py \
             --baseline BENCH_moe_path.json --fresh /tmp/bench_fresh.json \
@@ -130,6 +136,43 @@ def check_serve(baseline: dict, fresh: dict) -> list[str]:
     errs += check_preemption(baseline, fresh)
     errs += check_prefix_sharing(baseline, fresh)
     errs += check_expert_balance(baseline, fresh)
+    errs += check_crash_recovery(baseline, fresh)
+    return errs
+
+
+def check_crash_recovery(baseline: dict, fresh: dict) -> list[str]:
+    """Gate the kill–recover–resume section: the crash point must leave
+    real work to recover (live streams restored, journal-tail events
+    replayed — exact integers over a deterministic trace), the drained
+    streams must be bit-identical to the uninterrupted engine, and neither
+    integer may drift against the committed baseline. recovery_wall_ms is
+    host noise and is archived only."""
+    errs = []
+    f_cr = fresh.get("crash_recovery")
+    if f_cr is None:
+        return ["serve: fresh report lacks the crash_recovery section "
+                "(schema drift silently disarmed the recovery gate)"]
+    if "skipped" in f_cr:
+        return []             # arch without a paged path — nothing to gate
+    if not f_cr.get("streams_match", False):
+        errs.append("serve: recovered engine produced different token "
+                    "streams than the uninterrupted one — crash recovery "
+                    "is no longer bit-identical")
+    if f_cr["recovered_streams"] < 1:
+        errs.append("serve: recovery restored 0 live streams — the crash "
+                    "point no longer exercises slot restore")
+    if f_cr["replayed_events"] < 1:
+        errs.append("serve: recovery replayed 0 journal events — the "
+                    "crash point no longer exercises tail replay")
+    b_cr = baseline.get("crash_recovery")
+    if b_cr is not None and "skipped" not in b_cr:
+        for key in ("recovered_streams", "replayed_events"):
+            if f_cr[key] != b_cr[key]:
+                errs.append(
+                    f"serve: crash_recovery {key} drifted "
+                    f"{b_cr[key]} -> {f_cr[key]} (the trace is "
+                    "deterministic — config/seed changed without a "
+                    "baseline refresh?)")
     return errs
 
 
@@ -337,6 +380,13 @@ def main() -> None:
                     f"{eb['fifo']['mean_experts_per_tick']:.2f} -> "
                     f"{eb['aware']['mean_experts_per_tick']:.2f} "
                     f"experts/tick")
+            cr = serve_fresh.get("crash_recovery", {})
+            if "recovered_streams" in cr:
+                serve_msg += (
+                    f"; crash_recovery {cr['recovered_streams']} streams / "
+                    f"{cr['replayed_events']} events in "
+                    f"{cr['recovery_wall_ms']:.0f}ms "
+                    f"(streams_match={cr['streams_match']})")
             pe = serve_fresh.get("preemption", {})
             if "preempt" in pe:
                 serve_msg += (

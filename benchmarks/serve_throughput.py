@@ -46,6 +46,13 @@ Two head-to-head sections ride along in the JSON report:
                    logits) instead of re-prefilling. Gated, deterministic:
                    prefix_hits / pages_shared / prefill_tokens_skipped are
                    exact integers and the streams must be bit-identical.
+  crash_recovery   kill–recover–resume on a journaled trace: the engine is
+                   abandoned mid-decode at a fixed tick (the in-process
+                   SIGKILL analogue), ServingEngine.recover restores the
+                   latest committed snapshot and replays the journal tail,
+                   and the drained streams must be bit-identical to an
+                   uninterrupted engine (gated, with the replayed-event and
+                   restored-stream counts exact; recovery wall-ms archived).
   expert_balance   an alternating two-routing-class workload under FIFO vs
                    expert-aware admission: the mean experts touched per
                    decode tick (reconstructed from the deterministic
@@ -405,6 +412,78 @@ def prefix_sharing_compare(params, cfg, rng, *, num_slots: int,
     }
 
 
+def crash_recovery_compare(params, cfg, rng, *, num_slots: int,
+                           max_tokens: int, page_size: int,
+                           num_requests: int, prompt_len: int, gen: int,
+                           rate: float, crash_step: int,
+                           snapshot_every: int) -> dict:
+    """Kill–recover–resume on a journaled trace: run the Poisson trace on a
+    journaled engine, abandon it at `crash_step` ticks (the in-process
+    SIGKILL analogue — everything durable is already fsync'd), recover from
+    the journal directory, and drain.
+
+    Gated and deterministic (tick-based trace, greedy decode): the
+    recovered engine must finish EVERY stream bit-identical to an
+    uninterrupted engine (streams_match), the crash point must actually
+    leave live slots and journal-tail events to replay (recovered_streams,
+    replayed_events — exact integers, no drift vs baseline). The recovery
+    wall clock (restore + replay, before any decode tick) is archived as
+    `recovery_wall_ms`, not gated."""
+    import shutil
+    import tempfile
+
+    from repro.serving import ServingEngine
+
+    arrivals, prompts, gens = build_trace(
+        rng, num_requests, prompt_len, gen, rate, cfg.vocab_size)
+    kw = dict(num_slots=num_slots, max_tokens=max_tokens, paged=True,
+              page_size=page_size)
+
+    warm = ServingEngine(params, cfg, **kw)
+    warm.submit(prompts[0], 2)
+    warm.run()
+
+    ref_eng = ServingEngine(params, cfg, **kw)
+    ids = [ref_eng.submit(p, int(g), arrival_step=int(a))
+           for p, g, a in zip(prompts, gens, arrivals)]
+    ref_fin = ref_eng.run()
+    ref_stream = tuple(tuple(int(t) for t in ref_fin[i].tokens) for i in ids)
+
+    jdir = tempfile.mkdtemp(prefix="repro_crash_bench_")
+    try:
+        eng = ServingEngine(params, cfg, journal_dir=jdir,
+                            snapshot_every=snapshot_every, **kw)
+        for p, g, a in zip(prompts, gens, arrivals):
+            eng.submit(p, int(g), arrival_step=int(a))
+        for _ in range(crash_step):
+            eng.step()
+        live_at_crash = eng.pool.num_active()
+
+        t0 = time.monotonic()
+        rec = ServingEngine.recover(jdir, params, cfg)
+        recovery_wall_ms = (time.monotonic() - t0) * 1e3
+        recovered_streams = rec.pool.num_active()
+        fin = rec.run()
+        stream = tuple(tuple(int(t) for t in fin[i].tokens) for i in ids)
+        return {
+            "trace": {"requests": num_requests, "prompt_len": prompt_len,
+                      "gen": gen, "rate": rate, "slots": num_slots,
+                      "page_size": page_size},
+            "crash_step": crash_step,
+            "snapshot_every": snapshot_every,
+            "live_at_crash": live_at_crash,
+            "recovered_streams": recovered_streams,
+            "replayed_events": rec.replayed_events,
+            "snapshot_seq": rec.recovered_info["snapshot_seq"],
+            "recovery_wall_ms": recovery_wall_ms,       # archived, not gated
+            "journal_bytes": rec.stats()["journal_bytes"],
+            "streams_match": stream == ref_stream,
+            "statuses": rec.stats()["statuses"],
+        }
+    finally:
+        shutil.rmtree(jdir, ignore_errors=True)
+
+
 def expert_balance_compare(params, cfg, rng, *, num_slots: int,
                            max_tokens: int, num_requests: int,
                            prompt_len: int, gen: int) -> dict:
@@ -552,10 +631,18 @@ def run(arch: str = "llama_moe_4_16", smoke: bool = True,
                 params, cfg, np.random.default_rng(seed),
                 num_slots=4, max_tokens=32 if smoke else 64, page_size=8,
                 num_requests=8 if smoke else 24, prompt_len=16, gen=8)
+            # kill–recover–resume: crash mid-trace with slots live, recover
+            # from the journal, drain — streams must match uninterrupted
+            report["crash_recovery"] = crash_recovery_compare(
+                params, cfg, np.random.default_rng(seed),
+                num_slots=3, max_tokens=32 if smoke else 64, page_size=8,
+                num_requests=6 if smoke else 16, prompt_len=8, gen=8,
+                rate=1.0, crash_step=6, snapshot_every=4)
         else:
             report["paged_attn"] = {"skipped": "arch has no paged path"}
             report["preemption"] = {"skipped": "arch has no paged path"}
             report["prefix_sharing"] = {"skipped": "arch has no paged path"}
+            report["crash_recovery"] = {"skipped": "arch has no paged path"}
         if cfg.moe is not None and cfg.block == "attn" \
                 and cfg.encoder_layers == 0 and cfg.cross_attn_every == 0:
             # alternating two-class workload on a dense 2-slot pool (no
@@ -651,6 +738,13 @@ def main():
                   f"{eb['fifo']['mean_experts_per_tick']:.2f} (fifo) -> "
                   f"{eb['aware']['mean_experts_per_tick']:.2f} "
                   f"(expert-aware), streams_match={eb['streams_match']}")
+        cr = rep.get("crash_recovery", {})
+        if "skipped" not in cr:
+            print(f"# crash_recovery crash_step={cr['crash_step']}: "
+                  f"{cr['recovered_streams']} live streams restored, "
+                  f"{cr['replayed_events']} journal events replayed in "
+                  f"{cr['recovery_wall_ms']:.1f}ms, streams_match="
+                  f"{cr['streams_match']}")
         pe = rep.get("preemption", {})
         if "skipped" not in pe:
             print(f"# preemption pages={pe['trace']['num_pages']}: hi-class "

@@ -7,10 +7,16 @@ Layout:  <dir>/step_<N>/
 
 Fault-tolerance contract:
   * a crash mid-write leaves no COMMITTED marker -> restore() ignores it;
+  * orphaned uncommitted step dirs (crash between marker and rename, or a
+    crash mid-prune) are swept on the next save();
   * latest_step() returns the newest committed step;
   * the async writer snapshots leaves to host memory synchronously (cheap)
     and writes files on a background thread, so the train loop never blocks
     on disk; `wait()` joins before the next save or process exit.
+  * restore() validates every leaf file's npy header (shape + dtype) against
+    the manifest and the target tree BEFORE loading/device_put — corruption
+    or truncation raises a typed CorruptCheckpoint naming the leaf instead
+    of a cryptic numpy/jax error mid-restore;
   * restore() device_puts each leaf with the target sharding, so a restored
     run continues under a DIFFERENT mesh shape (elastic restart).
 """
@@ -24,6 +30,13 @@ from typing import Any
 
 import jax
 import numpy as np
+
+
+class CorruptCheckpoint(RuntimeError):
+    """A committed checkpoint failed validation (truncated/corrupt leaf
+    file, or manifest inconsistent with the files or the target tree). The
+    message names the offending leaf so the caller can fall back to an
+    older step instead of chasing a numpy stack trace."""
 
 
 def _leaf_paths(tree):
@@ -63,6 +76,7 @@ class Writer:
             self._t.join()
 
     def run(self):
+        self._sweep_orphans()
         d = os.path.join(self.dir, f"step_{self.step:08d}")
         tmp = d + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
@@ -90,6 +104,20 @@ class Writer:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)
 
+    def _sweep_orphans(self):
+        """Remove crash leftovers before writing: stale `step_*.tmp` dirs
+        (other than this save's own) and uncommitted `step_*` dirs — a
+        crash mid-prune or mid-commit can strand both, and nothing else
+        ever cleans them (restore() skips them but they accumulate)."""
+        own_tmp = f"step_{self.step:08d}.tmp"
+        for name in os.listdir(self.dir) if os.path.isdir(self.dir) else []:
+            if not name.startswith("step_") or name == own_tmp:
+                continue
+            path = os.path.join(self.dir, name)
+            if name.endswith(".tmp") or \
+                    not os.path.exists(os.path.join(path, "COMMITTED")):
+                shutil.rmtree(path, ignore_errors=True)
+
 
 def committed_steps(directory: str) -> list[int]:
     if not os.path.isdir(directory):
@@ -107,10 +135,54 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def _validate_leaf(path: str, i: int, meta: dict, ref) -> None:
+    """Pre-load validation of one leaf file: npy header parseable, header
+    shape/dtype match the manifest, shape matches the target tree, and the
+    file is large enough to hold the data the header promises (truncation
+    is the classic crash corruption). Raises CorruptCheckpoint naming the
+    leaf — BEFORE np.load or device_put touch it."""
+    name = meta["file"]
+    try:
+        with open(path, "rb") as f:
+            version = np.lib.format.read_magic(f)
+            if version == (1, 0):
+                shape, _, dtype = np.lib.format.read_array_header_1_0(f)
+            elif version == (2, 0):
+                shape, _, dtype = np.lib.format.read_array_header_2_0(f)
+            else:
+                raise ValueError(f"unsupported npy format version {version}")
+            header_end = f.tell()
+    except CorruptCheckpoint:
+        raise
+    except FileNotFoundError:
+        raise CorruptCheckpoint(
+            f"leaf {i} ({name}): file missing from committed "
+            "checkpoint") from None
+    except Exception as e:
+        raise CorruptCheckpoint(
+            f"leaf {i} ({name}): unreadable npy header ({e})") from e
+    if list(shape) != list(meta["shape"]) or str(dtype) != meta["dtype"]:
+        raise CorruptCheckpoint(
+            f"leaf {i} ({name}): file header {shape}/{dtype} != manifest "
+            f"{tuple(meta['shape'])}/{meta['dtype']}")
+    if tuple(shape) != tuple(ref.shape):
+        raise CorruptCheckpoint(
+            f"leaf {i} ({name}): ckpt shape {tuple(shape)} != model "
+            f"{tuple(ref.shape)}")
+    need = header_end + int(dtype.itemsize) * int(np.prod(shape, dtype=np.int64))
+    have = os.path.getsize(path)
+    if have < need:
+        raise CorruptCheckpoint(
+            f"leaf {i} ({name}): truncated — {have} bytes on disk, header "
+            f"promises {need}")
+
+
 def restore(directory: str, step: int, like: Any, *, shardings: Any = None) -> Any:
     """Restore into the structure of `like` (shapes/dtypes validated).
     `shardings`: optional matching pytree of NamedSharding — leaves are placed
-    directly to their target shards (elastic-safe)."""
+    directly to their target shards (elastic-safe). Every leaf file is
+    header-validated against the manifest and `like` up front; corruption
+    raises CorruptCheckpoint naming the leaf."""
     d = os.path.join(directory, f"step_{step:08d}")
     assert os.path.exists(os.path.join(d, "COMMITTED")), f"no committed ckpt at {d}"
     leaves, treedef = _leaf_paths(like)
@@ -118,15 +190,27 @@ def restore(directory: str, step: int, like: Any, *, shardings: Any = None) -> A
                     if shardings is not None else [None] * len(leaves))
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
+    if len(manifest["leaves"]) != len(leaves):
+        raise CorruptCheckpoint(
+            f"manifest holds {len(manifest['leaves'])} leaves, target tree "
+            f"has {len(leaves)}")
+    for i, ref in enumerate(leaves):
+        meta = manifest["leaves"][i]
+        if meta is None or ref is None:
+            continue
+        _validate_leaf(os.path.join(d, meta["file"]), i, meta, ref)
     out = []
     for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
         meta = manifest["leaves"][i]
         if meta is None or ref is None:
             out.append(None)
             continue
-        arr = np.load(os.path.join(d, meta["file"]))
-        assert tuple(arr.shape) == tuple(ref.shape), \
-            f"leaf {i}: ckpt {arr.shape} != model {ref.shape}"
+        try:
+            arr = np.load(os.path.join(d, meta["file"]))
+        except Exception as e:
+            raise CorruptCheckpoint(
+                f"leaf {i} ({meta['file']}): load failed after header "
+                f"validation ({e})") from e
         arr = arr.astype(ref.dtype)
         out.append(jax.device_put(arr, sh) if sh is not None else
                    jax.numpy.asarray(arr))

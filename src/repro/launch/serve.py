@@ -36,6 +36,8 @@ from __future__ import annotations
 
 import argparse
 import math
+import os
+import sys
 import time
 
 import jax
@@ -93,7 +95,9 @@ def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
                      deadline_s: float | None = None,
                      max_wall_s: float | None = None,
                      prefix_share: bool | None = None,
-                     expert_aware: bool | None = None) -> dict:
+                     expert_aware: bool | None = None,
+                     journal_dir: str | None = None,
+                     snapshot_every: int = 0) -> dict:
     """Run a list of prompts through the continuous-batching engine.
     With `mesh`, slot rows are sharded across the data-parallel replicas and
     every decode tick runs under the mesh (launch/sharding.py rules).
@@ -113,7 +117,11 @@ def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
     copy-on-write and skips the shared prefill (paged pools);
     `expert_aware` scores admission order by routing overlap with the
     active batch (MoE attention archs) — both default to the
-    REPRO_PREFIX_SHARE / REPRO_EXPERT_AWARE env knobs.
+    REPRO_PREFIX_SHARE / REPRO_EXPERT_AWARE env knobs. `journal_dir`
+    journals every request lifecycle event and commits an atomic engine
+    snapshot every `snapshot_every` ticks (paged pools;
+    serving/journal.py) — a crashed run resumes bit-identically via
+    ServingEngine.recover(journal_dir).
     Returns per-request token arrays plus engine stats."""
     max_tokens = max_tokens or (
         max(len(p) for p in prompts) + gen_tokens + 1)
@@ -128,7 +136,9 @@ def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
                         page_size=page_size, num_pages=num_pages,
                         prefill_chunk=prefill_chunk, preemption=preemption,
                         chaos=chaos, prefix_share=prefix_share,
-                        expert_aware=expert_aware)
+                        expert_aware=expert_aware,
+                        journal_dir=journal_dir or None,
+                        snapshot_every=snapshot_every)
     ids = []
     for i, p in enumerate(prompts):
         step = arrival_steps[i] if arrival_steps else 0
@@ -207,6 +217,27 @@ def main():
     ap.add_argument("--max-wall-s", type=float, default=0.0,
                     help="per-request wall budget from first admission "
                          "(0 = unbounded; exceeded -> status TIMEOUT)")
+    ap.add_argument("--journal-dir", default="",
+                    help="durable request journal + atomic engine snapshots "
+                         "in this directory (needs --paged). If it already "
+                         "holds a committed snapshot, the run RECOVERS from "
+                         "it (replaying the journal tail, resuming every "
+                         "live stream bit-identically) instead of starting "
+                         "fresh")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="engine ticks between atomic snapshots "
+                         "(with --journal-dir)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run the engine in a supervised child process: "
+                         "file-mtime heartbeats, missed-heartbeat SIGKILL, "
+                         "exponential-backoff restart, each restarted "
+                         "generation re-dispatches through recover() "
+                         "(needs --journal-dir)")
+    ap.add_argument("--crash-step", type=int, default=-1,
+                    help="chaos: SIGKILL the engine process at this engine "
+                         "tick, first generation only — restarted "
+                         "generations run through (the kill-recover-resume "
+                         "lane; needs --journal-dir)")
     ap.add_argument("--chaos", action="store_true",
                     help="seeded fault injection: transient tick failures, "
                          "admission pressure, forced preemptions "
@@ -221,6 +252,30 @@ def main():
     if args.static and args.mesh_model:
         ap.error("--mesh-model shards the engine's slot pool; it has no "
                  "effect on the static generate() path (drop --static)")
+    if args.journal_dir and not args.paged:
+        ap.error("--journal-dir needs --paged (engine snapshots are "
+                 "SlotPool.snapshot block-table surgery)")
+    if (args.supervise or args.crash_step >= 0) and not args.journal_dir:
+        ap.error("--supervise/--crash-step need --journal-dir (restarted "
+                 "generations re-dispatch through recover())")
+
+    if args.supervise:
+        # parent: re-exec this CLI (minus --supervise) as a watched child.
+        # The child journals; a restarted generation finds the committed
+        # snapshot in --journal-dir and recovers instead of starting fresh.
+        from repro.runtime.fault import ProcessSupervisor
+        os.makedirs(args.journal_dir, exist_ok=True)
+        child = [sys.executable, "-m", "repro.launch.serve"] + \
+            [a for a in sys.argv[1:] if a != "--supervise"]
+        sup = ProcessSupervisor(
+            child,
+            heartbeat_file=os.path.join(args.journal_dir, "heartbeat"))
+        code = sup.run()
+        print(f"supervised serve exited {code} after "
+              f"{sup.stats.restarts} restart(s), "
+              f"{sup.stats.heartbeat_kills} heartbeat kill(s) "
+              f"(exit codes {sup.stats.exit_codes})")
+        return
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.backend is not None and cfg.moe is not None:
@@ -259,6 +314,37 @@ def main():
         from repro.serving import Chaos
         chaos = Chaos(seed=args.chaos_seed, tick_fail=0.05, pressure=0.05,
                       preempt=0.05)
+    if args.crash_step >= 0 and int(os.environ.get(
+            "REPRO_SUPERVISE_GENERATION", "0") or 0) == 0:
+        # arm the crash in the FIRST generation only: the restarted one
+        # must sail past the same tick number to prove recovery terminates
+        from repro.serving import Chaos
+        if chaos is None:
+            chaos = Chaos(seed=args.chaos_seed)
+        chaos.crash_step = args.crash_step
+
+    if args.journal_dir:
+        from repro.serving import EngineJournal, ServingEngine
+        if EngineJournal.recoverable(args.journal_dir):
+            t0 = time.time()
+            eng = ServingEngine.recover(args.journal_dir, params, cfg,
+                                        mesh=mesh, chaos=chaos,
+                                        snapshot_every=args.snapshot_every)
+            fin = eng.run()
+            dt = time.time() - t0
+            info, s = eng.recovered_info, eng.stats()
+            print(f"recovered from {args.journal_dir} (snapshot seq "
+                  f"{info['snapshot_seq']}, {info['events']} replayed "
+                  f"events, {info['wall_ms']:.1f}ms) — drained to "
+                  f"{s['finished']} finished requests in {dt:.2f}s")
+            print(f"statuses: {s['statuses']}  recoveries: "
+                  f"{s['recoveries']}  restart generation: "
+                  f"{s['restart_count']}")
+            if fin:
+                first = fin[min(fin)].tokens
+                print("sample:", np.asarray(first[:16], np.int32))
+            return
+
     res = serve_continuous(params, cfg, prompts, args.gen,
                            num_slots=args.slots, extras=extras or None,
                            arrival_steps=arrivals, mesh=mesh,
@@ -272,7 +358,9 @@ def main():
                            deadline_s=args.deadline_s or None,
                            max_wall_s=args.max_wall_s or None,
                            prefix_share=args.prefix_share or None,
-                           expert_aware=args.expert_aware or None)
+                           expert_aware=args.expert_aware or None,
+                           journal_dir=args.journal_dir or None,
+                           snapshot_every=args.snapshot_every)
     s = res["stats"]
     print(f"served {s['finished']} requests over {s['steps']} ticks on "
           f"{args.slots} slots in {res['decode_s']:.2f}s "
@@ -285,7 +373,9 @@ def main():
              f"{s['pages_shared']} prefill skipped "
              f"{s['prefill_tokens_skipped']} tok]"
              if s["prefix_share"] else "")
-          + (" [expert-aware]" if s["expert_aware"] else ""))
+          + (" [expert-aware]" if s["expert_aware"] else "")
+          + (f" [journal {s['journal_bytes']}B, {s['snapshots']} snaps]"
+             if s["journal_bytes"] else ""))
     print(f"statuses: {s['statuses']}  preemptions: {s['preemptions']} "
           f"(resumes {s['resumes']})  tick retries: {s['tick_retries']}"
           + (f"  chaos: {s['chaos']}" if s["chaos"] else ""))

@@ -14,10 +14,16 @@
              chunked, or skipped via prefix sharing) -> decode -> retire;
              request-lifecycle fault domain (deadlines, cancel,
              preemption/resume, NaN quarantine)
-  chaos      seeded fault injector (REPRO_CHAOS lane)
+  chaos      seeded fault injector (REPRO_CHAOS lane) + crash classes
+             (REPRO_CRASH lane: SIGKILL / torn journal / uncommitted
+             snapshot)
+  journal    fsync'd write-ahead journal of request lifecycle events +
+             atomic engine snapshots; ServingEngine.recover replays it
+             into a bit-identical resume of every live stream
 """
 from repro.serving.chaos import Chaos, ChaosError
 from repro.serving.engine import ServingEngine
+from repro.serving.journal import EngineJournal, JournalError
 from repro.serving.paging import PageAllocator, PrefixIndex
 from repro.serving.pool import SlotPool
 from repro.serving.scheduler import (ExpertAwareScheduler, FIFOScheduler,
@@ -27,4 +33,5 @@ from repro.serving.scheduler import (ExpertAwareScheduler, FIFOScheduler,
 __all__ = ["ServingEngine", "SlotPool", "FIFOScheduler",
            "ExpertAwareScheduler", "Request", "PageAllocator", "PrefixIndex",
            "RequestStatus", "TERMINAL_STATUSES", "QueueFull",
-           "RequestTooLarge", "Chaos", "ChaosError"]
+           "RequestTooLarge", "Chaos", "ChaosError", "EngineJournal",
+           "JournalError"]

@@ -18,13 +18,31 @@ streams contain. NaN poisoning is NOT semantics-preserving (it turns
 streams into FAILED quarantines), so its env default is 0; dedicated tests
 construct `Chaos(nan=...)` explicitly or call `SlotPool.poison_slot`.
 
+CRASH-CLASS faults (the REPRO_CRASH lane) go past the in-process fault
+domain and kill the PROCESS: `crash_event` fires on a journaled engine tick
+and the engine then dies by SIGKILL — straight away ("kill"), after tearing
+the journal's last record mid-write ("torn"), or after materializing the
+next snapshot WITHOUT its COMMITTED marker ("snap"). These are not
+semantics-preserving inside one process by design; the thing they prove is
+the recovery contract (ServingEngine.recover + the supervisor harness
+brings every stream back bit-identically). `crash_step` pins the crash to
+one deterministic tick and fires at most once per PROCESS — the restarted
+generation (REPRO_SUPERVISE_GENERATION) sails past it, so supervised runs
+terminate. Malformed numeric env values fail fast with the offending
+name/value, and the engine seed-logs `describe()` once at start so a chaos
+CI failure is reproducible from the log line.
+
 Env knobs (floats are per-tick probabilities):
-  REPRO_CHAOS         master switch (off unless truthy)
-  REPRO_CHAOS_SEED    generator seed                     (default 0)
-  REPRO_CHAOS_TICK    P(transient decode-tick failure)   (default 0.05)
-  REPRO_CHAOS_PRESS   P(admissions skipped this tick)    (default 0.05)
-  REPRO_CHAOS_PREEMPT P(force-evict a random active slot)(default 0.05)
-  REPRO_CHAOS_NAN     P(poison a random active slot)     (default 0.0)
+  REPRO_CHAOS             master switch (off unless truthy)
+  REPRO_CHAOS_SEED        generator seed                     (default 0)
+  REPRO_CHAOS_TICK        P(transient decode-tick failure)   (default 0.05)
+  REPRO_CHAOS_PRESS       P(admissions skipped this tick)    (default 0.05)
+  REPRO_CHAOS_PREEMPT     P(force-evict a random active slot)(default 0.05)
+  REPRO_CHAOS_NAN         P(poison a random active slot)     (default 0.0)
+  REPRO_CHAOS_CRASH       P(crash the process this tick)     (default 0.0)
+  REPRO_CHAOS_CRASH_STEP  crash deterministically AT this engine tick
+                          (default -1 = off; fires once per process)
+  REPRO_CHAOS_CRASH_CLASS kill | torn | snap | mix           (default kill)
 """
 from __future__ import annotations
 
@@ -40,6 +58,9 @@ class ChaosError(RuntimeError):
     retry exists for."""
 
 
+_CRASH_CLASSES = ("kill", "torn", "snap")
+
+
 @dataclass
 class Chaos:
     """Seeded fault injector; all rates are per-tick probabilities."""
@@ -49,31 +70,66 @@ class Chaos:
     pressure: float = 0.0     # skip this tick's admissions (delay only)
     preempt: float = 0.0      # force-evict a random active slot
     nan: float = 0.0          # poison a random active slot's decode state
+    crash: float = 0.0        # kill the process (journaled engines only)
+    crash_step: int = -1      # deterministic crash AT this tick (-1 = off)
+    crash_class: str = "kill"  # kill | torn | snap | mix (seeded pick)
     # never inject more consecutive tick failures than the supervisor will
     # retry — chaos proves the fault domain, it doesn't DoS it
     max_consecutive_faults: int = 2
     injected: dict = field(default_factory=lambda: {
-        "tick_faults": 0, "pressure": 0, "preempts": 0, "nans": 0})
+        "tick_faults": 0, "pressure": 0, "preempts": 0, "nans": 0,
+        "crashes": 0})
 
     def __post_init__(self):
+        if self.crash_class not in _CRASH_CLASSES + ("mix",):
+            raise ValueError(
+                f"crash_class={self.crash_class!r} not in "
+                f"{_CRASH_CLASSES + ('mix',)}")
         self._rng = np.random.default_rng(self.seed)
         self._consecutive = 0
+        self._crash_fired = False
 
     @classmethod
     def from_env(cls) -> "Chaos | None":
-        """The CI lane's constructor: None unless REPRO_CHAOS is truthy."""
+        """The CI lane's constructor: None unless REPRO_CHAOS is truthy.
+        Malformed numeric values fail fast naming the variable — a typo'd
+        knob must not silently run the lane with a default rate."""
         if os.environ.get("REPRO_CHAOS", "").strip().lower() in \
                 ("", "0", "false", "no"):
             return None
 
-        def f(name, default):
-            return float(os.environ.get(name, default))
+        def num(name, default, cast):
+            raw = os.environ.get(name)
+            if raw is None or raw == "":
+                return default
+            try:
+                return cast(raw)
+            except ValueError:
+                raise ValueError(
+                    f"malformed chaos env knob {name}={raw!r} "
+                    f"(expected {cast.__name__})") from None
 
-        return cls(seed=int(os.environ.get("REPRO_CHAOS_SEED", "0")),
+        def f(name, default):
+            return num(name, default, float)
+
+        return cls(seed=num("REPRO_CHAOS_SEED", 0, int),
                    tick_fail=f("REPRO_CHAOS_TICK", 0.05),
                    pressure=f("REPRO_CHAOS_PRESS", 0.05),
                    preempt=f("REPRO_CHAOS_PREEMPT", 0.05),
-                   nan=f("REPRO_CHAOS_NAN", 0.0))
+                   nan=f("REPRO_CHAOS_NAN", 0.0),
+                   crash=f("REPRO_CHAOS_CRASH", 0.0),
+                   crash_step=num("REPRO_CHAOS_CRASH_STEP", -1, int),
+                   crash_class=os.environ.get(
+                       "REPRO_CHAOS_CRASH_CLASS", "kill").strip() or "kill")
+
+    def describe(self) -> str:
+        """One reproducibility line: everything needed to replay this
+        config locally. The engine logs it once at start."""
+        return (f"chaos seed={self.seed} tick={self.tick_fail} "
+                f"press={self.pressure} preempt={self.preempt} "
+                f"nan={self.nan} crash={self.crash} "
+                f"crash_step={self.crash_step} "
+                f"crash_class={self.crash_class}")
 
     # ----------------------------------------------------------------- events
 
@@ -109,3 +165,26 @@ class Chaos:
             return None
         self.injected["nans"] += 1
         return slots[int(self._rng.integers(len(slots)))]
+
+    def crash_event(self, step: int) -> str | None:
+        """Should the PROCESS die at this engine tick? Returns the crash
+        class ("kill" | "torn" | "snap") or None. A pinned `crash_step`
+        fires exactly once per process (the recovered generation must run
+        past the same tick number without re-dying); the probabilistic rate
+        has no such cap — the supervisor's restart budget bounds it."""
+        hit = (step == self.crash_step and not self._crash_fired) or \
+            (self.crash > 0 and self._rng.random() < self.crash)
+        if not hit:
+            return None
+        self._crash_fired = True
+        self.injected["crashes"] += 1
+        if self.crash_class == "mix":
+            return _CRASH_CLASSES[int(self._rng.integers(
+                len(_CRASH_CLASSES)))]
+        return self.crash_class
+
+    def torn_cut(self, record_bytes: int) -> int:
+        """How many bytes of the journal's last record the torn-write crash
+        truncates: seeded in [1, record_bytes] so every replay of the seed
+        tears the same byte."""
+        return 1 + int(self._rng.integers(max(1, record_bytes)))

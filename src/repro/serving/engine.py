@@ -83,9 +83,12 @@ the CI lane).
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 import math
 import os
+import signal
+import sys
 import time
 from collections import Counter
 from dataclasses import dataclass
@@ -100,11 +103,17 @@ from repro.models.model import (init_decode_state, paged_supported, prefill,
                                 serve_step)
 from repro.runtime.fault import StepSupervisor
 from repro.serving.chaos import Chaos
+from repro.serving.journal import (EngineJournal, JournalError,
+                                   request_from_record, request_record)
 from repro.serving.paging import PrefixIndex
 from repro.serving.pool import SlotPool
 from repro.serving.scheduler import (ExpertAwareScheduler, FIFOScheduler,
                                      QueueFull, Request, RequestStatus,
                                      RequestTooLarge)
+
+# chaos configs already seed-logged by THIS process — one reproducibility
+# line per distinct config, not one per engine (benchmark sweeps build many)
+_chaos_logged: set[str] = set()
 
 
 @partial(jax.jit, static_argnames="cfg")
@@ -238,7 +247,9 @@ class ServingEngine:
                  prefill_chunk: int = 0, preemption: bool = False,
                  chaos: Chaos | None = None,
                  prefix_share: bool | None = None,
-                 expert_aware: bool | None = None):
+                 expert_aware: bool | None = None,
+                 journal_dir: str | bool | None = None,
+                 snapshot_every: int = 0):
         self.params = params
         self.mesh = mesh
         force = _env_on("REPRO_FORCE_PAGED") or \
@@ -303,7 +314,9 @@ class ServingEngine:
         self.prefill_tokens_skipped = 0
         self.step_count = 0
         self.finished: dict[int, Request] = {}
-        self._ids = itertools.count()
+        # monotone id assignment that survives recovery (itertools.count
+        # can't be snapshotted; a recycled id would collide in the journal)
+        self._next_id = 0
         if prefill_chunk:
             if not paged_supported(cfg):
                 raise ValueError("chunked prefill is attention-family only")
@@ -356,6 +369,45 @@ class ServingEngine:
         self.rejected_full = 0
         self.rejected_oversized = 0
         self.audit_every_tick = _env_on("REPRO_AUDIT")
+        if self.chaos is not None:
+            # one reproducibility line per distinct config: a chaos CI
+            # failure must be replayable from the log alone
+            desc = self.chaos.describe()
+            if desc not in _chaos_logged:
+                _chaos_logged.add(desc)
+                print(f"[repro.serving] {desc}", file=sys.stderr)
+        # --- durability (serving/journal.py) ---
+        # journal_dir=False disables even the env pickup (recover() builds
+        # its engine first and attaches the journal after replay); the
+        # REPRO_JOURNAL_DIR env lane follows the REPRO_FORCE_PAGED pattern
+        # (silently no-ops on engines journaling can't support), while the
+        # explicit kwarg is an API contract and raises instead.
+        self.journal: EngineJournal | None = None
+        self.recoveries = 0
+        self.replayed_events = 0
+        self.recovered_info: dict | None = None
+        self.restart_count = int(
+            os.environ.get("REPRO_SUPERVISE_GENERATION", "0") or 0)
+        self._replay_expect: dict[int, list[int]] = {}
+        self._tick_toks: dict[int, int] = {}
+        self._heartbeat = os.environ.get("REPRO_HEARTBEAT") or None
+        self._engine_extras = extras
+        self._engine_kw = dict(
+            num_slots=num_slots, max_tokens=self.pool.max_tokens,
+            max_queue=max_queue, paged=self.pool.paged,
+            page_size=self.pool.page_size, num_pages=self.pool.num_pages,
+            prefill_chunk=self.prefill_chunk, preemption=self.preemption,
+            prompt_buckets=self.prompt_buckets,
+            prefix_share=self.prefix_share, expert_aware=self.expert_aware)
+        if journal_dir is None and journal_dir is not False:
+            env_dir = os.environ.get("REPRO_JOURNAL_DIR", "").strip()
+            if env_dir and self.pool.paged and extras is None:
+                # unique per engine: one journal describes ONE engine's
+                # lifecycle (sweeps build many engines per process)
+                journal_dir = os.path.join(
+                    env_dir, f"engine_{os.getpid()}_{id(self):x}")
+        if isinstance(journal_dir, str):
+            self._attach_journal(journal_dir, snapshot_every)
 
     # ------------------------------------------------------------- submission
 
@@ -375,7 +427,13 @@ class ServingEngine:
         request that could never fit the pool and QueueFull (carrying the
         backlog depth) at max_queue — both counted in stats()["rejected"].
         Returns the request id."""
-        rid = request_id if request_id is not None else next(self._ids)
+        if self.journal is not None and extras is not None:
+            raise ValueError(
+                "journaled engines reject per-request extras: cross-attn "
+                "memory is neither journaled nor snapshotted, so a "
+                "recovered re-prefill could not reproduce the stream")
+        rid = request_id if request_id is not None else self._next_id
+        self._next_id = max(self._next_id, rid + 1)
         req = Request(
             request_id=rid,
             prompt=np.asarray(prompt, np.int32).reshape(-1),
@@ -424,6 +482,10 @@ class ServingEngine:
         except RequestTooLarge:
             self.rejected_oversized += 1
             raise
+        if self.journal is not None:
+            # journaled AFTER scheduler acceptance: a rejected request has
+            # no lifecycle to recover
+            self.journal.append("submit", req=request_record(req))
         return rid
 
     def cancel(self, rid: int) -> bool:
@@ -543,6 +605,7 @@ class ServingEngine:
                     continue
                 tok = int(toks[slot])
                 req.tokens.append(tok)
+                self._journal_token(req, tok)
                 self.pool.pending[slot] = tok
                 self.pool.remaining[slot] -= 1
                 if self.pool.remaining[slot] <= 0 or \
@@ -555,6 +618,23 @@ class ServingEngine:
             nxt = self.scheduler.next_arrival_step()
             self.step_count = max(self.step_count + 1,
                                   nxt if nxt is not None else 0)
+
+        if self.journal is not None:
+            if self._tick_toks:
+                # ONE durable record per decode tick — the token watermark
+                # every recovered stream is prefix-asserted against
+                self.journal.append("tick", step=self.step_count,
+                                    toks=dict(self._tick_toks))
+                self._tick_toks.clear()
+            if self.step_count - self.journal.last_snapshot_step >= \
+                    self.journal.snapshot_every:
+                self.journal.commit_snapshot(self._snapshot_payload(),
+                                             self.step_count)
+        if self._heartbeat:
+            # liveness signal for the process supervisor (mtime staleness)
+            with open(self._heartbeat, "a"):
+                os.utime(self._heartbeat, None)
+        self._maybe_crash()
 
         if self.audit_every_tick:
             self._audit()
@@ -839,6 +919,7 @@ class ServingEngine:
         req.admit_time = time.monotonic()
         req.status = RequestStatus.ACTIVE
         req.tokens.append(first)
+        self._journal_token(req, first, install=True)
         self.pool.admit(slot, req, slot_state, first, key=key_next,
                         page_row=page_row)
         if self.expert_aware:
@@ -935,6 +1016,7 @@ class ServingEngine:
         req.admit_time = time.monotonic()
         req.status = RequestStatus.ACTIVE
         req.tokens.append(first)
+        self._journal_token(req, first, install=True)
         self.pool.admit_from_prefix(slot, req, shared, entry, first,
                                     key=key_next)
         if req.expert_sig is None and entry["sig"] is not None:
@@ -1104,6 +1186,266 @@ class ServingEngine:
         req.finish_time = time.monotonic()
         self.finished[req.request_id] = req
         done.append(req)
+        if self.journal is not None:
+            self.journal.append("terminal", rid=req.request_id,
+                                status=status.value, reason=reason)
+
+    # -------------------------------------------------------------- durability
+
+    def _attach_journal(self, directory: str, snapshot_every: int = 0) -> None:
+        """Open the engine's write-ahead journal and commit the initial
+        snapshot. Journaling rides on the paged pool's host-side snapshot
+        contract (SlotPool.snapshot) — dense pools and engines with extras
+        (cross-attn memory is not snapshotted) refuse it."""
+        if not self.pool.paged:
+            raise ValueError("journaling needs a paged pool (engine "
+                             "snapshots are SlotPool.snapshot block-table "
+                             "surgery)")
+        if self._engine_extras is not None:
+            raise ValueError("journaling rejects engine extras: cross-attn "
+                             "memory is not part of the snapshot payload")
+        self.journal = EngineJournal(
+            directory, snapshot_every=snapshot_every or 32)
+        self.journal.commit_snapshot(self._snapshot_payload(),
+                                     self.step_count)
+
+    def _journal_token(self, req: Request, tok: int, *,
+                       install: bool = False) -> None:
+        """Journal one emitted token and check it against the recovery
+        oracle: tokens the CRASHED process journaled are a prefix-assertion
+        on the recovered streams — re-decoded output must reproduce every
+        watermarked token bit-for-bit before producing anything new."""
+        exp = self._replay_expect.get(req.request_id)
+        if exp:
+            want = exp.pop(0)
+            if not exp:
+                del self._replay_expect[req.request_id]
+            assert tok == want, (
+                f"recovery divergence: request {req.request_id} emitted "
+                f"token {tok} where the journal watermark says {want}")
+        if self.journal is None:
+            return
+        if install:
+            self.journal.append("install", rid=req.request_id,
+                                step=self.step_count, token=tok)
+        else:
+            self._tick_toks[req.request_id] = tok
+
+    def _maybe_crash(self) -> None:
+        """Chaos crash-class injection: die by SIGKILL at this tick —
+        straight away ("kill"), after tearing the journal's last record
+        mid-write ("torn"), or after materializing the next snapshot
+        WITHOUT its COMMITTED marker ("snap"). Journaled engines only: the
+        whole point is proving recover() undoes the damage."""
+        if self.journal is None or self.chaos is None:
+            return
+        crash = self.chaos.crash_event(self.step_count)
+        if crash is None:
+            return
+        if crash == "torn":
+            self.journal.tear_tail(
+                self.chaos.torn_cut(self.journal._last_record_bytes))
+        elif crash == "snap":
+            self.journal.write_uncommitted_snapshot(self._snapshot_payload())
+        os.kill(os.getpid(), signal.SIGKILL)
+
+    def _snapshot_payload(self) -> dict:
+        """Whole-engine state at this tick, host-side and picklable: every
+        live slot's SlotPool.snapshot (pages + GO rows + cursor + PRNG key),
+        the scheduler heaps, parked preemption snapshots, the prefix index
+        (structure + pinned page contents), scheduler EWMAs, and counters.
+        The chunk job is recorded as its REQUEST only — recovery re-queues
+        it and re-runs the chunked prefill from scratch, which is
+        deterministic per chunking. The PageAllocator is not serialized:
+        restore() re-reserves and re-allocates, which reproduces its
+        semantics under fresh physical ids (ids are invisible to streams)."""
+        slots = []
+        for slot, req in enumerate(self.pool.owner):
+            if req is not None:
+                slots.append((slot, request_record(req, runtime=True),
+                              self.pool.snapshot(slot)))
+        job = self._chunk_job
+        reqs = ([r for _, _, r in self.scheduler.queue] +
+                [r for _, _, r in self.scheduler._pending] +
+                [o for o in self.pool.owner if o is not None] +
+                list(self.finished.values()) +
+                ([job.req] if job is not None else []))
+        prefix = None
+        if self.prefix_index is not None:
+            prefix = self.prefix_index.snapshot_state()
+            ids = sorted({p for _, p, _ in prefix["nodes"]})
+            if ids:
+                jids = jnp.asarray(ids, jnp.int32)
+                prefix["page_contents"] = {
+                    "ids": ids,
+                    "k": np.asarray(self.pool.state["k_pages"][:, jids]),
+                    "v": np.asarray(self.pool.state["v_pages"][:, jids]),
+                }
+        return {
+            "meta": {
+                "step": self.step_count,
+                "recoveries": self.recoveries,
+                "next_id": self._next_id,
+                "seq_next": max((r.seq for r in reqs), default=-1) + 1,
+                "snapshot_every": (self.journal.snapshot_every
+                                   if self.journal is not None else 32),
+            },
+            "engine_kw": dict(self._engine_kw),
+            "slots": slots,
+            "queued": [request_record(r, runtime=True)
+                       for _, _, r in self.scheduler.queue],
+            "pending": [request_record(r, runtime=True)
+                        for _, _, r in self.scheduler._pending],
+            "chunk_req": (request_record(job.req, runtime=True)
+                          if job is not None else None),
+            "preempted": dict(self._preempted),
+            "finished": [request_record(r, runtime=True)
+                         for r in self.finished.values()],
+            "prefix": prefix,
+            "sched_load": (self.scheduler.load.copy()
+                           if self.expert_aware else None),
+            "counters": {
+                "admitted_total": self.pool.admitted_total,
+                "preempted_total": self.preempted_total,
+                "resumed_total": self.resumed_total,
+                "rejected_full": self.rejected_full,
+                "rejected_oversized": self.rejected_oversized,
+                "peak_active": self.peak_active,
+                "chunk_ticks": self.chunk_ticks,
+                "prefix_hits": self.prefix_hits,
+                "pages_shared": self.pages_shared,
+                "prefill_tokens_skipped": self.prefill_tokens_skipped,
+            },
+        }
+
+    def _restore_prefix_index(self, pstate: dict) -> None:
+        """Rebuild the prefix index from a snapshot: allocate fresh physical
+        pages under a temporary owner, scatter the saved page contents back,
+        hand the pins over to the radix nodes, release the temporary owner.
+        The cache is performance state — if the pool can't cover it at
+        recovery (it always can when geometry is unchanged, but overrides
+        may shrink it), recovery proceeds cold instead of failing."""
+        contents = pstate.get("page_contents")
+        if contents is None:
+            return
+        ids = [int(p) for p in contents["ids"]]
+        tmp = -(10 ** 9)        # disjoint from request ids and node rids
+        try:
+            self.pool.alloc.reserve(tmp, len(ids))
+        except RuntimeError:
+            return
+        fresh = self.pool.alloc.alloc(tmp, len(ids))
+        jids = jnp.asarray(fresh, jnp.int32)
+        self.pool.state["k_pages"] = self.pool.state["k_pages"].at[
+            :, jids].set(jnp.asarray(contents["k"]).astype(
+                self.pool.state["k_pages"].dtype))
+        self.pool.state["v_pages"] = self.pool.state["v_pages"].at[
+            :, jids].set(jnp.asarray(contents["v"]).astype(
+                self.pool.state["v_pages"].dtype))
+        self.pool.state = self.pool._pin(self.pool.state)
+        self.prefix_index.restore_state(pstate, dict(zip(ids, fresh)))
+        self.pool.alloc.free(tmp)   # node pins keep every page alive
+
+    @classmethod
+    def recover(cls, journal_dir: str, params, cfg, *, mesh=None,
+                chaos: Chaos | None = None, snapshot_every: int = 0,
+                **overrides) -> "ServingEngine":
+        """Rebuild a crashed engine from its journal directory: restore the
+        latest COMMITTED snapshot (uncommitted crash artifacts are skipped),
+        replay the journal tail, and commit a fresh post-recovery snapshot.
+
+        Live-at-snapshot streams resume via SlotPool.restore — decode is
+        deterministic given the restored state (pages + GO rows + cursor +
+        per-slot PRNG key), so greedy AND sampled streams continue
+        bit-identically to the uninterrupted run. Requests admitted after
+        the snapshot are re-queued and re-prefilled (deterministic again).
+        Tokens the dead process journaled past the snapshot become a
+        prefix-assertion oracle: the recovered streams must re-emit exactly
+        them before producing anything new. Terminal events replay only
+        CANCELLED (an external decision the engine can't recompute); DONE /
+        TIMEOUT / FAILED outcomes are recomputed by simply running — wall
+        budgets re-anchor at recovery time."""
+        t0 = time.monotonic()
+        latest = EngineJournal.latest_committed(journal_dir)
+        if latest is None:
+            raise JournalError(
+                f"no committed snapshot under {journal_dir!r} — nothing to "
+                "recover from")
+        seq, payload = latest
+        kw = dict(payload["engine_kw"])
+        kw.update(overrides)
+        eng = cls(params, cfg, mesh=mesh, chaos=chaos, journal_dir=False,
+                  **kw)
+        meta = payload["meta"]
+        eng.step_count = meta["step"]
+        eng.recoveries = meta["recoveries"] + 1
+        eng._next_id = meta["next_id"]
+        eng.scheduler._seq = itertools.count(meta["seq_next"])
+        for rec in payload["finished"]:
+            req = request_from_record(rec)
+            eng.finished[req.request_id] = req
+        for rec in payload["queued"]:
+            req = request_from_record(rec)
+            heapq.heappush(eng.scheduler.queue,
+                           (req.priority, req.seq, req))
+        for rec in payload["pending"]:
+            req = request_from_record(rec)
+            heapq.heappush(eng.scheduler._pending,
+                           (req.arrival_step, req.seq, req))
+        if payload["chunk_req"] is not None:
+            # the interrupted chunk run re-prefills from scratch — its heap
+            # position (original seq) keeps the admission order
+            req = request_from_record(payload["chunk_req"])
+            req.status = RequestStatus.QUEUED
+            heapq.heappush(eng.scheduler.queue,
+                           (req.priority, req.seq, req))
+        eng._preempted = dict(payload["preempted"])
+        for slot, rec, snap in payload["slots"]:
+            req = request_from_record(rec)
+            eng.pool.restore(slot, req, snap)
+        if eng.prefix_index is not None and payload["prefix"] is not None:
+            eng._restore_prefix_index(payload["prefix"])
+        if eng.expert_aware and payload["sched_load"] is not None \
+                and len(payload["sched_load"]) == len(eng.scheduler.load):
+            eng.scheduler.load[:] = payload["sched_load"]
+        for name, val in payload["counters"].items():
+            if name == "admitted_total":
+                eng.pool.admitted_total = val   # pool.restore bumped it
+            else:
+                setattr(eng, name, val)
+        # --- replay the journal tail (torn tail already dropped) ---
+        events = EngineJournal.read_tail(journal_dir, seq)
+        cancelled: list[int] = []
+        for kind, p in events:
+            if kind == "submit":
+                req = request_from_record(p["req"])
+                if req.arrival_step > eng.step_count:
+                    heapq.heappush(eng.scheduler._pending,
+                                   (req.arrival_step, req.seq, req))
+                else:
+                    heapq.heappush(eng.scheduler.queue,
+                                   (req.priority, req.seq, req))
+            elif kind == "install":
+                eng._replay_expect.setdefault(p["rid"], []).append(p["token"])
+            elif kind == "tick":
+                for rid, tok in p["toks"].items():
+                    eng._replay_expect.setdefault(rid, []).append(tok)
+            elif kind == "terminal" and \
+                    p["status"] == RequestStatus.CANCELLED.value:
+                cancelled.append(p["rid"])
+        eng.replayed_events = len(events)
+        # committing a fresh snapshot collapses the replayed tail: a second
+        # crash during recovery re-runs from HERE, never from the torn log
+        eng._attach_journal(journal_dir,
+                            snapshot_every or meta["snapshot_every"])
+        for rid in cancelled:
+            eng.cancel(rid)
+        eng.recovered_info = {
+            "snapshot_seq": seq,
+            "events": len(events),
+            "wall_ms": (time.monotonic() - t0) * 1000.0,
+        }
+        return eng
 
     def _audit(self) -> None:
         """REPRO_AUDIT=1 invariant sweep, every tick: pool/allocator
@@ -1180,6 +1522,22 @@ class ServingEngine:
             "rejected": {"queue_full": self.rejected_full,
                          "oversized": self.rejected_oversized},
             "tick_retries": self.supervisor.stats.retries,
+            "tick_ms_median": round(self.supervisor.stats.median() * 1e3, 3),
+            "tick_stragglers": [
+                {"step": s, "wall_ms": round(dt * 1e3, 3),
+                 "median_ms": round(med * 1e3, 3)}
+                for s, dt, med in self.supervisor.stats.stragglers],
             "chaos": (dict(self.chaos.injected)
                       if self.chaos is not None else None),
+            # --- durability ---
+            "recoveries": self.recoveries,
+            "restart_count": self.restart_count,
+            "replayed_events": self.replayed_events,
+            "journal_bytes": (self.journal.bytes_written
+                              if self.journal is not None else 0),
+            "snapshots": (self.journal.snapshots_committed
+                          if self.journal is not None else 0),
+            "snapshot_age_ticks": (
+                self.step_count - self.journal.last_snapshot_step
+                if self.journal is not None else None),
         }

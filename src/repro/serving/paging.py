@@ -435,6 +435,47 @@ class PrefixIndex:
                 released += self.alloc.free(self.node_rid(nid))
         return released
 
+    # ------------------------------------------------------------ durability
+
+    def snapshot_state(self) -> dict:
+        """Structural host snapshot for the engine journal: radix topology,
+        node page pins (PHYSICAL ids — the engine captures those pages'
+        device contents separately, since the index only knows numbers),
+        and the LRU-ordered entries with their host artifacts. Everything
+        is host data, picklable as-is."""
+        return {
+            "children": [(parent, list(toks), nid)
+                         for (parent, toks), nid in self._children.items()],
+            "nodes": [(nid, n["page"], n["uses"])
+                      for nid, n in self._nodes.items()],
+            "entries": [(list(key), dict(entry))
+                        for key, entry in self._entries.items()],
+        }
+
+    def restore_state(self, snap: dict, page_map: dict[int, int]) -> None:
+        """Rebuild THIS (empty) index from a `snapshot_state` payload, with
+        every old physical page id remapped through `page_map` (recovery
+        scatters the saved contents into freshly allocated pages first,
+        owned by a temporary rid). Each node re-pins its page via the
+        allocator refcounts exactly as deposit() did — once the caller
+        frees the temporary owner, the node pins alone keep the pages
+        alive, mirroring a retired donor."""
+        assert not self._entries and not self._nodes, \
+            "restore_state needs an empty index"
+        max_nid = -1
+        for nid, page, uses in snap["nodes"]:
+            self.alloc.share(self.node_rid(nid), [page_map[page]])
+            self._nodes[nid] = {"page": page_map[page], "key": None,
+                                "uses": uses}
+            max_nid = max(max_nid, nid)
+        for parent, toks, nid in snap["children"]:
+            key = (parent, tuple(toks))
+            self._children[key] = nid
+            self._nodes[nid]["key"] = key
+        for key, entry in snap["entries"]:
+            self._entries[tuple(key)] = entry
+        self._ids = itertools.count(max_nid + 1)
+
     def reclaim_one(self) -> list[int]:
         """Page-pressure hook: drop the LRU entry on demand (the engine
         calls this when a blocked admission could use the pinned pages —

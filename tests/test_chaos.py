@@ -144,6 +144,41 @@ def test_chaos_from_env(monkeypatch):
     c = Chaos.from_env()
     assert c is not None and c.seed == 7
     assert c.tick_fail == 0.5 and c.pressure == 0.05 and c.nan == 0.0
+    assert c.crash == 0.0 and c.crash_step == -1 and c.crash_class == "kill"
+
+
+def test_chaos_from_env_fails_fast_on_malformed_knobs(monkeypatch):
+    """A typo'd numeric knob must not silently run the lane at a default
+    rate: from_env raises naming the offending variable AND value."""
+    monkeypatch.setenv("REPRO_CHAOS", "1")
+    monkeypatch.setenv("REPRO_CHAOS_TICK", "0.5x")
+    with pytest.raises(ValueError, match="REPRO_CHAOS_TICK='0.5x'"):
+        Chaos.from_env()
+    monkeypatch.delenv("REPRO_CHAOS_TICK")
+    monkeypatch.setenv("REPRO_CHAOS_CRASH_STEP", "six")
+    with pytest.raises(ValueError, match="REPRO_CHAOS_CRASH_STEP='six'"):
+        Chaos.from_env()
+    monkeypatch.delenv("REPRO_CHAOS_CRASH_STEP")
+    monkeypatch.setenv("REPRO_CHAOS_CRASH_CLASS", "explode")
+    with pytest.raises(ValueError, match="crash_class"):
+        Chaos.from_env()
+
+
+def test_chaos_crash_knobs():
+    """crash_step fires exactly once per process (the recovered generation
+    runs past the same tick); the class picker is seeded; torn_cut always
+    lands inside the last record."""
+    c = Chaos(seed=0, crash_step=4, crash_class="torn")
+    assert c.crash_event(3) is None
+    assert c.crash_event(4) == "torn"
+    assert c.crash_event(4) is None, "pinned crash must fire once"
+    assert c.injected["crashes"] == 1
+    for n in (1, 2, 37):
+        assert 1 <= c.torn_cut(n) <= n
+    mix = Chaos(seed=1, crash_step=0, crash_class="mix")
+    assert mix.crash_event(0) in ("kill", "torn", "snap")
+    with pytest.raises(ValueError, match="crash_class"):
+        Chaos(crash_class="explode")
 
 
 def test_audit_catches_page_accounting_corruption():

@@ -1,0 +1,221 @@
+"""The durability layer in isolation: record framing, torn-tail tolerance,
+snapshot commit atomicity, and request (de)serialization.
+
+The load-bearing property is byte-level: `read_records` must return a valid
+PREFIX of the written events for a journal truncated at ANY byte offset —
+that is exactly the file a SIGKILL mid-append leaves behind. The exhaustive
+loop pins it for a fixed small journal; the hypothesis test generalizes it
+over random event shapes and cut points. Engine-level recovery semantics
+(bit-identical resume) live in tests/test_crash_recovery.py."""
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from conftest import given, settings, st
+from repro.serving import EngineJournal
+from repro.serving.journal import (_HEADER, _SEGMENT_MAGIC, append_record,
+                                   read_records, request_from_record,
+                                   request_record)
+from repro.serving.scheduler import Request, RequestStatus
+
+
+def _write_segment(path, events):
+    sizes = []
+    with open(path, "wb") as f:
+        f.write(_SEGMENT_MAGIC)
+        for ev in events:
+            sizes.append(append_record(f, ev))
+    return sizes
+
+
+_EVENTS = [("submit", {"rid": 0, "prompt": np.arange(7, dtype=np.int32)}),
+           ("install", {"rid": 0, "step": 1, "token": 42}),
+           ("tick", {"toks": {0: 5, 1: 7}}),
+           ("terminal", {"rid": 1, "status": "DONE"}),
+           ("tick", {"toks": {0: 9}})]
+
+
+def _assert_prefix(got, want):
+    assert len(got) <= len(want)
+    for g, w in zip(got, want):
+        assert g[0] == w[0]
+        assert set(g[1]) == set(w[1])
+
+
+def test_truncation_at_every_byte_offset(tmp_path):
+    """Exhaustive: cut the segment at EVERY byte from empty to full. Replay
+    never raises, and returns exactly the records that fit whole below the
+    cut — the valid prefix, never garbage, never one record too many."""
+    seg = str(tmp_path / "journal_00000000.log")
+    sizes = _write_segment(seg, _EVENTS)
+    blob = open(seg, "rb").read()
+    bounds = [len(_SEGMENT_MAGIC)]
+    for s in sizes:
+        bounds.append(bounds[-1] + s)
+    cut_path = str(tmp_path / "cut.log")
+    for cut in range(len(blob) + 1):
+        with open(cut_path, "wb") as f:
+            f.write(blob[:cut])
+        got = read_records(cut_path)
+        want_n = sum(1 for b in bounds[1:] if b <= cut)
+        assert len(got) == want_n, f"cut at byte {cut}"
+        _assert_prefix(got, _EVENTS)
+
+
+def test_corrupt_byte_yields_valid_prefix(tmp_path):
+    """A flipped byte (disk corruption, not truncation) fails the CRC and
+    stops replay at the record it lands in — everything before it is
+    returned intact."""
+    seg = str(tmp_path / "journal_00000000.log")
+    sizes = _write_segment(seg, _EVENTS)
+    blob = bytearray(open(seg, "rb").read())
+    # flip a byte inside the THIRD record's payload
+    off = len(_SEGMENT_MAGIC) + sizes[0] + sizes[1] + _HEADER.size + 2
+    blob[off] ^= 0xFF
+    with open(seg, "wb") as f:
+        f.write(bytes(blob))
+    got = read_records(seg)
+    assert len(got) == 2
+    _assert_prefix(got, _EVENTS)
+
+
+def test_foreign_file_is_empty_tail(tmp_path):
+    missing = str(tmp_path / "nope.log")
+    assert read_records(missing) == []
+    foreign = str(tmp_path / "foreign.log")
+    with open(foreign, "wb") as f:
+        f.write(b"NOTAJRNL" + b"\x00" * 64)
+    assert read_records(foreign) == []
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(
+           st.sampled_from(["submit", "install", "tick", "terminal"]),
+           st.dictionaries(st.sampled_from(["rid", "step", "token", "n"]),
+                           st.integers(0, 2 ** 30), max_size=4)),
+       min_size=1, max_size=8),
+       st.integers(0, 10 ** 9))
+def test_truncation_property(events, cut_seed):
+    """Property form: random event shapes, random cut point — replay is
+    total (never raises) and returns a strict prefix of what was written."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        seg = os.path.join(d, "journal_00000000.log")
+        _write_segment(seg, events)
+        blob = open(seg, "rb").read()
+        cut = cut_seed % (len(blob) + 1)
+        with open(seg, "wb") as f:
+            f.write(blob[:cut])
+        got = read_records(seg)
+        assert got == events[:len(got)]
+
+
+# ----------------------------------------------------------- EngineJournal
+
+
+def test_commit_and_latest_committed(tmp_path):
+    j = EngineJournal(str(tmp_path), snapshot_every=4)
+    seq = j.commit_snapshot({"meta": {"step": 0}}, 0)
+    j.append("tick", toks={0: 1})
+    j.append("tick", toks={0: 2})
+    assert j.events_written == 2 and j.bytes_written > 0
+    got_seq, payload = EngineJournal.latest_committed(str(tmp_path))
+    assert got_seq == seq and payload["meta"]["step"] == 0
+    tail = EngineJournal.read_tail(str(tmp_path), seq)
+    assert [k for k, _ in tail] == ["tick", "tick"]
+    assert EngineJournal.recoverable(str(tmp_path))
+    j.close()
+
+
+def test_uncommitted_snapshot_skipped_for_previous(tmp_path):
+    """The adversarial commit-ordering case: a snapshot that crashed before
+    its COMMITTED marker must lose to the OLDER committed one, and the
+    older generation's journal tail must still replay."""
+    j = EngineJournal(str(tmp_path), snapshot_every=4)
+    j.commit_snapshot({"meta": {"step": 0}, "gen": "old"}, 0)
+    j.append("tick", toks={0: 1})
+    j.write_uncommitted_snapshot({"meta": {"step": 5}, "gen": "torn"})
+    assert os.path.isdir(tmp_path / "snap_00000001")
+    assert not os.path.exists(tmp_path / "snap_00000001" / "COMMITTED")
+    seq, payload = EngineJournal.latest_committed(str(tmp_path))
+    assert seq == 0 and payload["gen"] == "old"
+    assert len(EngineJournal.read_tail(str(tmp_path), seq)) == 1
+    j.close()
+
+
+def test_committed_but_unloadable_snapshot_falls_back(tmp_path):
+    """Disk corruption inside a committed snapshot: recovery prefers the
+    older-but-consistent generation over the newer-but-broken one."""
+    j = EngineJournal(str(tmp_path), snapshot_every=4)
+    j.commit_snapshot({"gen": "old"}, 0)
+    j.commit_snapshot({"gen": "new"}, 8)
+    with open(tmp_path / "snap_00000001" / "state.pkl", "wb") as f:
+        f.write(b"\x00garbage")
+    seq, payload = EngineJournal.latest_committed(str(tmp_path))
+    assert seq == 0 and payload["gen"] == "old"
+    j.close()
+
+
+def test_tear_tail_drops_only_last_record(tmp_path):
+    j = EngineJournal(str(tmp_path), snapshot_every=4)
+    seq = j.commit_snapshot({}, 0)
+    j.append("tick", toks={0: 1})
+    j.append("tick", toks={0: 2})
+    j.tear_tail(3)
+    tail = EngineJournal.read_tail(str(tmp_path), seq)
+    assert [p["toks"] for _, p in tail] == [{0: 1}]
+    j.close()
+
+
+def test_prune_keeps_last_committed_and_sweeps_orphans(tmp_path):
+    j = EngineJournal(str(tmp_path), snapshot_every=4, keep=2)
+    for step in range(4):
+        j.commit_snapshot({"step": step}, step)
+        j.append("tick", toks={0: step})
+    snaps = sorted(p.name for p in tmp_path.iterdir()
+                   if p.name.startswith("snap_"))
+    segs = sorted(p.name for p in tmp_path.iterdir()
+                  if p.name.startswith("journal_"))
+    assert snaps == ["snap_00000002", "snap_00000003"]
+    assert segs == ["journal_00000002.log", "journal_00000003.log"]
+    # a stale .tmp (crash mid-commit) is swept by the next commit
+    os.makedirs(tmp_path / "snap_00000009.tmp")
+    j.commit_snapshot({"step": 9}, 9)
+    assert not os.path.exists(tmp_path / "snap_00000009.tmp")
+    j.close()
+
+
+def test_journal_validates_cadence_and_requires_segment(tmp_path):
+    with pytest.raises(ValueError, match="snapshot_every"):
+        EngineJournal(str(tmp_path), snapshot_every=0)
+    j = EngineJournal(str(tmp_path / "j"), snapshot_every=1)
+    with pytest.raises(AssertionError, match="commit_snapshot"):
+        j.append("tick", toks={})
+    assert not EngineJournal.recoverable(str(tmp_path / "j"))
+    assert not EngineJournal.recoverable(str(tmp_path / "absent"))
+
+
+def test_request_record_roundtrip():
+    req = Request(request_id=7, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=9, eos_id=3, arrival_step=2, priority=-1,
+                  temperature=0.7, top_p=0.9, seed=123, deadline_s=4.5,
+                  max_wall_s=2.0)
+    req.seq = 11
+    req.times_skipped = 2
+    req.tokens = [1, 2, 3]
+    req.status = RequestStatus.ACTIVE
+    req.admit_step = 4
+    req.slot = 1
+    back = request_from_record(pickle.loads(pickle.dumps(
+        request_record(req, runtime=True))))
+    for f in ("request_id", "max_new_tokens", "eos_id", "arrival_step",
+              "priority", "temperature", "top_p", "seed", "deadline_s",
+              "max_wall_s", "seq", "times_skipped", "tokens", "status",
+              "admit_step", "slot"):
+        assert getattr(back, f) == getattr(req, f), f
+    np.testing.assert_array_equal(back.prompt, req.prompt)
+    # identity-only record must NOT carry runtime state
+    slim = request_from_record(request_record(req))
+    assert slim.tokens == [] and slim.status is RequestStatus.QUEUED

@@ -259,6 +259,43 @@ def test_sharded_prefix_share_bit_identical():
                                       res1["tokens"][rid])
 
 
+@needs_mesh
+def test_sharded_engine_crash_recovery_bit_identical(tmp_path):
+    """Journal + snapshot + recover with the pool sharded over the mesh:
+    SlotPool.snapshot crosses SHARDED page stores to host pickles and back,
+    and the recovered engine (same mesh) must finish every stream exactly
+    as the unsharded, uninterrupted engine would."""
+    from repro.configs.registry import get_config
+    from repro.launch.serve import serve_continuous
+    from repro.models.model import model_init
+    from repro.serving import RequestStatus, ServingEngine
+    cfg = get_config("llama_moe_4_16", smoke=True)
+    params = model_init(jax.random.PRNGKey(5), cfg)
+    mesh = _mesh((2, 2))
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
+               for _ in range(3)]
+    ref = serve_continuous(params, cfg, prompts, 10, num_slots=2,
+                           max_tokens=48, paged=True, page_size=8)
+
+    eng = ServingEngine(params, cfg, mesh=mesh, num_slots=2, max_tokens=48,
+                        paged=True, page_size=8,
+                        journal_dir=str(tmp_path), snapshot_every=4)
+    rids = [eng.submit(p, 10) for p in prompts]
+    for _ in range(6):
+        eng.step()                       # crash point: live sharded slots
+    assert eng.pool.num_active() > 0
+
+    rec = ServingEngine.recover(str(tmp_path), params, cfg, mesh=mesh)
+    fin = rec.run()
+    assert rec.stats()["mesh"] == {"data": 2, "model": 2}
+    assert rec.stats()["recoveries"] == 1
+    for rid, ref_rid in zip(rids, sorted(ref["tokens"])):
+        assert fin[rid].status is RequestStatus.DONE
+        np.testing.assert_array_equal(np.asarray(fin[rid].tokens),
+                                      ref["tokens"][ref_rid])
+
+
 # ------------------------------------------------- single-device fallback
 
 def test_mesh_suite_subprocess():

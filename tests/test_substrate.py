@@ -100,6 +100,43 @@ def test_ckpt_gc_keeps_last(tmp_path):
     assert ckpt.committed_steps(str(tmp_path)) == [3, 4, 5]
 
 
+def test_ckpt_truncated_leaf_raises_typed_error(tmp_path):
+    """The classic crash corruption — a leaf file cut short — must raise
+    CorruptCheckpoint NAMING the leaf, before anything is device_put."""
+    tree = {"a": jnp.arange(64, dtype=jnp.float32), "b": jnp.ones(4)}
+    ckpt.save(str(tmp_path), 1, tree)
+    f = tmp_path / "step_00000001" / "arr_0.npy"
+    f.write_bytes(f.read_bytes()[:-16])
+    with pytest.raises(ckpt.CorruptCheckpoint, match="arr_0.npy.*truncated"):
+        ckpt.restore(str(tmp_path), 1, tree)
+
+
+def test_ckpt_garbage_header_and_shape_mismatch_raise(tmp_path):
+    tree = {"a": jnp.arange(12).reshape(3, 4)}
+    ckpt.save(str(tmp_path), 1, tree)
+    with pytest.raises(ckpt.CorruptCheckpoint, match="leaf 0.*ckpt shape"):
+        ckpt.restore(str(tmp_path), 1, {"a": jnp.zeros((2, 2))})
+    (tmp_path / "step_00000001" / "arr_0.npy").write_bytes(b"not an npy")
+    with pytest.raises(ckpt.CorruptCheckpoint, match="arr_0.npy.*header"):
+        ckpt.restore(str(tmp_path), 1, tree)
+    os.unlink(tmp_path / "step_00000001" / "arr_0.npy")
+    with pytest.raises(ckpt.CorruptCheckpoint, match="missing"):
+        ckpt.restore(str(tmp_path), 1, tree)
+
+
+def test_ckpt_orphan_dirs_swept_on_next_save(tmp_path):
+    """Crash leftovers — uncommitted step dirs and stale .tmp dirs — are
+    swept by the NEXT save; committed steps are untouched."""
+    tree = {"a": jnp.ones(3)}
+    ckpt.save(str(tmp_path), 1, tree)
+    os.makedirs(tmp_path / "step_00000007")          # crashed before marker
+    os.makedirs(tmp_path / "step_00000003.tmp")      # crashed mid-write
+    ckpt.save(str(tmp_path), 2, tree)
+    assert not (tmp_path / "step_00000007").exists()
+    assert not (tmp_path / "step_00000003.tmp").exists()
+    assert ckpt.committed_steps(str(tmp_path)) == [1, 2]
+
+
 # -------------------------------------------------------------------- fault
 
 def test_supervisor_retries_then_restart():
