@@ -42,7 +42,20 @@ Gates:
     restore live streams and replay journal-tail events (both exact
     integers, no drift vs baseline) and drain every stream bit-identical
     to the uninterrupted engine; the recovery wall clock is archived,
-    never gated.
+    never gated;
+  * serving (``kv_quant``, deterministic: tick-based trace on two pools
+    funded by the same simulated HBM byte budget): the int8 paged pool
+    must sustain >= 1.8x the fp32 pool's concurrent streams OR cut the
+    analytic resident-KV bytes per token to <= 0.55x, the int8 trace
+    rerun must be bit-identical (quantized decode stays deterministic),
+    and neither the stream counts nor the byte ratio may drift/regress
+    vs the committed baseline. The int8-vs-fp32 token agreement is
+    archived, never gated — bounded quantization error legitimately
+    flips near-tied greedy argmaxes.
+
+A failed gate always names the report section and key it tripped on; a
+checker that crashes on a missing key is converted into a failure naming
+that section and key rather than a bare traceback.
 
 Usage:  python benchmarks/check_regression.py \
             --baseline BENCH_moe_path.json --fresh /tmp/bench_fresh.json \
@@ -132,11 +145,20 @@ def check_serve(baseline: dict, fresh: dict) -> list[str]:
                 f"{b_pd['dense']['max_concurrent']} -> {d} (the trace is "
                 "deterministic — config/seed changed without a baseline "
                 "refresh?)")
-    errs += check_paged_attn(baseline, fresh)
-    errs += check_preemption(baseline, fresh)
-    errs += check_prefix_sharing(baseline, fresh)
-    errs += check_expert_balance(baseline, fresh)
-    errs += check_crash_recovery(baseline, fresh)
+    for name, checker in (("paged_attn", check_paged_attn),
+                          ("preemption", check_preemption),
+                          ("prefix_sharing", check_prefix_sharing),
+                          ("expert_balance", check_expert_balance),
+                          ("crash_recovery", check_crash_recovery),
+                          ("kv_quant", check_kv_quant)):
+        try:
+            errs += checker(baseline, fresh)
+        except KeyError as e:
+            # schema drift inside a section: fail the gate naming the
+            # section and key instead of dying with a bare traceback
+            errs.append(f"serve: {name} section is missing key "
+                        f"{e.args[0]!r} — schema drift; refresh the "
+                        "baseline or fix the bench")
     return errs
 
 
@@ -330,6 +352,47 @@ def check_expert_balance(baseline: dict, fresh: dict) -> list[str]:
     return errs
 
 
+def check_kv_quant(baseline: dict, fresh: dict) -> list[str]:
+    """Gate the quantized-page section: funded by the same simulated HBM
+    byte budget, the int8 pool must either sustain >= 1.8x the fp32 pool's
+    concurrent streams or cut the analytic resident-KV bytes per token to
+    <= 0.55x; the int8 trace rerun must be bit-identical (quantized decode
+    stays deterministic); and neither the exact stream counts nor the byte
+    ratio may drift/regress vs the committed baseline."""
+    errs = []
+    f_kq = fresh.get("kv_quant")
+    if f_kq is None:
+        return ["serve: fresh report lacks the kv_quant section "
+                "(schema drift silently disarmed the quantization gate)"]
+    if "skipped" in f_kq:
+        return []             # arch without a paged path — nothing to gate
+    if not f_kq.get("streams_deterministic", False):
+        errs.append("serve: kv_quant int8 rerun produced different token "
+                    "streams — quantized decode is no longer deterministic")
+    sr = f_kq["stream_ratio"]
+    br = f_kq["bytes_per_token_ratio"]
+    if not (sr >= 1.8 - EPS or br <= 0.55 + EPS):
+        errs.append(
+            f"serve: kv_quant must buy >= 1.8x concurrent streams or "
+            f"<= 0.55x KV bytes/token at the same HBM byte budget: "
+            f"stream_ratio {sr:.3f}, bytes_per_token_ratio {br:.3f}")
+    b_kq = baseline.get("kv_quant")
+    if b_kq is not None and "skipped" not in b_kq:
+        for mode in ("fp32", "int8"):
+            if f_kq[mode]["max_concurrent"] != b_kq[mode]["max_concurrent"]:
+                errs.append(
+                    f"serve: kv_quant {mode} max_concurrent drifted "
+                    f"{b_kq[mode]['max_concurrent']} -> "
+                    f"{f_kq[mode]['max_concurrent']} (the trace is "
+                    "deterministic — config/seed changed without a "
+                    "baseline refresh?)")
+        if br > b_kq["bytes_per_token_ratio"] + EPS:
+            errs.append(
+                f"serve: kv_quant bytes_per_token_ratio regressed "
+                f"{b_kq['bytes_per_token_ratio']} -> {br}")
+    return errs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_moe_path.json",
@@ -387,6 +450,15 @@ def main() -> None:
                     f"{cr['replayed_events']} events in "
                     f"{cr['recovery_wall_ms']:.0f}ms "
                     f"(streams_match={cr['streams_match']})")
+            kq = serve_fresh.get("kv_quant", {})
+            if "int8" in kq:
+                serve_msg += (
+                    f"; kv_quant {kq['fp32']['max_concurrent']} -> "
+                    f"{kq['int8']['max_concurrent']} streams "
+                    f"(x{kq['stream_ratio']:.2f}) at "
+                    f"{kq['budget_bytes'] / 1e6:.2f}MB, bytes/token "
+                    f"x{kq['bytes_per_token_ratio']:.3f} "
+                    f"(deterministic={kq['streams_deterministic']})")
             pe = serve_fresh.get("preemption", {})
             if "preempt" in pe:
                 serve_msg += (

@@ -70,6 +70,16 @@ class ModelConfig:
     # explicitly (REPRO_FORCE_PAGED_KERNEL / with_overrides).
     paged_attn: str = "auto"          # "auto" | "kernel" | "gather"
 
+    # --- serving: quantized decode state (paged pools only) ---
+    # "int8" stores KV pages as int8 with per-page, per-kv-head amax scales
+    # (f32 [L, NP, Hkv]) and GO rows as int8 with per-row scales — bytes per
+    # resident token drop ~4x vs the fp32 smoke dtype (~2x vs bf16) while
+    # attention compute stays fp32 (dequantized in-kernel / at the gather).
+    # The enum leaves room for fp8 once hardware dtypes land. "none" keeps
+    # the full-precision pages. Quantized mode REQUIRES a paged pool — scale
+    # granularity is page granularity (core/quant.py).
+    kv_quant: str = "none"            # "none" | "int8"
+
     # ssm / hybrid details
     ssm_state: int = 0                # mamba2 state size (zamba2: 64)
     ssm_chunk: int = 128              # SSD chunk length

@@ -1,0 +1,147 @@
+"""Quantized decode state: int8 pages + per-page scales (cfg.kv_quant).
+
+The paged pool makes quantization natural — scale granularity IS page
+granularity. KV pages store int8 values with one f32 amax scale per
+(page, kv-head); GO rows (TopKUpdate history — not recomputable, so they
+must round-trip through snapshots) store int8 with one f32 scale per
+cached row. Everything here operates on raw arrays; layout/layer handling
+belongs to the callers (models/model.py, serving/pool.py).
+
+Write-side contract (the part determinism rests on):
+
+  * splat (one-shot prefill -> write_decode_slot): each page quantizes
+    against the amax of its OWN contents — pure function of the tokens.
+  * incremental scatter (decode / chunked prefill): scales only ever GROW
+    (scatter-max). When a new token raises a page's amax, the page's
+    existing int8 values are re-quantized by the exact ratio old/new in
+    f32 (`factor == 1.0` leaves them bit-identical through rint), so a
+    page's contents depend only on the tokens written to it — never on
+    page-reuse history. Freed pages MUST therefore return with zeroed
+    scales (SlotPool.scrub_released), or a reused page would inherit an
+    inflated amax and quantize differently than a fresh one.
+
+Error model: with scale = amax / QMAX and no clipping (|x| <= amax by
+construction), the round-trip error per element is bounded by scale / 2 =
+amax / (2 * QMAX) — the bound the property tests assert per page per head.
+Attention/MoE compute stays fp32: values are dequantized in-kernel
+(kernels/paged_attn.py) or at the gather (models/attention.py), and GO
+rows are dequantized to f32 at the layer boundary (f32, NOT the cfg
+compute dtype: in f32 the dequant->requant cycle of an UNCHANGED row
+recovers its int8 values exactly, so idle rows are bit-stable across
+ticks).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QMAX = 127.0                # int8 symmetric range; fp8 variants would
+                            # swap this + the storage dtype via cfg.kv_quant
+
+KV_QUANT_MODES = ("none", "int8")
+
+
+def validate_kv_quant(kv_quant: str) -> None:
+    if kv_quant not in KV_QUANT_MODES:
+        raise ValueError(
+            f"kv_quant={kv_quant!r} is not a known mode {KV_QUANT_MODES}")
+
+
+def _safe(scales):
+    """Divide-safe scales: all-zero pages (scale 0) quantize to 0."""
+    return jnp.where(scales > 0, scales, 1.0)
+
+
+def quantize_pages(pages):
+    """Quantize float pages [..., ps, Hkv, hd] -> (int8 pages, f32 scales
+    [..., Hkv]): one symmetric amax scale per (page, kv-head)."""
+    x = pages.astype(jnp.float32)
+    amax = jnp.abs(x).max(axis=(-3, -1))              # [..., Hkv]
+    scales = amax / QMAX
+    q = jnp.clip(jnp.rint(x / _safe(scales)[..., None, :, None]),
+                 -QMAX, QMAX).astype(jnp.int8)
+    return q, scales.astype(jnp.float32)
+
+
+def dequantize_pages(q, scales):
+    """int8 pages [..., ps, Hkv, hd] + scales [..., Hkv] -> f32 pages."""
+    return q.astype(jnp.float32) * scales[..., None, :, None]
+
+
+def quantize_rows(x):
+    """Quantize float rows [..., d] -> (int8 rows, f32 scales [...]): one
+    symmetric amax scale per row (the GO-cache layout)."""
+    xf = x.astype(jnp.float32)
+    scales = jnp.abs(xf).max(axis=-1) / QMAX
+    q = jnp.clip(jnp.rint(xf / _safe(scales)[..., None]),
+                 -QMAX, QMAX).astype(jnp.int8)
+    return q, scales.astype(jnp.float32)
+
+
+def dequantize_rows(q, scales):
+    return q.astype(jnp.float32) * scales[..., None]
+
+
+def scatter_token(cache, scales, page, off, val):
+    """Decode-tick token write into int8 pages with rescale-on-write.
+
+    cache  int8 [NP, ps, Hkv, hd]     scales f32 [NP, Hkv]
+    page   int32 [B]   off int32 [B]  val float [B, Hkv, hd]
+
+    The page's scale grows to cover the new token's amax (never shrinks);
+    when it grows, the page's existing values are re-quantized by the f32
+    ratio old/new — a ratio of exactly 1.0 is an int8 identity through
+    rint, so untouched pages stay bit-stable. Duplicate page indices only
+    occur on the null page 0 (masked rows), whose contents are trash by
+    design and are never read.
+    """
+    val = val.astype(jnp.float32)
+    amax_new = jnp.abs(val).max(axis=-1)              # [B, Hkv]
+    old_s = scales[page]                              # [B, Hkv]
+    scales = scales.at[page].max(amax_new / QMAX)
+    new_s = scales[page]                              # post-update
+    factor = jnp.where(new_s > 0, old_s / _safe(new_s), 1.0)
+    repaged = jnp.rint(cache[page].astype(jnp.float32)
+                       * factor[:, None, :, None]).astype(jnp.int8)
+    cache = cache.at[page].set(repaged)
+    q = jnp.clip(jnp.rint(val / _safe(new_s)[..., None]),
+                 -QMAX, QMAX).astype(jnp.int8)
+    cache = cache.at[page, off].set(q)
+    return cache, scales
+
+
+def scatter_chunk(cache, scales, pages, offs, vals):
+    """Chunked-prefill scatter into int8 pages with rescale-on-write.
+
+    cache  int8 [NP, ps, Hkv, hd]        scales f32 [NP, Hkv]
+    pages  int32 [B, Cs]  offs [B, Cs]   vals float [B, Cs, Hkv, hd]
+
+    Same contract as scatter_token. Several chunk positions may land on
+    the SAME page: the scale update is a scatter-max (order-free), and the
+    whole-page re-quantization writes IDENTICAL values for every duplicate
+    index (old and new scales are read outside the scatter), so the
+    duplicate scatter is deterministic.
+    """
+    vals = vals.astype(jnp.float32)
+    tok_amax = jnp.abs(vals).max(axis=-1)             # [B, Cs, Hkv]
+    old_s = scales[pages]                             # [B, Cs, Hkv]
+    scales = scales.at[pages].max(tok_amax / QMAX)
+    new_s = scales[pages]                             # final page scales
+    factor = jnp.where(new_s > 0, old_s / _safe(new_s), 1.0)
+    repaged = jnp.rint(cache[pages].astype(jnp.float32)
+                       * factor[:, :, None, :, None]).astype(jnp.int8)
+    cache = cache.at[pages].set(repaged)
+    q = jnp.clip(jnp.rint(vals / _safe(new_s)[..., None]),
+                 -QMAX, QMAX).astype(jnp.int8)
+    cache = cache.at[pages, offs].set(q)
+    return cache, scales
+
+
+def kv_bytes_per_token(cfg, page_size: int) -> float:
+    """Resident KV bytes per token across all layers: K + V values plus the
+    per-page scales amortized over the page's tokens."""
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    if cfg.kv_quant == "int8":
+        per_page = 2 * (page_size * hkv * hd * 1 + hkv * 4)
+    else:
+        per_page = 2 * page_size * hkv * hd * jnp.dtype(cfg.dtype).itemsize
+    return cfg.num_layers * per_page / page_size

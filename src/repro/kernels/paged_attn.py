@@ -79,12 +79,19 @@ def resolve_mode(cfg) -> str:
 
 # --------------------------------------------------------------------- decode
 
-def _decode_kernel(bt_ref, tv_ref, wv_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, ps: int, num_pages: int,
-                   softcap: float, scale: float):
+def _decode_kernel(bt_ref, tv_ref, wv_ref, q_ref, k_ref, v_ref, *rest,
+                   ps: int, num_pages: int, softcap: float, scale: float,
+                   quant: bool = False):
     """Grid (b, j): batch row b, logical page j (j innermost — the online-
     softmax reduction axis). Scalar-prefetched refs: block table [B, P],
-    positions [B], window [1]."""
+    positions [B], window [1]. With `quant`, two extra operands carry the
+    page's per-kv-head scales ([1, Hkv] blocks gathered by the same
+    block-table index map) and the int8 page dequantizes in-VMEM — HBM
+    traffic drops with the storage dtype while compute stays fp32."""
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b, j = pl.program_id(0), pl.program_id(1)
     t = tv_ref[b]
     w = wv_ref[0]
@@ -108,6 +115,9 @@ def _decode_kernel(bt_ref, tv_ref, wv_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0]                                   # [Hq, hd]
         k = k_ref[0]                                   # [ps, Hkv, hd]
         v = v_ref[0]
+        if quant:
+            k = k.astype(jnp.float32) * ks_ref[0][None, :, None]
+            v = v.astype(jnp.float32) * vs_ref[0][None, :, None]
         Hkv, G = m_ref.shape
         hd = q.shape[-1]
         qg = q.reshape(Hkv, G, hd)
@@ -137,15 +147,18 @@ def _decode_kernel(bt_ref, tv_ref, wv_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attn_decode(q, k_pages, v_pages, block_table, t, *, window=0,
-                      softcap: float = 0.0,
+                      softcap: float = 0.0, k_scales=None, v_scales=None,
                       interpret: bool | None = None) -> jax.Array:
     """Single-token paged decode attention.
 
     q [B, Hq, hd] (post-RoPE); k_pages/v_pages [NP, ps, Hkv, hd] (one
     layer's pool, the new token already scattered in); block_table [B, P]
     int32; t scalar or [B] int32 (current position per row); window a
-    traced int32 scalar (0 = global). Returns fp32 [B, Hq, hd] — the
-    pre-`wo` attention output, matching _decode_sdpa's epilogue dtype."""
+    traced int32 scalar (0 = global). `k_scales`/`v_scales` [NP, Hkv] f32
+    mark a QUANTIZED pool (int8 pages): the kernel gathers each page's
+    scales alongside it and dequantizes in-VMEM. Returns fp32 [B, Hq, hd]
+    — the pre-`wo` attention output, matching _decode_sdpa's epilogue
+    dtype."""
     if interpret is None:
         interpret = default_interpret()
     B, Hq, hd = q.shape
@@ -153,36 +166,47 @@ def paged_attn_decode(q, k_pages, v_pages, block_table, t, *, window=0,
     if Hq % Hkv:
         raise ValueError(f"num_heads={Hq} must be a multiple of "
                          f"num_kv_heads={Hkv}")
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales or neither")
     t_vec = jnp.broadcast_to(jnp.asarray(t, jnp.int32).reshape(-1), (B,))
     return _paged_attn_decode(q, k_pages, v_pages, block_table, t_vec,
                               jnp.asarray(window, jnp.int32),
+                              k_scales, v_scales,
                               softcap=float(softcap), interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
-def _paged_attn_decode(q, k_pages, v_pages, block_table, t_vec, window, *,
-                       softcap, interpret):
+def _paged_attn_decode(q, k_pages, v_pages, block_table, t_vec, window,
+                       k_scales, v_scales, *, softcap, interpret):
     B, Hq, hd = q.shape
     NP, ps, Hkv, _ = k_pages.shape
     P = block_table.shape[1]
     G = Hq // Hkv
+    quant = k_scales is not None
     scale = 1.0 / (hd ** 0.5)
     bt = block_table.astype(jnp.int32)
     tv = t_vec.astype(jnp.int32)
     wv = window.astype(jnp.int32).reshape(1)
-    q, k_pages, v_pages, bt, tv, wv = replicate_for_gspmd(
-        q, k_pages, v_pages, bt, tv, wv)
+    ops = [q, k_pages, v_pages, bt, tv, wv]
+    if quant:
+        ops += [k_scales.astype(jnp.float32), v_scales.astype(jnp.float32)]
+    ops = replicate_for_gspmd(*ops)
+    q, k_pages, v_pages, bt, tv, wv = ops[:6]
 
+    page_spec = pl.BlockSpec((1, ps, Hkv, hd),
+                             lambda b, j, bt, tv, wv: (bt[b, j], 0, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, Hq, hd), lambda b, j, bt, tv, wv: (b, 0, 0)),
+        page_spec, page_spec,
+    ]
+    if quant:
+        scale_spec = pl.BlockSpec((1, Hkv),
+                                  lambda b, j, bt, tv, wv: (bt[b, j], 0))
+        in_specs += [scale_spec, scale_spec]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, P),
-        in_specs=[
-            pl.BlockSpec((1, Hq, hd), lambda b, j, bt, tv, wv: (b, 0, 0)),
-            pl.BlockSpec((1, ps, Hkv, hd),
-                         lambda b, j, bt, tv, wv: (bt[b, j], 0, 0, 0)),
-            pl.BlockSpec((1, ps, Hkv, hd),
-                         lambda b, j, bt, tv, wv: (bt[b, j], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Hq, hd), lambda b, j, bt, tv, wv: (b, 0, 0)),
         scratch_shapes=[pltpu.VMEM((Hkv, G), jnp.float32),
                         pltpu.VMEM((Hkv, G), jnp.float32),
@@ -190,21 +214,26 @@ def _paged_attn_decode(q, k_pages, v_pages, block_table, t_vec, window, *,
     )
     return pl.pallas_call(
         functools.partial(_decode_kernel, ps=ps, num_pages=P,
-                          softcap=softcap, scale=scale),
+                          softcap=softcap, scale=scale, quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, hd), jnp.float32),
         interpret=interpret,
-    )(bt, tv, wv, q, k_pages, v_pages)
+    )(bt, tv, wv, q, k_pages, v_pages, *ops[6:])
 
 
 # -------------------------------------------------------------- chunk prefill
 
-def _chunk_kernel(bt_ref, sv_ref, kl_ref, wv_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, ps: int, num_pages: int,
-                  softcap: float, scale: float):
+def _chunk_kernel(bt_ref, sv_ref, kl_ref, wv_ref, q_ref, k_ref, v_ref, *rest,
+                  ps: int, num_pages: int, softcap: float, scale: float,
+                  quant: bool = False):
     """Grid (b, j): one [Cs]-query chunk per batch row against the row's
     pages. Scalar-prefetched: block table [B, P], start [1], kv_len [1],
-    window [1]."""
+    window [1]. `quant` adds per-page scale operands exactly as in
+    _decode_kernel."""
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b, j = pl.program_id(0), pl.program_id(1)
     start = sv_ref[0]
     kvl = kl_ref[0]
@@ -229,6 +258,9 @@ def _chunk_kernel(bt_ref, sv_ref, kl_ref, wv_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0]                                   # [Cs, Hq, hd]
         k = k_ref[0]                                   # [ps, Hkv, hd]
         v = v_ref[0]
+        if quant:
+            k = k.astype(jnp.float32) * ks_ref[0][None, :, None]
+            v = v.astype(jnp.float32) * vs_ref[0][None, :, None]
         Cs, Hkv, G = m_ref.shape
         hd = q.shape[-1]
         qg = q.reshape(Cs, Hkv, G, hd)
@@ -262,6 +294,7 @@ def _chunk_kernel(bt_ref, sv_ref, kl_ref, wv_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_attn_chunk(q, k_pages, v_pages, block_table, start, kv_len, *,
                      window=0, softcap: float = 0.0,
+                     k_scales=None, v_scales=None,
                      interpret: bool | None = None) -> jax.Array:
     """Chunked-prefill attention over a paged pool.
 
@@ -269,7 +302,8 @@ def paged_attn_chunk(q, k_pages, v_pages, block_table, start, kv_len, *,
     the pool's pages); block_table [B, P]; start / kv_len traced int32
     scalars (chunk-absolute start, total valid key count — pads in the
     last chunk carry q_pos >= kv_len and are discarded by the caller).
-    Returns fp32 [B, Cs, Hq, hd]."""
+    `k_scales`/`v_scales` [NP, Hkv] f32 mark a quantized (int8) pool —
+    see paged_attn_decode. Returns fp32 [B, Cs, Hq, hd]."""
     if interpret is None:
         interpret = default_interpret()
     B, Cs, Hq, hd = q.shape
@@ -277,39 +311,50 @@ def paged_attn_chunk(q, k_pages, v_pages, block_table, start, kv_len, *,
     if Hq % Hkv:
         raise ValueError(f"num_heads={Hq} must be a multiple of "
                          f"num_kv_heads={Hkv}")
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales or neither")
     return _paged_attn_chunk(q, k_pages, v_pages, block_table,
                              jnp.asarray(start, jnp.int32),
                              jnp.asarray(kv_len, jnp.int32),
                              jnp.asarray(window, jnp.int32),
+                             k_scales, v_scales,
                              softcap=float(softcap), interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
 def _paged_attn_chunk(q, k_pages, v_pages, block_table, start, kv_len,
-                      window, *, softcap, interpret):
+                      window, k_scales, v_scales, *, softcap, interpret):
     B, Cs, Hq, hd = q.shape
     NP, ps, Hkv, _ = k_pages.shape
     P = block_table.shape[1]
     G = Hq // Hkv
+    quant = k_scales is not None
     scale = 1.0 / (hd ** 0.5)
     bt = block_table.astype(jnp.int32)
     sv = start.astype(jnp.int32).reshape(1)
     kl = kv_len.astype(jnp.int32).reshape(1)
     wv = window.astype(jnp.int32).reshape(1)
-    q, k_pages, v_pages, bt, sv, kl, wv = replicate_for_gspmd(
-        q, k_pages, v_pages, bt, sv, kl, wv)
+    ops = [q, k_pages, v_pages, bt, sv, kl, wv]
+    if quant:
+        ops += [k_scales.astype(jnp.float32), v_scales.astype(jnp.float32)]
+    ops = replicate_for_gspmd(*ops)
+    q, k_pages, v_pages, bt, sv, kl, wv = ops[:7]
 
+    page_spec = pl.BlockSpec((1, ps, Hkv, hd),
+                             lambda b, j, bt, sv, kl, wv: (bt[b, j], 0, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, Cs, Hq, hd),
+                     lambda b, j, bt, sv, kl, wv: (b, 0, 0, 0)),
+        page_spec, page_spec,
+    ]
+    if quant:
+        scale_spec = pl.BlockSpec((1, Hkv),
+                                  lambda b, j, bt, sv, kl, wv: (bt[b, j], 0))
+        in_specs += [scale_spec, scale_spec]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(B, P),
-        in_specs=[
-            pl.BlockSpec((1, Cs, Hq, hd),
-                         lambda b, j, bt, sv, kl, wv: (b, 0, 0, 0)),
-            pl.BlockSpec((1, ps, Hkv, hd),
-                         lambda b, j, bt, sv, kl, wv: (bt[b, j], 0, 0, 0)),
-            pl.BlockSpec((1, ps, Hkv, hd),
-                         lambda b, j, bt, sv, kl, wv: (bt[b, j], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Cs, Hq, hd),
                                lambda b, j, bt, sv, kl, wv: (b, 0, 0, 0)),
         scratch_shapes=[pltpu.VMEM((Cs, Hkv, G), jnp.float32),
@@ -318,18 +363,23 @@ def _paged_attn_chunk(q, k_pages, v_pages, block_table, start, kv_len,
     )
     return pl.pallas_call(
         functools.partial(_chunk_kernel, ps=ps, num_pages=P,
-                          softcap=softcap, scale=scale),
+                          softcap=softcap, scale=scale, quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Cs, Hq, hd), jnp.float32),
         interpret=interpret,
-    )(bt, sv, kl, wv, q, k_pages, v_pages)
+    )(bt, sv, kl, wv, q, k_pages, v_pages, *ops[7:])
 
 
 # ------------------------------------------------------------ traffic model
 
 def page_bytes(cfg, page_size: int) -> int:
-    """HBM bytes one physical page costs to stage (K + V), per layer."""
+    """HBM bytes one physical page costs to stage (K + V), per layer.
+    Quantized pools pay int8 values plus one f32 scale per (page, kv
+    head) — the scale operand the kernel gathers alongside the page."""
     hd = cfg.resolved_head_dim()
+    if getattr(cfg, "kv_quant", "none") == "int8":
+        return 2 * (page_size * cfg.num_kv_heads * hd
+                    + cfg.num_kv_heads * 4)
     item = jnp.dtype(cfg.dtype).itemsize
     return 2 * page_size * cfg.num_kv_heads * hd * item
 

@@ -89,6 +89,7 @@ def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
                      temperature: float = 0.0, top_p: float = 1.0,
                      prompt_buckets: bool = False, paged: bool = False,
                      page_size: int = 16, num_pages: int | None = None,
+                     kv_quant: str | None = None,
                      prefill_chunk: int = 0,
                      priorities: list | None = None,
                      preemption: bool = False, chaos=None,
@@ -134,6 +135,7 @@ def serve_continuous(params, cfg, prompts: list, gen_tokens: int, *,
                         max_tokens=max_tokens, extras=extras, mesh=mesh,
                         prompt_buckets=prompt_buckets, paged=paged,
                         page_size=page_size, num_pages=num_pages,
+                        kv_quant=kv_quant,
                         prefill_chunk=prefill_chunk, preemption=preemption,
                         chaos=chaos, prefix_share=prefix_share,
                         expert_aware=expert_aware,
@@ -192,6 +194,11 @@ def main():
                     help="page-pool size incl. the null page (0 = match the "
                          "dense pool's token capacity); smaller values "
                          "simulate a tighter HBM budget")
+    ap.add_argument("--kv-quant", choices=["none", "int8"], default="none",
+                    help="quantized decode state: int8 KV pages + GO rows "
+                         "with per-page / per-row f32 scales (needs --paged; "
+                         "~4x more pages per HBM byte, decode logits within "
+                         "a small dequant bound of fp32)")
     ap.add_argument("--prefix-share", action="store_true",
                     help="copy-on-write prefix page sharing: prompts with a "
                          "page-aligned shared prefix map the same physical "
@@ -255,6 +262,10 @@ def main():
     if args.journal_dir and not args.paged:
         ap.error("--journal-dir needs --paged (engine snapshots are "
                  "SlotPool.snapshot block-table surgery)")
+    if args.kv_quant != "none" and not args.paged:
+        ap.error("--kv-quant needs --paged (scale granularity IS page "
+                 "granularity — there is nothing to quantize per-page "
+                 "in the dense pool)")
     if (args.supervise or args.crash_step >= 0) and not args.journal_dir:
         ap.error("--supervise/--crash-step need --journal-dir (restarted "
                  "generations re-dispatch through recover())")
@@ -352,6 +363,8 @@ def main():
                            prompt_buckets=args.buckets, paged=args.paged,
                            page_size=args.page_size,
                            num_pages=args.num_pages or None,
+                           kv_quant=(args.kv_quant
+                                     if args.kv_quant != "none" else None),
                            prefill_chunk=args.chunk_prefill,
                            priorities=[args.priority] * len(prompts),
                            preemption=args.preemption, chaos=chaos,
@@ -368,6 +381,10 @@ def main():
           + (f" [mesh {s['mesh']}]" if s["mesh"] else "")
           + (f" [paged ps={s['page_size']} pages={s['num_pages']}]"
              if s["paged"] else "")
+          + (f" [kv-quant {s['kv_quant_dtype']} "
+             f"{s['kv_bytes_per_token']:.0f} B/tok, dequant err "
+             f"{s['dequant_max_abs_err']:.2e}]"
+             if s["kv_quant_dtype"] else "")
           + (f" [chunk ticks {s['chunk_ticks']}]" if s["chunk_ticks"] else "")
           + (f" [prefix hits {s['prefix_hits']} shared pages "
              f"{s['pages_shared']} prefill skipped "

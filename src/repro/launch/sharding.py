@@ -201,6 +201,16 @@ def state_spec(path, leaf, cfg, mesh, batch: int) -> P:
         # dense rule, one page at a time)
         return P(None, _maybe(mesh, dp, shape[1]),
                  _maybe(mesh, "model", shape[2]), None, None)
+    if k0 in ("k_scales", "v_scales"):            # [L, NP, Hkv]
+        # per-page dequant scales co-locate with their pages (page dim over
+        # the data-parallel axes); the tiny kv-head dim stays replicated —
+        # both the kernel (scalar-prefetch BlockSpec) and the gather stage
+        # whole [Hkv] scale rows per page
+        return P(None, _maybe(mesh, dp, shape[1]), None)
+    if k0 == "go_scales":                         # [L, B, E, k]
+        # one scale per cached GO row — follows the go scores/token rule
+        return P(None, _maybe(mesh, dp, shape[1]),
+                 _maybe(mesh, "model", shape[2]), None)
     if k0 in ("k", "v"):
         if len(shape) == 5:                       # [L, B, S, h, hd]
             return P(None, _maybe(mesh, dp, shape[1]),

@@ -18,6 +18,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant as Q
 from repro.models.layers import (apply_rope, dense_init, dp_spec, mesh_axis,
                                  shard_hint, split)
 
@@ -439,28 +440,54 @@ def attn_decode(
         k = apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
 
     rows = jnp.arange(B)
+    # Quantized pools arrive as (int8 pages, f32 per-page scales) tuples —
+    # unpack here, repack on return so the caller's carry stays bundled.
+    k_scales = v_scales = None
+    if isinstance(cache_k, tuple):
+        cache_k, k_scales = cache_k
+        cache_v, v_scales = cache_v
     if block_table is None:
         cache_k = cache_k.at[rows, t_vec].set(k[:, 0].astype(cache_k.dtype))
         cache_v = cache_v.at[rows, t_vec].set(v[:, 0].astype(cache_v.dtype))
         att_k, att_v = cache_k, cache_v
         Smax = cache_k.shape[1]
+        ret_k, ret_v = cache_k, cache_v
     else:
         ps = cache_k.shape[1]
         page = block_table[rows, t_vec // ps]                       # [B]
-        cache_k = cache_k.at[page, t_vec % ps].set(k[:, 0].astype(cache_k.dtype))
-        cache_v = cache_v.at[page, t_vec % ps].set(v[:, 0].astype(cache_v.dtype))
+        if k_scales is not None:
+            cache_k, k_scales = Q.scatter_token(
+                cache_k, k_scales, page, t_vec % ps, k[:, 0])
+            cache_v, v_scales = Q.scatter_token(
+                cache_v, v_scales, page, t_vec % ps, v[:, 0])
+            ret_k, ret_v = (cache_k, k_scales), (cache_v, v_scales)
+        else:
+            cache_k = cache_k.at[page, t_vec % ps].set(
+                k[:, 0].astype(cache_k.dtype))
+            cache_v = cache_v.at[page, t_vec % ps].set(
+                v[:, 0].astype(cache_v.dtype))
+            ret_k, ret_v = cache_k, cache_v
         from repro.kernels import paged_attn as PAGED
         if PAGED.resolve_mode(cfg) == "kernel":
             out = PAGED.paged_attn_decode(
                 q[:, 0], cache_k, cache_v, block_table, t_vec,
                 window=jnp.asarray(window, jnp.int32),
-                softcap=cfg.logit_softcap)[:, None]          # [B,1,Hq,hd] f32
+                softcap=cfg.logit_softcap,
+                k_scales=k_scales, v_scales=v_scales)[:, None]  # [B,1,Hq,hd]
             out = out.astype(x_t.dtype).reshape(B, 1, nq * hd) @ params["wo"]
-            return out, cache_k, cache_v
+            return out, ret_k, ret_v
         P = block_table.shape[1]
         Smax = P * ps
-        att_k = cache_k[block_table].reshape(B, Smax, nkv, hd)
-        att_v = cache_v[block_table].reshape(B, Smax, nkv, hd)
+        if k_scales is not None:
+            att_k = (cache_k[block_table].astype(jnp.float32)
+                     * k_scales[block_table][:, :, None, :, None]
+                     ).reshape(B, Smax, nkv, hd)
+            att_v = (cache_v[block_table].astype(jnp.float32)
+                     * v_scales[block_table][:, :, None, :, None]
+                     ).reshape(B, Smax, nkv, hd)
+        else:
+            att_k = cache_k[block_table].reshape(B, Smax, nkv, hd)
+            att_v = cache_v[block_table].reshape(B, Smax, nkv, hd)
 
     k_pos = jnp.arange(Smax, dtype=jnp.int32)
     mask = k_pos[None, :] <= t_vec[:, None]                         # [B, Smax]
@@ -468,7 +495,7 @@ def attn_decode(
     mask &= jnp.where(w > 0, k_pos[None, :] > t_vec[:, None] - w, True)
     out = _decode_sdpa(q, att_k, att_v, mask, cfg.logit_softcap)
     out = out.astype(x_t.dtype).reshape(B, 1, nq * hd) @ params["wo"]
-    return out, cache_k, cache_v
+    return out, ret_k, ret_v
 
 
 def attn_chunk(
@@ -516,6 +543,10 @@ def attn_chunk(
     q = apply_rope(q, cos[:, None, :], sin[:, None, :])
     k = apply_rope(k, cos[:, None, :], sin[:, None, :])
 
+    k_scales = v_scales = None
+    if isinstance(cache_k, tuple):
+        cache_k, k_scales = cache_k
+        cache_v, v_scales = cache_v
     if block_table is None:
         cache_k = jax.lax.dynamic_update_slice(
             cache_k, k.astype(cache_k.dtype), (0, positions[0], 0, 0))
@@ -523,14 +554,23 @@ def attn_chunk(
             cache_v, v.astype(cache_v.dtype), (0, positions[0], 0, 0))
         att_k, att_v = cache_k, cache_v
         Smax = cache_k.shape[1]
+        ret_k, ret_v = cache_k, cache_v
     else:
         ps = cache_k.shape[1]
         rows = jnp.arange(B)
         pages = block_table[rows[:, None], positions[None, :] // ps]  # [B,Cs]
-        cache_k = cache_k.at[pages, positions[None, :] % ps].set(
-            k.astype(cache_k.dtype))
-        cache_v = cache_v.at[pages, positions[None, :] % ps].set(
-            v.astype(cache_v.dtype))
+        if k_scales is not None:
+            cache_k, k_scales = Q.scatter_chunk(
+                cache_k, k_scales, pages, positions[None, :] % ps, k)
+            cache_v, v_scales = Q.scatter_chunk(
+                cache_v, v_scales, pages, positions[None, :] % ps, v)
+            ret_k, ret_v = (cache_k, k_scales), (cache_v, v_scales)
+        else:
+            cache_k = cache_k.at[pages, positions[None, :] % ps].set(
+                k.astype(cache_k.dtype))
+            cache_v = cache_v.at[pages, positions[None, :] % ps].set(
+                v.astype(cache_v.dtype))
+            ret_k, ret_v = cache_k, cache_v
         P = block_table.shape[1]
         Smax = P * ps
         from repro.kernels import paged_attn as PAGED
@@ -539,11 +579,20 @@ def attn_chunk(
             out = PAGED.paged_attn_chunk(
                 q, cache_k, cache_v, block_table, positions[0], kvl,
                 window=jnp.asarray(window, jnp.int32),
-                softcap=cfg.logit_softcap)                 # [B,Cs,Hq,hd] f32
+                softcap=cfg.logit_softcap,
+                k_scales=k_scales, v_scales=v_scales)      # [B,Cs,Hq,hd] f32
             out = out.astype(x.dtype).reshape(B, Cs, nq * hd) @ params["wo"]
-            return out, cache_k, cache_v
-        att_k = cache_k[block_table].reshape(B, Smax, nkv, hd)
-        att_v = cache_v[block_table].reshape(B, Smax, nkv, hd)
+            return out, ret_k, ret_v
+        if k_scales is not None:
+            att_k = (cache_k[block_table].astype(jnp.float32)
+                     * k_scales[block_table][:, :, None, :, None]
+                     ).reshape(B, Smax, nkv, hd)
+            att_v = (cache_v[block_table].astype(jnp.float32)
+                     * v_scales[block_table][:, :, None, :, None]
+                     ).reshape(B, Smax, nkv, hd)
+        else:
+            att_k = cache_k[block_table].reshape(B, Smax, nkv, hd)
+            att_v = cache_v[block_table].reshape(B, Smax, nkv, hd)
 
     k_pos = jnp.arange(Smax, dtype=jnp.int32)
     kvl = jnp.asarray(Smax if kv_len is None else kv_len, jnp.int32)
@@ -552,7 +601,7 @@ def attn_chunk(
         jnp.asarray(window, jnp.int32), kvl,
         causal=True, softcap=cfg.logit_softcap)
     out = out.reshape(B, Cs, nq * hd) @ params["wo"]
-    return out, cache_k, cache_v
+    return out, ret_k, ret_v
 
 
 def cross_attn_decode(params: dict, x_t: jax.Array, memory: jax.Array, *, cfg):

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import moe as MOE
+from repro.core import quant as Q
 from repro.core.go_cache import (GOCache, go_cache_init, go_cache_init_slot,
                                  go_cache_prefill, go_cache_write_slot)
 from repro.core.grouping import default_groups, group_of_expert_from_groups
@@ -430,19 +431,33 @@ def init_decode_state(cfg, batch: int, max_len: int,
         if max_len % ps:
             raise ValueError(f"max_len={max_len} must be a multiple of "
                              f"page_size={ps}")
+        Q.validate_kv_quant(cfg.kv_quant)
+        quant = cfg.kv_quant == "int8"
         L = cfg.num_layers
         hd = cfg.resolved_head_dim()
+        page_dt = jnp.int8 if quant else dt
         st["block_table"] = jnp.zeros((batch, max_len // ps), jnp.int32)
         st["k_pages"] = jnp.zeros(
-            (L, num_pages, ps, cfg.num_kv_heads, hd), dt)
+            (L, num_pages, ps, cfg.num_kv_heads, hd), page_dt)
         st["v_pages"] = jnp.zeros(
-            (L, num_pages, ps, cfg.num_kv_heads, hd), dt)
+            (L, num_pages, ps, cfg.num_kv_heads, hd), page_dt)
+        if quant:
+            # per-page, per-kv-head amax scales; zero = empty page
+            st["k_scales"] = jnp.zeros(
+                (L, num_pages, cfg.num_kv_heads), jnp.float32)
+            st["v_scales"] = jnp.zeros(
+                (L, num_pages, cfg.num_kv_heads), jnp.float32)
         if cfg.moe is not None and cfg.moe.routing == "expert_choice" \
                 and cfg.moe.go_cache:
             e = cfg.moe
-            per = go_cache_init(batch, e.num_experts, e.top_k, cfg.d_model, dt)
+            per = go_cache_init(batch, e.num_experts, e.top_k, cfg.d_model,
+                                jnp.int8 if quant else dt)
             st["go"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (L, *a.shape)), per)
+            if quant:
+                # per-row GO scales (outputs rows are [E, k, d] per slot)
+                st["go_scales"] = jnp.zeros(
+                    (L, batch, e.num_experts, e.top_k), jnp.float32)
         return st
 
     if cfg.block == "attn" and cfg.encoder_layers > 0:
@@ -516,6 +531,8 @@ def init_decode_slot(state: dict, slot) -> dict:
     if "go" in st:
         # vmap over the stacked layer axis -> per-layer [B, ...] caches
         st["go"] = jax.vmap(lambda c: go_cache_init_slot(c, slot))(st["go"])
+    if "go_scales" in st:
+        st["go_scales"] = st["go_scales"].at[:, slot].set(0)
     if "ssm" in st:
         st["ssm"] = jax.tree.map(lambda a: a.at[:, slot].set(0), st["ssm"])
     if "mlstm" in st:
@@ -544,6 +561,7 @@ def write_decode_slot(state: dict, slot, src: dict, page_ids=None) -> dict:
         st["block_table"] = st["block_table"].at[slot].set(pid)
         L, _, ps, h, hd = st["k_pages"].shape
         P = pid.shape[0]
+        quant = "k_scales" in st
         for key, srck in (("k_pages", "k"), ("v_pages", "v")):
             if srck not in src:
                 # paged-native chunk prefill: the chunk run already scattered
@@ -553,7 +571,15 @@ def write_decode_slot(state: dict, slot, src: dict, page_ids=None) -> dict:
                 f"{srck}: prefill len {src[srck].shape[2]} != pool " \
                 f"max_tokens {P * ps} (prefill must use the pool's max_len)"
             pages = src[srck][:, 0].reshape(L, P, ps, h, hd)
-            st[key] = st[key].at[:, pid].set(pages.astype(st[key].dtype))
+            if quant:
+                # splat-quantize: each page against its own amax — a pure
+                # function of the tokens, independent of pool history
+                q, sc = Q.quantize_pages(pages)
+                st[key] = st[key].at[:, pid].set(q)
+                sk = {"k_pages": "k_scales", "v_pages": "v_scales"}[key]
+                st[sk] = st[sk].at[:, pid].set(sc)
+            else:
+                st[key] = st[key].at[:, pid].set(pages.astype(st[key].dtype))
     for key in ("k", "v"):
         if key in st:
             assert st[key].shape[2:] == src[key].shape[2:], \
@@ -561,8 +587,14 @@ def write_decode_slot(state: dict, slot, src: dict, page_ids=None) -> dict:
                 "(prefill must use the pool's max_len)"
             st[key] = st[key].at[:, slot].set(src[key][:, 0].astype(st[key].dtype))
     if "go" in st:
+        src_go = src["go"]
+        if "go_scales" in st:
+            # quantize the full-precision prefill rows once, at the splat
+            qout, qsc = Q.quantize_rows(src_go.outputs)
+            src_go = src_go._replace(outputs=qout)
+            st["go_scales"] = st["go_scales"].at[:, slot].set(qsc[:, 0])
         st["go"] = jax.vmap(lambda c, s: go_cache_write_slot(c, slot, s))(
-            st["go"], src["go"])
+            st["go"], src_go)
     if "ssm" in st:
         st["ssm"] = jax.tree.map(
             lambda a, b: a.at[:, slot].set(b[:, 0].astype(a.dtype)),
@@ -613,38 +645,61 @@ def _dec_attn(params, x, state, cfg):
     goe = expert_groups(cfg)
     has_go = "go" in state
     paged = "block_table" in state
+    qkv = paged and "k_scales" in state
+    qgo = has_go and "go_scales" in state
     kk, vk = ("k_pages", "v_pages") if paged else ("k", "v")
     bt = state["block_table"] if paged else None
 
     # The full KV (and GO) caches ride in the scan CARRY and are updated
     # layer-by-layer with dynamic_update_index — XLA keeps them in place
     # (donated buffers), instead of double-buffering a stacked ys output.
+    # Quantized pools bundle each cache with its scales — (pages, scales)
+    # tuples ride the carry and tree.map generalizes the index/update.
     def body(carry, xs):
         x, K, V, go, l = carry
         lp, w = xs
-        ck = jax.lax.dynamic_index_in_dim(K, l, 0, keepdims=False)
-        cv = jax.lax.dynamic_index_in_dim(V, l, 0, keepdims=False)
-        go_l = jax.tree.map(
-            lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False),
-            go) if has_go else None
+        pick = lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False)
+        put = lambda full, new: jax.lax.dynamic_update_index_in_dim(
+            full, new.astype(full.dtype), l, 0)
+        ck = jax.tree.map(pick, K)
+        cv = jax.tree.map(pick, V)
+        go_l = jax.tree.map(pick, go) if has_go else None
+        if qgo:
+            # layer boundary: int8 GO rows -> f32 (f32, NOT the cfg compute
+            # dtype: in f32 an unchanged row requantizes to its exact int8
+            # bits, so idle rows are bit-stable across ticks)
+            go_l, gsc = go_l
+            go_l = go_l._replace(outputs=Q.dequantize_rows(go_l.outputs, gsc))
         x, ck, cv, go_l, _ = B.attn_block_decode(
             lp, x, ck, cv, t, cfg=cfg, window=w, group_of_expert=goe,
             go_cache=go_l, block_table=bt)
-        K = jax.lax.dynamic_update_index_in_dim(K, ck.astype(K.dtype), l, 0)
-        V = jax.lax.dynamic_update_index_in_dim(V, cv.astype(V.dtype), l, 0)
+        if qgo:
+            qout, gsc = Q.quantize_rows(go_l.outputs)
+            go_l = (go_l._replace(outputs=qout), gsc)
+        K = jax.tree.map(put, K, ck)
+        V = jax.tree.map(put, V, cv)
         if has_go:
-            go = jax.tree.map(
-                lambda full, new: jax.lax.dynamic_update_index_in_dim(
-                    full, new.astype(full.dtype), l, 0), go, go_l)
+            go = jax.tree.map(put, go, go_l)
         return (x, K, V, go, l + 1), None
 
+    K0 = (state[kk], state["k_scales"]) if qkv else state[kk]
+    V0 = (state[vk], state["v_scales"]) if qkv else state[vk]
     go0 = state.get("go")
-    carry0 = (x, state[kk], state[vk], go0, jnp.zeros((), jnp.int32))
+    if qgo:
+        go0 = (go0, state["go_scales"])
+    carry0 = (x, K0, V0, go0, jnp.zeros((), jnp.int32))
     (x, K, V, go, _), _ = jax.lax.scan(
         body, carry0, (params["layers"], windows))
-    state[kk], state[vk] = K, V
+    if qkv:
+        (state[kk], state["k_scales"]) = K
+        (state[vk], state["v_scales"]) = V
+    else:
+        state[kk], state[vk] = K, V
     if has_go:
-        state["go"] = go
+        if qgo:
+            state["go"], state["go_scales"] = go
+        else:
+            state["go"] = go
     return x, state
 
 
@@ -884,35 +939,44 @@ def prefill_chunk(params: dict, state: dict, tokens: jax.Array, cfg,
     x = params["embed"][tokens]
     has_go = "go" in state
     paged = "block_table" in state
+    qkv = paged and "k_scales" in state
     kk, vk = ("k_pages", "v_pages") if paged else ("k", "v")
     bt = state["block_table"] if paged else None
 
+    # Quantized pools bundle (pages, scales) in the carry — same tree.map
+    # generalization as _dec_attn. The chunk job's GO cache stays full
+    # precision (go_cache_merge reads it); it quantizes once at the
+    # write_decode_slot splat on completion.
     def body(carry, xs):
         x, K, V, go, l = carry
         lp, w = xs
-        ck = jax.lax.dynamic_index_in_dim(K, l, 0, keepdims=False)
-        cv = jax.lax.dynamic_index_in_dim(V, l, 0, keepdims=False)
-        go_l = jax.tree.map(
-            lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False),
-            go) if has_go else None
+        pick = lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False)
+        put = lambda full, new: jax.lax.dynamic_update_index_in_dim(
+            full, new.astype(full.dtype), l, 0)
+        ck = jax.tree.map(pick, K)
+        cv = jax.tree.map(pick, V)
+        go_l = jax.tree.map(pick, go) if has_go else None
         x, ck, cv, go_l, _ = B.attn_block_chunk(
             lp, x, ck, cv, start, cfg=cfg, window=w, valid_len=vl,
             group_of_expert=goe, group_members=gm, go_cache=go_l,
             block_table=bt)
-        K = jax.lax.dynamic_update_index_in_dim(K, ck.astype(K.dtype), l, 0)
-        V = jax.lax.dynamic_update_index_in_dim(V, cv.astype(V.dtype), l, 0)
+        K = jax.tree.map(put, K, ck)
+        V = jax.tree.map(put, V, cv)
         if has_go:
-            go = jax.tree.map(
-                lambda full, new: jax.lax.dynamic_update_index_in_dim(
-                    full, new.astype(full.dtype), l, 0), go, go_l)
+            go = jax.tree.map(put, go, go_l)
         return (x, K, V, go, l + 1), None
 
-    carry0 = (x, state[kk], state[vk], state.get("go"),
-              jnp.zeros((), jnp.int32))
+    K0 = (state[kk], state["k_scales"]) if qkv else state[kk]
+    V0 = (state[vk], state["v_scales"]) if qkv else state[vk]
+    carry0 = (x, K0, V0, state.get("go"), jnp.zeros((), jnp.int32))
     (x, K, V, go, _), _ = jax.lax.scan(
         body, carry0, (params["layers"], windows))
     state = dict(state)
-    state[kk], state[vk] = K, V
+    if qkv:
+        (state[kk], state["k_scales"]) = K
+        (state[vk], state["v_scales"]) = V
+    else:
+        state[kk], state[vk] = K, V
     if has_go:
         state["go"] = go
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)

@@ -98,6 +98,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant as Q
 from repro.models.model import (init_decode_state, paged_supported, prefill,
                                 prefill_chunk as _model_prefill_chunk,
                                 serve_step)
@@ -244,6 +245,7 @@ class ServingEngine:
                  extras: dict | None = None, mesh=None,
                  prompt_buckets: bool = False, paged: bool = False,
                  page_size: int = 16, num_pages: int | None = None,
+                 kv_quant: str | None = None,
                  prefill_chunk: int = 0, preemption: bool = False,
                  chaos: Chaos | None = None,
                  prefix_share: bool | None = None,
@@ -276,6 +278,17 @@ class ServingEngine:
             cfg = cfg.with_overrides(paged_attn="kernel")
         if _env_on("REPRO_PAGED_GATHER"):
             cfg = cfg.with_overrides(paged_attn="gather")
+        # Quantized decode state resolves into cfg the same way (cfg is the
+        # static compile key). The REPRO_KV_QUANT env lane silently no-ops
+        # where the pool won't be paged or the page geometry can't tile int8
+        # pages; the explicit kwarg is an API contract — SlotPool raises a
+        # typed error when it can't honor it.
+        if kv_quant is None:
+            if _env_on("REPRO_KV_QUANT") and paged and paged_supported(cfg) \
+                    and page_size % 8 == 0:
+                cfg = cfg.with_overrides(kv_quant="int8")
+        else:
+            cfg = cfg.with_overrides(kv_quant=kv_quant)
         self.cfg = cfg
         self.pool = SlotPool(cfg, num_slots, max_tokens, extras, mesh=mesh,
                              paged=paged, page_size=page_size,
@@ -396,6 +409,7 @@ class ServingEngine:
             num_slots=num_slots, max_tokens=self.pool.max_tokens,
             max_queue=max_queue, paged=self.pool.paged,
             page_size=self.pool.page_size, num_pages=self.pool.num_pages,
+            kv_quant=self.cfg.kv_quant,
             prefill_chunk=self.prefill_chunk, preemption=self.preemption,
             prompt_buckets=self.prompt_buckets,
             prefix_share=self.prefix_share, expert_aware=self.expert_aware)
@@ -1044,13 +1058,23 @@ class ServingEngine:
         rem = req.prompt_len - start
         padded = -(-rem // ps) * ps
         chunk = np.pad(req.prompt[start:], (0, padded - rem))
-        state = init_decode_state(self.cfg, 1, self.pool.max_tokens,
+        # quantized pools: the batch-1 skeleton stays UNQUANTIZED (chunk-run
+        # GO rows are f32 by the chunk-lane contract — write_decode_slot
+        # quantizes them once at the final splat); only the pool's int8 page
+        # store + its scales thread through the run
+        quant = self.pool.quant
+        skel_cfg = (self.cfg.with_overrides(kv_quant="none")
+                    if quant else self.cfg)
+        state = init_decode_state(skel_cfg, 1, self.pool.max_tokens,
                                   req.extras or {},
                                   paged=(1, ps))
         del state["k_pages"], state["v_pages"]
         state["block_table"] = jnp.asarray(row, jnp.int32)[None, :]
         state["k_pages"] = self.pool.state["k_pages"]
         state["v_pages"] = self.pool.state["v_pages"]
+        if quant:
+            state["k_scales"] = self.pool.state["k_scales"]
+            state["v_scales"] = self.pool.state["v_scales"]
         args = (self.params, state, jnp.asarray(chunk, jnp.int32)[None, :],
                 self.cfg, jnp.asarray(start, jnp.int32),
                 jnp.asarray(rem, jnp.int32))
@@ -1061,6 +1085,9 @@ class ServingEngine:
             state, logits = _jit_prefill_chunk(*args)
         self.pool.state["k_pages"] = state.pop("k_pages")
         self.pool.state["v_pages"] = state.pop("v_pages")
+        if quant:
+            self.pool.state["k_scales"] = state.pop("k_scales")
+            self.pool.state["v_scales"] = state.pop("v_scales")
         self.pool.state = self.pool._pin(self.pool.state)
         self.prefix_hits += 1
         self.pages_shared += len(shared)
@@ -1085,19 +1112,27 @@ class ServingEngine:
         row = self.pool.block_table[slot]
         n_full = req.prompt_len // ps
         tail = req.prompt_len - n_full * ps
-        tail_k = tail_v = None
+        tail_k = tail_v = tail_ks = tail_vs = None
         if tail:
             pid = int(row[n_full])
             tail_k = np.asarray(self.pool.state["k_pages"][:, pid, :tail])
             tail_v = np.asarray(self.pool.state["v_pages"][:, pid, :tail])
+            if self.pool.quant:
+                # int8 tail bytes are meaningless without their page scales
+                tail_ks = np.asarray(self.pool.state["k_scales"][:, pid])
+                tail_vs = np.asarray(self.pool.state["v_scales"][:, pid])
         go = None
         if "go" in self.pool.state:
             go = jax.tree.map(lambda a: np.asarray(a[:, slot]),
                               self.pool.state["go"])
+        go_scales = None
+        if "go_scales" in self.pool.state:
+            go_scales = np.asarray(self.pool.state["go_scales"][:, slot])
         released = idx.deposit(
             req.prompt, row[:n_full], tail_k=tail_k, tail_v=tail_v, go=go,
             logits=np.asarray(logits, np.float32).reshape(1, -1),
-            sig=req.expert_sig)
+            sig=req.expert_sig, tail_ks=tail_ks, tail_vs=tail_vs,
+            go_scales=go_scales)
         self.pool.scrub_released(released)
 
     # ---------------------------------------------------------- chunk prefill
@@ -1115,8 +1150,14 @@ class ServingEngine:
         if self.pool.paged:
             page_row = self.pool.claim_chunk_pages(req)
             # batch-1 paged view: position/GO/block-table only — the page
-            # store itself is threaded in from the pool at each chunk tick
-            state = init_decode_state(self.cfg, 1, self.pool.max_tokens,
+            # store itself is threaded in from the pool at each chunk tick.
+            # Quantized pools keep the skeleton UNQUANTIZED: its GO rows
+            # accumulate in f32 across chunks (go_cache_merge reads float
+            # outputs) and quantize once at the final write_decode_slot
+            # splat; the pool's int8 pages + scales thread through per tick.
+            skel_cfg = (self.cfg.with_overrides(kv_quant="none")
+                        if self.pool.quant else self.cfg)
+            state = init_decode_state(skel_cfg, 1, self.pool.max_tokens,
                                       req.extras or {},
                                       paged=(1, self.pool.page_size))
             del state["k_pages"], state["v_pages"]
@@ -1150,6 +1191,9 @@ class ServingEngine:
             # other pages, so ownership transfers cleanly back each tick
             job.state["k_pages"] = self.pool.state["k_pages"]
             job.state["v_pages"] = self.pool.state["v_pages"]
+            if self.pool.quant:
+                job.state["k_scales"] = self.pool.state["k_scales"]
+                job.state["v_scales"] = self.pool.state["v_scales"]
         args = (self.params, job.state,
                 jnp.asarray(chunk, jnp.int32)[None, :], self.cfg,
                 jnp.asarray(job.pos, jnp.int32), jnp.asarray(valid, jnp.int32))
@@ -1161,6 +1205,9 @@ class ServingEngine:
         if paged:
             self.pool.state["k_pages"] = job.state.pop("k_pages")
             self.pool.state["v_pages"] = job.state.pop("v_pages")
+            if self.pool.quant:
+                self.pool.state["k_scales"] = job.state.pop("k_scales")
+                self.pool.state["v_scales"] = job.state.pop("v_scales")
             self.pool.state = self.pool._pin(self.pool.state)
         job.pos += Cs
         self.chunk_ticks += 1
@@ -1281,6 +1328,11 @@ class ServingEngine:
                     "k": np.asarray(self.pool.state["k_pages"][:, jids]),
                     "v": np.asarray(self.pool.state["v_pages"][:, jids]),
                 }
+                if self.pool.quant:
+                    prefix["page_contents"]["ks"] = np.asarray(
+                        self.pool.state["k_scales"][:, jids])
+                    prefix["page_contents"]["vs"] = np.asarray(
+                        self.pool.state["v_scales"][:, jids])
         return {
             "meta": {
                 "step": self.step_count,
@@ -1342,6 +1394,11 @@ class ServingEngine:
         self.pool.state["v_pages"] = self.pool.state["v_pages"].at[
             :, jids].set(jnp.asarray(contents["v"]).astype(
                 self.pool.state["v_pages"].dtype))
+        if self.pool.quant:
+            self.pool.state["k_scales"] = self.pool.state["k_scales"].at[
+                :, jids].set(jnp.asarray(contents["ks"]))
+            self.pool.state["v_scales"] = self.pool.state["v_scales"].at[
+                :, jids].set(jnp.asarray(contents["vs"]))
         self.pool.state = self.pool._pin(self.pool.state)
         self.prefix_index.restore_state(pstate, dict(zip(ids, fresh)))
         self.pool.alloc.free(tmp)   # node pins keep every page alive
@@ -1508,6 +1565,14 @@ class ServingEngine:
             "pages_in_use": (self.pool.alloc.pages_in_use
                              if self.pool.paged else None),
             "chunk_ticks": self.chunk_ticks,
+            # --- quantized decode state ---
+            "kv_quant_dtype": (self.cfg.kv_quant
+                               if self.cfg.kv_quant != "none" else None),
+            "kv_bytes_per_token": (
+                Q.kv_bytes_per_token(self.cfg, self.pool.page_size)
+                if self.pool.paged else None),
+            "dequant_max_abs_err": (self.pool.dequant_max_abs_err
+                                    if self.pool.quant else None),
             # --- prefix sharing / expert-aware admission ---
             "prefix_share": self.prefix_share,
             "expert_aware": self.expert_aware,

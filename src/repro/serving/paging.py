@@ -371,7 +371,8 @@ class PrefixIndex:
     # ---------------------------------------------------------------- deposit
 
     def deposit(self, prompt, page_ids, *, tail_k, tail_v, go, logits,
-                sig=None) -> list[int]:
+                sig=None, tail_ks=None, tail_vs=None,
+                go_scales=None) -> list[int]:
         """Record an admitted prompt: pin its full pages as radix nodes
         (sharing the donor's physical `page_ids` — no data moves) and cache
         the tail KV / GO rows / logits under the full-prompt key. Returns
@@ -411,6 +412,10 @@ class PrefixIndex:
         self._entries[key] = {
             "nodes": chain, "tail_k": tail_k, "tail_v": tail_v,
             "go": go, "logits": logits, "sig": sig, "prompt_len": len(key),
+            # quantized pools: per-page scales for the tail pages and the
+            # depositor's GO row scales — int8 pages without their scales
+            # are meaningless bytes (None under kv_quant="none")
+            "tail_ks": tail_ks, "tail_vs": tail_vs, "go_scales": go_scales,
         }
         self.deposits += 1
         released: list[int] = []

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant as Q
 from repro.models.model import (init_decode_slot, init_decode_state,
                                 paged_supported, write_decode_slot)
 from repro.serving.paging import PageAllocator, pages_for_tokens
@@ -77,6 +78,16 @@ class SlotPool:
         self.paged = bool(paged)
         self.page_size = page_size
         self.num_pages = None
+        Q.validate_kv_quant(getattr(cfg, "kv_quant", "none"))
+        self.quant = cfg.kv_quant != "none"
+        self.dequant_max_abs_err = 0.0
+        if self.quant and not self.paged:
+            # quantized decode state is page-granular by construction —
+            # there is no per-page scale to hang off a dense KV row
+            raise ValueError(
+                f"kv_quant={cfg.kv_quant!r} requires a paged pool (scale "
+                "granularity IS page granularity) — enable paging "
+                "(paged=True / REPRO_FORCE_PAGED) or set kv_quant='none'")
         if self.paged:
             if not paged_supported(cfg):
                 raise ValueError(
@@ -85,6 +96,12 @@ class SlotPool:
             if max_tokens % page_size:
                 raise ValueError(f"max_tokens={max_tokens} must be a "
                                  f"multiple of page_size={page_size}")
+            if self.quant and page_size % 8:
+                raise ValueError(
+                    f"kv_quant={cfg.kv_quant!r} needs page_size divisible "
+                    f"by 8 (int8 pages stage through the paged-attention "
+                    f"kernel in 8-row sublane granules); got "
+                    f"page_size={page_size}")
             # default: same token capacity as the dense pool, plus the null
             # page — paging then costs nothing and saves whatever requests
             # don't use. A smaller num_pages SIMULATES a tighter HBM budget.
@@ -215,6 +232,8 @@ class SlotPool:
             self.block_table[slot] = row
             self.state = self._pin(_write_slot(
                 self.state, slot, slot_state, jnp.asarray(row)))
+            if self.quant:
+                self._note_dequant_err(slot_state)
         else:
             self.state = self._pin(_write_slot(self.state, slot, slot_state))
         self.owner[slot] = req
@@ -226,6 +245,27 @@ class SlotPool:
         self.top_ps[slot] = req.top_p
         self.keys[slot] = 0 if key is None else np.asarray(key, np.uint32)
         req.slot = slot
+
+    def _note_dequant_err(self, slot_state: dict) -> None:
+        """Track the observed quantize->dequantize round-trip error of an
+        admission's splatted state (running max, surfaced via engine
+        stats()). Recomputes the splat quantization — a pure function of
+        the prefill values — so the audit needs no fp32 shadow pool."""
+        for srck in ("k", "v"):
+            if srck not in slot_state:
+                continue
+            src = jnp.asarray(slot_state[srck])[:, 0].astype(jnp.float32)
+            L = src.shape[0]
+            pages = src.reshape(L, -1, self.page_size, *src.shape[2:])
+            qp, sc = Q.quantize_pages(pages)
+            err = float(jnp.abs(pages - Q.dequantize_pages(qp, sc)).max())
+            self.dequant_max_abs_err = max(self.dequant_max_abs_err, err)
+        go = slot_state.get("go")
+        if go is not None:
+            out = jnp.asarray(go.outputs).astype(jnp.float32)
+            qo, so = Q.quantize_rows(out)
+            err = float(jnp.abs(out - Q.dequantize_rows(qo, so)).max())
+            self.dequant_max_abs_err = max(self.dequant_max_abs_err, err)
 
     # --------------------------------------------------------- prefix sharing
 
@@ -284,11 +324,22 @@ class SlotPool:
             self.state["v_pages"] = self.state["v_pages"].at[
                 :, pid, :tail].set(jnp.asarray(entry["tail_v"]).astype(
                     self.state["v_pages"].dtype))
+            if self.quant:
+                # the tail page's scales travel with its int8 bytes — the
+                # consumer's decode grows this page under the donor's
+                # exact scale, so shared-prefix streams stay deterministic
+                self.state["k_scales"] = self.state["k_scales"].at[
+                    :, pid].set(jnp.asarray(entry["tail_ks"]))
+                self.state["v_scales"] = self.state["v_scales"].at[
+                    :, pid].set(jnp.asarray(entry["tail_vs"]))
         self.state["t"] = self.state["t"].at[slot].set(req.prompt_len)
         if "go" in self.state:
             self.state["go"] = jax.tree.map(
                 lambda a, r: a.at[:, slot].set(jnp.asarray(r).astype(a.dtype)),
                 self.state["go"], entry["go"])
+        if "go_scales" in self.state:
+            self.state["go_scales"] = self.state["go_scales"].at[
+                :, slot].set(jnp.asarray(entry["go_scales"]))
         self._push_block_table()
         self.state = self._pin(self.state)
         self.owner[slot] = req
@@ -348,13 +399,28 @@ class SlotPool:
         LAST reference drops, other owners may still be reading it)."""
         if not self.paged or not released:
             return
+        changed = False
+        if self.quant:
+            # EVERY released page returns with zeroed scales (not just the
+            # scrub-marked ones): the rescale-on-write contract makes a
+            # page's contents a pure function of the tokens written to it
+            # ONLY if it starts from scale 0 — an inherited amax would
+            # quantize a reused page differently than a fresh one, breaking
+            # deterministic preempt/resume parity. (The first write into a
+            # scale-0 page also rescales the stale int8 bytes by factor 0,
+            # so old contents never survive reuse.)
+            ids = jnp.asarray(sorted(released), jnp.int32)
+            self.state["k_scales"] = self.state["k_scales"].at[:, ids].set(0)
+            self.state["v_scales"] = self.state["v_scales"].at[:, ids].set(0)
+            changed = True
         dirty = self.alloc.pop_dirty(released)
-        if not dirty:
-            return
-        ids = jnp.asarray(dirty, jnp.int32)
-        self.state["k_pages"] = self.state["k_pages"].at[:, ids].set(0)
-        self.state["v_pages"] = self.state["v_pages"].at[:, ids].set(0)
-        self.state = self._pin(self.state)
+        if dirty:
+            ids = jnp.asarray(dirty, jnp.int32)
+            self.state["k_pages"] = self.state["k_pages"].at[:, ids].set(0)
+            self.state["v_pages"] = self.state["v_pages"].at[:, ids].set(0)
+            changed = True
+        if changed:
+            self.state = self._pin(self.state)
 
     def retire(self, slot: int, *, scrub: bool = False) -> Request:
         """Free a row: clear its caches (GO scores to -inf) and return the
@@ -415,9 +481,14 @@ class SlotPool:
             "k": np.asarray(self.state["k_pages"][:, ids]),
             "v": np.asarray(self.state["v_pages"][:, ids]),
         }
+        if self.quant:
+            snap["ks"] = np.asarray(self.state["k_scales"][:, ids])
+            snap["vs"] = np.asarray(self.state["v_scales"][:, ids])
         if "go" in self.state:
             snap["go"] = jax.tree.map(lambda a: np.asarray(a[:, slot]),
                                       self.state["go"])
+        if "go_scales" in self.state:
+            snap["go_scales"] = np.asarray(self.state["go_scales"][:, slot])
         return snap
 
     def pages_for_resume(self, snap: dict) -> int:
@@ -445,11 +516,21 @@ class SlotPool:
             self.state["k_pages"], jids, jnp.asarray(snap["k"]))
         self.state["v_pages"] = _scatter_pages(
             self.state["v_pages"], jids, jnp.asarray(snap["v"]))
+        if self.quant:
+            # int8 pages restore verbatim WITH their scales — resume is
+            # bit-identical to never evicting, same as the fp32 pool
+            self.state["k_scales"] = _scatter_pages(
+                self.state["k_scales"], jids, jnp.asarray(snap["ks"]))
+            self.state["v_scales"] = _scatter_pages(
+                self.state["v_scales"], jids, jnp.asarray(snap["vs"]))
         self.state["t"] = self.state["t"].at[slot].set(snap["t"])
         if "go" in self.state:
             self.state["go"] = jax.tree.map(
                 lambda a, r: a.at[:, slot].set(jnp.asarray(r).astype(a.dtype)),
                 self.state["go"], snap["go"])
+        if "go_scales" in self.state:
+            self.state["go_scales"] = self.state["go_scales"].at[
+                :, slot].set(jnp.asarray(snap["go_scales"]))
         self._push_block_table()
         self.state = self._pin(self.state)
         self.owner[slot] = req
@@ -490,12 +571,26 @@ class SlotPool:
                     self.state["k_pages"][:, page])
                 self.state["v_pages"] = self.state["v_pages"].at[:, new].set(
                     self.state["v_pages"][:, page])
+                if self.quant:
+                    # a forked int8 page is only meaningful WITH its scale
+                    self.state["k_scales"] = self.state["k_scales"].at[
+                        :, new].set(self.state["k_scales"][:, page])
+                    self.state["v_scales"] = self.state["v_scales"].at[
+                        :, new].set(self.state["v_scales"][:, page])
                 self.block_table[slot, idx] = new
                 self._push_block_table()
                 page = new
             off = t % self.page_size
-            self.state["k_pages"] = \
-                self.state["k_pages"].at[:, page, off].set(jnp.nan)
+            if self.quant:
+                # NaN cannot be stored in int8 pages — poison the page's
+                # SCALE instead: dequant makes the whole page NaN, which
+                # still reaches the next tick's logits for this row only.
+                # Quarantine scrubs the scale back to 0 with the page.
+                self.state["k_scales"] = \
+                    self.state["k_scales"].at[:, page].set(jnp.nan)
+            else:
+                self.state["k_pages"] = \
+                    self.state["k_pages"].at[:, page, off].set(jnp.nan)
         elif "k" in self.state:
             self.state["k"] = self.state["k"].at[:, slot, t].set(jnp.nan)
         else:
@@ -549,3 +644,28 @@ class SlotPool:
                     f"slot {slot}: block table != allocator ownership"
                 assert n >= pages_for_tokens(t, self.page_size), \
                     f"slot {slot}: {n} pages cannot back {t} positions"
+        if self.quant:
+            # scale hygiene: free pages must carry scale 0 (the
+            # rescale-on-write determinism contract — see core/quant.py),
+            # and no scale may be inf. NaN is tolerated on LIVE pages only:
+            # it is the deliberate poison_slot fault on its way to the
+            # engine's quarantine sweep.
+            live = set(self.alloc.refcounts())
+            ks = np.asarray(self.state["k_scales"])
+            vs = np.asarray(self.state["v_scales"])
+            free = sorted(set(range(1, self.num_pages)) - live)
+            for name, s in (("k_scales", ks), ("v_scales", vs)):
+                assert not np.isinf(s).any(), f"{name} has inf entries"
+                if free:
+                    fs = s[:, free]
+                    assert (fs == 0).all(), \
+                        f"{name}: freed pages carry non-zero scales " \
+                        f"(pages {free[:8]}...) — scrub_released must zero " \
+                        f"scales on every release"
+            if "go_scales" in self.state:
+                # freed slots' GO rows still flow through the masked decode
+                # math each tick (exactly like the fp32 pool's — overwritten
+                # at the next admission), so only finiteness is asserted
+                gs = np.asarray(self.state["go_scales"])
+                assert np.isfinite(gs).all(), \
+                    "go_scales has non-finite entries"

@@ -176,6 +176,79 @@ def test_chunk_kernel_gather_dense_parity():
         np.asarray(vpg[bt].reshape(1, P * PS, nkv, hd)), np.asarray(dv))
 
 
+# ----------------------------------------------------------- quantized pages
+
+def test_quantized_decode_kernel_gather_parity():
+    """int8 pages + per-page scales through attn_decode: the kernel's
+    in-kernel dequant (scales ride a scalar-prefetch BlockSpec) must track
+    the gather path's dequant-at-gather to fp32 tolerance, and both modes
+    must write the SAME int8 bytes and scales back (the rescale-on-write
+    scatter runs outside the kernel, shared by both paths)."""
+    from repro.core import quant as Q
+    cfg = _cfg(nkv=2)
+    params = ATT.attn_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    B = len(RAGGED_T)
+    x_t = jnp.asarray(rng.normal(size=(B, 1, cfg.d_model)), jnp.float32)
+    t = jnp.asarray(RAGGED_T, jnp.int32)
+    kp, vp, bt = _pools(cfg, RAGGED_T)
+    qk, ks = Q.quantize_pages(kp)
+    qv, vs = Q.quantize_pages(vp)
+
+    outg, (ckg, ksg), (cvg, vsg) = ATT.attn_decode(
+        params, x_t, (qk, ks), (qv, vs), t,
+        cfg=cfg.with_overrides(paged_attn="gather"), block_table=bt)
+    outk, (ckk, ksk), (cvk, vsk) = ATT.attn_decode(
+        params, x_t, (qk, ks), (qv, vs), t,
+        cfg=cfg.with_overrides(paged_attn="kernel"), block_table=bt)
+
+    np.testing.assert_array_equal(np.asarray(ckg), np.asarray(ckk))
+    np.testing.assert_array_equal(np.asarray(cvg), np.asarray(cvk))
+    np.testing.assert_array_equal(np.asarray(ksg), np.asarray(ksk))
+    np.testing.assert_array_equal(np.asarray(vsg), np.asarray(vsk))
+    np.testing.assert_allclose(np.asarray(outk), np.asarray(outg),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_quantized_chunk_kernel_gather_parity():
+    """Chunked prefill over int8 pages: kernel vs gather, chunk by chunk —
+    identical int8 scatter results, outputs within fp32 tolerance."""
+    from repro.core import quant as Q
+    cfg = _cfg(nkv=2)
+    params = ATT.attn_init(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(3)
+    hd = cfg.resolved_head_dim()
+    nkv = cfg.num_kv_heads
+    plen, Cs = 27, 8
+    x = jnp.asarray(rng.normal(size=(1, -(-plen // Cs) * Cs, cfg.d_model)),
+                    jnp.float32)
+    NP = P + 1
+    zero_p = jnp.zeros((NP, PS, nkv, hd), jnp.int8)
+    zero_s = jnp.zeros((NP, nkv), jnp.float32)
+    kg, vg = (zero_p, zero_s), (zero_p, zero_s)
+    kk, vk = (zero_p, zero_s), (zero_p, zero_s)
+    bt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+
+    for start in range(0, x.shape[1], Cs):
+        xc = x[:, start:start + Cs]
+        kvl = start + min(Cs, plen - start)
+        outg, kg, vg = ATT.attn_chunk(
+            params, xc, kg, vg, start,
+            cfg=cfg.with_overrides(paged_attn="gather"), kv_len=kvl,
+            block_table=bt)
+        outk, kk, vk = ATT.attn_chunk(
+            params, xc, kk, vk, start,
+            cfg=cfg.with_overrides(paged_attn="kernel"), kv_len=kvl,
+            block_table=bt)
+        np.testing.assert_allclose(np.asarray(outk), np.asarray(outg),
+                                   rtol=2e-5, atol=2e-5)
+
+    np.testing.assert_array_equal(np.asarray(kk[0]), np.asarray(kg[0]))
+    np.testing.assert_array_equal(np.asarray(kk[1]), np.asarray(kg[1]))
+    np.testing.assert_array_equal(np.asarray(vk[0]), np.asarray(vg[0]))
+    np.testing.assert_array_equal(np.asarray(vk[1]), np.asarray(vg[1]))
+
+
 # --------------------------------------------- adversarial null / stale pages
 
 @pytest.mark.parametrize("mode", ["gather", "kernel"])

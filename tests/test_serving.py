@@ -6,6 +6,8 @@ path is row-wise independent — so a request served from a busy slot pool must
 produce EXACTLY the token stream it produces running alone. These tests pin
 that, plus the slot lifecycle: mid-flight admission, retirement on
 length/EOS, slot reuse, and the per-slot state ops the engine is built on."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -28,11 +30,35 @@ def _setup(arch):
     return cfg, params
 
 
-def _static_tokens(params, cfg, prompt, gen):
+def _quant_lane() -> bool:
+    return os.environ.get("REPRO_KV_QUANT", "").strip().lower() \
+        not in ("", "0", "false", "no")
+
+
+def _quant_active(eng) -> bool:
+    return eng.cfg.kv_quant != "none"
+
+
+def _static_tokens(params, cfg, prompt, gen, max_tokens=MAX_TOKENS,
+                   **pool_kw):
     """Reference: the request alone through static-batch generate(), with the
-    same cache capacity as the pool."""
+    same cache capacity as the pool.
+
+    Under the REPRO_KV_QUANT lane the engine under test serves from int8
+    pages, whose logits sit a bounded — not zero — distance from fp32, so
+    near-tied greedy argmaxes can flip on smoke weights. The invariant these
+    tests pin is solo-vs-pooled bit-identity, so the lane reference is the
+    same request served ALONE on a 1-slot engine with the same page geometry
+    (pool_kw; kv_quant resolves identically from the env). Outside the lane
+    pool_kw is ignored and the fp32 static path pins exact equality."""
+    if _quant_lane():
+        eng = ServingEngine(params, cfg, num_slots=1, max_tokens=max_tokens,
+                            **pool_kw)
+        if _quant_active(eng):
+            rid = eng.submit(np.asarray(prompt, np.int32), gen)
+            return eng.run()[rid].tokens
     res = generate(params, cfg, jnp.asarray(prompt)[None, :], gen,
-                   max_len=MAX_TOKENS)
+                   max_len=max_tokens)
     return np.asarray(res["tokens"][0]).tolist()
 
 
@@ -140,7 +166,8 @@ def test_paged_engine_bit_identical_to_dense(arch):
     ref, _ = run(False)
     got, eng = run(True)
     assert got == ref, "paged streams diverged from dense"
-    assert got[0] == _static_tokens(params, cfg, prompts[0], gens[0])
+    assert got[0] == _static_tokens(params, cfg, prompts[0], gens[0],
+                                    paged=True, page_size=8)
     assert eng.pool.alloc.pages_in_use == 0, "pages leaked after drain"
     eng.pool.alloc.check()
     assert eng.stats()["paged"] and eng.stats()["page_size"] == 8
@@ -154,7 +181,8 @@ def test_paged_tight_budget_serializes_without_deadlock():
     rng = np.random.default_rng(9)
     prompts = [rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
                for _ in range(2)]
-    refs = [_static_tokens(params, cfg, p, 6) for p in prompts]
+    refs = [_static_tokens(params, cfg, p, 6, paged=True, page_size=8)
+            for p in prompts]
 
     # each request needs ceil((12 + 6) / 8) = 3 pages; give the pool 4
     eng = ServingEngine(params, cfg, num_slots=2, max_tokens=MAX_TOKENS,
@@ -318,8 +346,8 @@ def test_engine_pallas_backend_bit_identical():
     assert eng.stats()["moe_backend"] == "pallas"
 
     for rid, p in zip(rids, prompts):
-        ref = generate(params, cfg, jnp.asarray(p)[None, :], 4, max_len=24)
-        assert fin[rid].tokens == np.asarray(ref["tokens"][0]).tolist(), \
+        ref = _static_tokens(params, cfg, p, 4, max_tokens=24)
+        assert fin[rid].tokens == ref, \
             f"request {rid} diverged from static generate() on pallas"
 
 
@@ -443,7 +471,16 @@ def test_engine_bucketing_caps_prefill_compiles_and_streams():
 
     ref, eng_ref = run(False)
     got, eng_b = run(True)
-    assert got == ref
+    if _quant_active(eng_b):
+        # Bucket padding perturbs prefill KV rows by ~1e-4 (pinned above),
+        # which can move a page's int8 amax — bucketed and unbucketed
+        # quantized streams are boundedly divergent, not bit-equal. Pin the
+        # invariant that survives quantization: pooled == solo at the SAME
+        # bucketing.
+        for p, t in zip(prompts, got):
+            assert t == _static_tokens(params, cfg, p, 5, prompt_buckets=True)
+    else:
+        assert got == ref
     assert eng_b.stats()["prefill_lengths"] == [8, 16]    # 6 lengths -> 2
     assert len(eng_ref.stats()["prefill_lengths"]) == len(set(lens))
 
@@ -471,9 +508,25 @@ def test_chunked_prefill_matches_one_shot_dense_arch():
 
     ref, _ = run()
     got, eng = run(prefill_chunk=16)
-    got_paged, _ = run(prefill_chunk=16, paged=True, page_size=16)
-    assert got == ref, "chunked streams diverged from one-shot"
-    assert got_paged == ref, "paged+chunked streams diverged"
+    got_paged, eng_p = run(prefill_chunk=16, paged=True, page_size=16)
+    if _quant_active(eng_p):
+        # One-shot prefill quantizes each page once against its final amax;
+        # chunked prefill rescales already-written int8 rows as later chunks
+        # grow a page's amax. Both are deterministic but round differently
+        # (up to 1 LSB per rescale), so chunked-vs-one-shot is boundedly
+        # divergent, not bit-equal. Pin what stays exact under int8: the
+        # chunked stream is reproducible, and forced vs explicit paging at
+        # the same geometry cannot change it.
+        got_paged2, _ = run(prefill_chunk=16, paged=True, page_size=16)
+        assert got_paged == got_paged2, \
+            "chunked quantized streams not deterministic"
+        if _quant_active(eng):
+            assert got == got_paged, "forced paging changed the chunked stream"
+        else:
+            assert got == ref, "chunked streams diverged from one-shot"
+    else:
+        assert got == ref, "chunked streams diverged from one-shot"
+        assert got_paged == ref, "paged+chunked streams diverged"
     assert eng.chunk_ticks == 4              # 30 -> 2 chunks, 25 -> 2 chunks
     assert ref[0] == _static_tokens(params, cfg, prompts[0], 6)
 
@@ -612,7 +665,8 @@ def test_cancel_mid_chunk_prefill_frees_claimed_pages():
     assert eng.finished[r0].status is RequestStatus.CANCELLED
     r1 = eng.submit(p1, 6)
     fin = eng.run()
-    assert fin[r1].tokens == _static_tokens(params, cfg, p1, 6)
+    assert fin[r1].tokens == _static_tokens(params, cfg, p1, 6,
+                                            paged=True, page_size=8)
 
 
 def test_queue_full_is_typed_and_counted():
@@ -680,7 +734,8 @@ def test_page_pressure_preemption_resumes_bit_identical(arch):
     for rid, p, g in [(r_lo[0], lo[0], 24), (r_lo[1], lo[1], 24),
                       (r_hi, hi, 8)]:
         assert fin[rid].status is RequestStatus.DONE
-        assert fin[rid].tokens == _static_tokens(params, cfg, p, g), \
+        assert fin[rid].tokens == _static_tokens(params, cfg, p, g,
+                                                 paged=True, page_size=8), \
             f"request {rid} diverged after preemption churn"
     assert any(fin[r].preemptions >= 1 for r in r_lo)
     if eng.chaos is None:   # deterministic outside the env-chaos lane
@@ -701,8 +756,10 @@ def test_nan_poison_quarantines_one_slot_not_its_cohabitants(paged):
     p0, p1 = (rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
               for _ in range(2))
     kw = dict(num_slots=2, max_tokens=MAX_TOKENS)
+    gkw = {}                                  # ref geometry under quant lane
     if paged:
         kw.update(paged=True, page_size=8)
+        gkw = dict(paged=True, page_size=8)
     eng = ServingEngine(params, cfg, **kw)
     r0 = eng.submit(p0, 16)
     r1 = eng.submit(p1, 16)
@@ -717,10 +774,10 @@ def test_nan_poison_quarantines_one_slot_not_its_cohabitants(paged):
     fin = eng.run()
     assert fin[r0].status is RequestStatus.FAILED
     assert fin[r0].fail_reason == "non-finite logits"
-    ref0 = _static_tokens(params, cfg, p0, 16)
+    ref0 = _static_tokens(params, cfg, p0, 16, **gkw)
     assert 4 <= len(fin[r0].tokens) < 16
     assert fin[r0].tokens == ref0[:len(fin[r0].tokens)]
-    ref1 = _static_tokens(params, cfg, p1, 16)
+    ref1 = _static_tokens(params, cfg, p1, 16, **gkw)
     assert fin[r1].status is RequestStatus.DONE and fin[r1].tokens == ref1
     assert not eng.pool.any_active()
     assert eng.stats()["statuses"] == {"DONE": 1, "FAILED": 1}
